@@ -1,0 +1,46 @@
+"""Shared benchmark harness.
+
+Each fig*.py exposes ``run(full=False) -> list[(name, derived_dict)]``;
+``benchmarks.run`` times each and prints ``name,us_per_call,derived`` CSV
+(the derived column carries the paper-comparable quantities).
+
+Default sizes are CPU-friendly (24x24 = 576 Monte-Carlo trials/point);
+``--full`` restores the paper's 100x100 = 10,000.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+TRIALS_FAST = 24
+TRIALS_FULL = 100
+
+
+def n_samples(full: bool) -> int:
+    return TRIALS_FULL if full else TRIALS_FAST
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def emit(rows: List[Tuple[str, float, Dict]]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{json.dumps(derived, default=float)}")
+
+
+def tr_sweep(n_ch: int = 8, spacing: float = 1.12) -> np.ndarray:
+    """Paper default TR sweep: 0.25*gS .. FSR (Table I note 1)."""
+    return np.linspace(0.25 * spacing, n_ch * spacing, 12).astype(np.float32)
+
+
+def rlv_sweep(spacing: float = 1.12) -> np.ndarray:
+    """sigma_rLV sweep: 0.25x .. 8x grid spacing (paper §II-C)."""
+    return np.array(
+        [0.25, 0.5, 1.0, 2.0, 3.0, 4.0, 6.0, 8.0], dtype=np.float32
+    ) * spacing

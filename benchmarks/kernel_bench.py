@@ -1,0 +1,76 @@
+"""Pallas-kernel micro-benchmark: jnp path timings (the CPU-executable
+production path) + interpret-mode parity check.  On-TPU wall-times are not
+measurable in this container; the roofline for the kernels comes from the
+BlockSpec VMEM analysis in kernels/*.py docstrings."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ArbitrationConfig, make_units
+from repro.core.matching import adjacency_bitmask
+from repro.core.reach import reach_matrix
+from repro.core.sampling import instantiate
+from repro.kernels import ops
+
+from .common import n_samples
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0) / reps * 1e6
+
+
+def run(full: bool = False):
+    n = n_samples(full)
+    cfg = ArbitrationConfig()
+    units = make_units(cfg, seed=12, n_laser=n, n_ring=n)
+    sys = instantiate(cfg, units)
+    s = tuple(int(v) for v in cfg.s)
+    rows = []
+
+    (ltd, ltc), us = _time(
+        ops.feasibility, sys.laser, sys.ring, sys.fsr, sys.tr_unit,
+        s=s, backend="jnp",
+    )
+    rows.append(
+        ("kernel/feasibility_jnp",
+         {"trials": sys.n_trials, "us_per_call": round(us),
+          "ns_per_trial": round(us * 1e3 / sys.n_trials, 1)})
+    )
+
+    adj = adjacency_bitmask(reach_matrix(sys, 4.0))
+    (_, ok), us = _time(ops.perfect_matching, adj, backend="jnp")
+    rows.append(
+        ("kernel/bitmask_match_jnp",
+         {"trials": sys.n_trials, "us_per_call": round(us),
+          "match_rate": round(float(np.mean(np.asarray(ok))), 3)})
+    )
+
+    tr = 5.0 * sys.tr_unit
+    _, us = _time(ops.build_tables, sys.laser, sys.ring, sys.fsr, tr,
+                  max_alias=4, backend="jnp")
+    rows.append(
+        ("kernel/table_build_jnp",
+         {"trials": sys.n_trials, "us_per_call": round(us)})
+    )
+
+    # interpret-mode parity on a 128-trial lane block (correctness proof)
+    sub = type(sys)(*[a[:128] for a in sys])
+    l1, c1 = ops.feasibility(sub.laser, sub.ring, sub.fsr, sub.tr_unit, s=s,
+                             backend="interpret")
+    l2, c2 = ops.feasibility(sub.laser, sub.ring, sub.fsr, sub.tr_unit, s=s,
+                             backend="jnp")
+    parity = bool(
+        np.allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+        and np.allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    )
+    rows.append(("kernel/interpret_parity", {"pass": parity}))
+    return rows

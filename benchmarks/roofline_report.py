@@ -1,0 +1,36 @@
+"""Roofline summary over the dry-run artifacts (experiments/dryrun/*.json):
+the per-(arch x shape x mesh) three-term table of EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run(full: bool = False):
+    rows = []
+    for f in sorted(glob.glob(str(DRYRUN_DIR / "*.json"))):
+        r = json.load(open(f))
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] != "ok":
+            rows.append((name, {"status": r["status"]}))
+            continue
+        rf = r["roofline"]
+        rows.append(
+            (
+                name,
+                {
+                    "compute_s": round(rf["compute_s"], 5),
+                    "memory_s": round(rf["memory_s"], 5),
+                    "collective_s": round(rf["collective_s"], 5),
+                    "dominant": rf["dominant"],
+                    "roofline_fraction": round(rf["roofline_fraction"], 5),
+                    "useful_flops_ratio": round(rf["useful_flops_ratio"], 4),
+                },
+            )
+        )
+    if not rows:
+        rows.append(("roofline/missing", {"hint": "run python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun"}))
+    return rows

@@ -1,0 +1,57 @@
+"""Benchmark driver: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (derived = paper-comparable values)."""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-size Monte Carlo (100x100 trials)")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    from . import (
+        beyond_lta,
+        fig4_afp_shmoo,
+        fig5_min_tuning_range,
+        fig6_ltd_grid_offset,
+        fig7_sensitivity,
+        fig8_fsr_design,
+        fig14_cafp_schemes,
+        fig15_seq_breakdown,
+        fig16_high_variation,
+        kernel_bench,
+        roofline_report,
+    )
+
+    modules = [
+        fig4_afp_shmoo,
+        fig5_min_tuning_range,
+        fig6_ltd_grid_offset,
+        fig7_sensitivity,
+        fig8_fsr_design,
+        fig14_cafp_schemes,
+        fig15_seq_breakdown,
+        fig16_high_variation,
+        kernel_bench,
+        roofline_report,
+        beyond_lta,
+    ]
+    print("name,us_per_call,derived")
+    for mod in modules:
+        mod_name = mod.__name__.rsplit(".", 1)[-1]
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        rows = mod.run(full=args.full)
+        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        for name, derived in rows:
+            print(f"{name},{us:.0f},{json.dumps(derived, default=float)}")
+
+
+if __name__ == "__main__":
+    main()

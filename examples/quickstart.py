@@ -1,0 +1,29 @@
+"""Quickstart: wavelength arbitration in a few lines.
+
+Builds the paper's default 8-channel DWDM system (Table I), runs the
+wavelength-oblivious VT-RS/SSM arbiter against the ideal LtC model, and
+prints the robustness metrics (AFP / CAFP) across tuning ranges.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import ArbitrationConfig, evaluate_scheme, make_units
+
+cfg = ArbitrationConfig()  # wdm8 @ 200 GHz, Table I defaults
+units = make_units(cfg, seed=0, n_laser=40, n_ring=40)  # 1600 MC trials
+
+print(f"{'TR[nm]':>7s} {'AFP':>8s} {'CAFP seq':>9s} {'CAFP RS':>9s} {'CAFP VT':>9s}")
+for tr in (2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 8.96):
+    r_seq = evaluate_scheme(cfg, units, "seq", tr)
+    r_rs = evaluate_scheme(cfg, units, "rs_ssm", tr)
+    r_vt = evaluate_scheme(cfg, units, "vtrs_ssm", tr)
+    print(
+        f"{tr:7.2f} {float(r_seq.afp):8.4f} {float(r_seq.cafp):9.4f} "
+        f"{float(r_rs.cafp):9.4f} {float(r_vt.cafp):9.4f}"
+    )
+
+print(
+    "\nVT-RS/SSM tracks the ideal wavelength-aware LtC arbiter (CAFP ~ 0)\n"
+    "while sequential Lock-to-Nearest fails on most trials — paper Fig. 14."
+)

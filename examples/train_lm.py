@@ -1,0 +1,96 @@
+"""End-to-end training driver: ~100M-parameter LM on the synthetic Markov
+corpus with the full production stack — sharded params, microbatched train
+step, AdamW, checkpointing/restart, optical-fabric bring-up, straggler
+tracking.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --preset small --steps 80
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs.archs import _SMALL  # numerics preset
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed import sharding, steps
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig, dense_pattern
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~110M params: the assignment's "train ~100M model" driver
+    "base": dict(d_model=768, n_layers=12, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab=8192, seq_len=256, batch=8),
+    # CPU-quick variant for CI / smoke evidence
+    "small": dict(d_model=384, n_layers=6, n_heads=6, n_kv_heads=2,
+                  d_ff=1152, vocab=4096, seq_len=128, batch=4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", choices=PRESETS, default="base")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    cfg = ModelConfig(
+        name=f"train-lm-{args.preset}",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab=p["vocab"],
+        head_dim=64, pattern=dense_pattern(), act="swiglu",
+        q_chunk=128, kv_chunk=128, remat="full", **_SMALL,
+    )
+    from repro.models import model as M
+    print(f"model: {cfg.name}  params={M.count_params(cfg)/1e6:.1f}M")
+
+    mesh = make_host_mesh()
+    opt_cfg = adamw.AdamWConfig(lr_peak=3e-3, warmup_steps=20,
+                                decay_steps=max(args.steps, 100))
+    params_sh = sharding.param_shardings(cfg, mesh)
+    opt_sh = sharding.opt_shardings(params_sh, sharding.replicated(mesh))
+    step_fn = jax.jit(
+        steps.make_train_step(cfg, opt_cfg, n_microbatch=1),
+        donate_argnums=(0, 1),
+    )
+
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_train_")
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=max(args.steps // 3, 10),
+        ckpt_dir=ckpt_dir, log_every=10, pods=2, links_per_pod_pair=8,
+        link_failure_prob_per_step=0.02,
+    )
+    trainer = Trainer(cfg, tcfg, opt_cfg, mesh, step_fn, params_sh, opt_sh)
+
+    fabric = trainer.bringup_fabric()
+    print(
+        f"fabric: {len(fabric.links)} inter-pod DWDM links arbitrated "
+        f"(VT-RS/SSM), bandwidth fraction {fabric.bandwidth_fraction:.3f}"
+    )
+
+    data = TokenPipeline(
+        DataConfig(vocab=cfg.vocab, seq_len=p["seq_len"],
+                   global_batch=p["batch"], seed=1)
+    )
+    state = trainer.init_state()
+    print(f"starting at step {state.step} -> {tcfg.total_steps}")
+    state = trainer.fit(state, iter(data))
+    data.close()
+
+    print("\nstep   loss     gnorm    s/step")
+    for m in trainer.metrics_log:
+        print(f"{m['step']:5d} {m['loss']:8.4f} {m['grad_norm']:8.3f} {m['sec_per_step']:7.2f}")
+    first, last = trainer.metrics_log[0], trainer.metrics_log[-1]
+    print(
+        f"\nloss {first['loss']:.4f} -> {last['loss']:.4f}  "
+        f"(stragglers={trainer.straggler_events}, "
+        f"rearb_rounds={trainer.rearb_rounds}, ckpt={ckpt_dir})"
+    )
+
+
+if __name__ == "__main__":
+    main()

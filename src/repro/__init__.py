@@ -1,0 +1,7 @@
+"""repro: wavelength-arbitrated multi-pod JAX training/serving framework.
+
+Reproduction + extension of Choi & Stojanovic, "Scalable Wavelength
+Arbitration for Microring-based DWDM Transceivers".  See DESIGN.md for the
+system map and EXPERIMENTS.md for validation/roofline/perf results.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Config module for --arch internlm2-1.8b (see archs.py for source)."""
+from .archs import INTERNLM2_1_8B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,4 @@
+"""Config module for --arch internvl2-76b (see archs.py for source)."""
+from .archs import INTERNVL2_76B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,4 @@
+"""Config module for --arch jamba-v0.1-52b (see archs.py for source)."""
+from .archs import JAMBA_V01_52B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

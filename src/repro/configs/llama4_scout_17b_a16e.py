@@ -1,0 +1,4 @@
+"""Config module for --arch llama4-scout-17b-a16e (see archs.py for source)."""
+from .archs import LLAMA4_SCOUT_17B_A16E as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,4 @@
+"""Config module for --arch mamba2-130m (see archs.py for source)."""
+from .archs import MAMBA2_130M as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

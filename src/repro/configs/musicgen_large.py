@@ -1,0 +1,4 @@
+"""Config module for --arch musicgen-large (see archs.py for source)."""
+from .archs import MUSICGEN_LARGE as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

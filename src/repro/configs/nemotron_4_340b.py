@@ -1,0 +1,4 @@
+"""Config module for --arch nemotron-4-340b (see archs.py for source)."""
+from .archs import NEMOTRON_4_340B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

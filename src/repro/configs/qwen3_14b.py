@@ -1,0 +1,4 @@
+"""Config module for --arch qwen3-14b (see archs.py for source)."""
+from .archs import QWEN3_14B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,4 @@
+"""Config module for --arch qwen3-moe-235b-a22b (see archs.py for source)."""
+from .archs import QWEN3_MOE_235B_A22B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

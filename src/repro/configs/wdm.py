@@ -1,0 +1,14 @@
+"""The paper's own DWDM system configurations (Table I / Fig. 5)."""
+from repro.core.grid import ArbitrationConfig, wdm_config
+
+WDM8_G200 = wdm_config(n_ch=8, ghz=200)     # paper default (Table I)
+WDM8_G400 = wdm_config(n_ch=8, ghz=400)
+WDM16_G200 = wdm_config(n_ch=16, ghz=200)
+WDM16_G400 = wdm_config(n_ch=16, ghz=400)
+
+WDM_CONFIGS = {
+    "wdm8-g200": WDM8_G200,
+    "wdm8-g400": WDM8_G400,
+    "wdm16-g200": WDM16_G200,
+    "wdm16-g400": WDM16_G400,
+}

@@ -1,0 +1,4 @@
+"""Config module for --arch yi-34b (see archs.py for source)."""
+from .archs import YI_34B as CONFIG, smoke_variant
+
+SMOKE = smoke_variant(CONFIG)

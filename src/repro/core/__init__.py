@@ -1,0 +1,33 @@
+"""Core wavelength-arbitration library (the paper's contribution).
+
+Public API re-exports; see DESIGN.md §2 for the layer map.
+"""
+from .grid import (  # noqa: F401
+    POLICIES,
+    ArbitrationConfig,
+    DWDMGrid,
+    VariationModel,
+    natural_order,
+    permuted_order,
+    wdm_config,
+)
+from .sampling import (  # noqa: F401
+    SystemBatch,
+    UnitSamples,
+    draw_unit_samples,
+    instantiate,
+    sample_systems,
+)
+from .reach import reach_matrix, scaled_residual, tuning_residual  # noqa: F401
+from .api import (  # noqa: F401
+    SCHEMES,
+    EvalResult,
+    evaluate_policy,
+    evaluate_scheme,
+    make_units,
+    oblivious_arbitrate,
+    policy_min_tr,
+    shmoo,
+)
+from .outcomes import Outcome, classify  # noqa: F401
+from .ssm import Assignment  # noqa: F401

@@ -1,0 +1,181 @@
+"""High-level arbitration API: the entry points used by benchmarks, the
+optics runtime and the examples.
+
+All heavy functions are jitted with the (hashable, frozen) ArbitrationConfig
+static; sigma values and tuning ranges are traced scalars so parameter sweeps
+reuse one compilation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ideal, metrics
+from .grid import ArbitrationConfig
+from .outcomes import Outcome, classify
+from .relation import chain_spec, relation_search
+from .sampling import SystemBatch, UnitSamples, draw_unit_samples, instantiate
+from .lta_retry import sequential_retry
+from .search_table import build_search_tables
+from .sequential import sequential_tuning
+from .ssm import Assignment, single_step_matching
+
+SCHEMES = ("seq", "rs_ssm", "vtrs_ssm", "seq_retry")
+SCHEME_POLICY = {"seq": "ltc", "rs_ssm": "ltc", "vtrs_ssm": "ltc",
+                 "seq_retry": "lta"}
+
+
+def oblivious_arbitrate(
+    cfg: ArbitrationConfig, sys: SystemBatch, tr_mean, scheme: str
+) -> Assignment:
+    """Run a wavelength-oblivious arbitration scheme on a system batch."""
+    tables = build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    spec = chain_spec(cfg.s)
+    if scheme == "seq":
+        return sequential_tuning(tables, spec)
+    if scheme == "rs_ssm":
+        ri = relation_search(tables, spec, variation_tolerant=False)
+        return single_step_matching(tables, ri, spec)
+    if scheme == "vtrs_ssm":
+        ri = relation_search(tables, spec, variation_tolerant=True)
+        return single_step_matching(tables, ri, spec)
+    if scheme == "seq_retry":   # beyond-paper oblivious LtA (§V-E future work)
+        return sequential_retry(tables)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+class EvalResult(NamedTuple):
+    afp: jax.Array          # policy-level failure probability (ideal LtC)
+    cafp: jax.Array         # conditional algorithmic failure (Eq. 6)
+    lock_err: jax.Array     # CAFP portion from zero/dup lock errors
+    order_err: jax.Array    # CAFP portion from lane-order errors
+    alg_success: jax.Array  # (T,) bool
+    ideal_ok: jax.Array     # (T,) bool
+
+
+@partial(jax.jit, static_argnames=("cfg", "scheme"))
+def evaluate_scheme(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    scheme: str,
+    tr_mean,
+    sigma_rlv=None,
+    sigma_fsr_frac=None,
+    sigma_tr_frac=None,
+    sigma_go=None,
+    sigma_llv_frac=None,
+) -> EvalResult:
+    """Instantiate systems, run the scheme, and score CAFP vs ideal LtC."""
+    sys = instantiate(
+        cfg,
+        units,
+        sigma_rlv=sigma_rlv,
+        sigma_fsr_frac=sigma_fsr_frac,
+        sigma_tr_frac=sigma_tr_frac,
+        sigma_go=sigma_go,
+        sigma_llv_frac=sigma_llv_frac,
+    )
+    s = jnp.asarray(cfg.s)
+    policy = SCHEME_POLICY[scheme]
+    if policy == "lta":
+        ideal_ok = ideal.lta_min_tr(sys) <= tr_mean
+    else:
+        ideal_ok = ideal.ltc_min_tr(sys, s) <= tr_mean
+    assign = oblivious_arbitrate(cfg, sys, tr_mean, scheme)
+    out = classify(assign, s, policy=policy)
+    lock = (out.zero_lock | out.dup_lock) & ideal_ok
+    order = out.order_err & ideal_ok
+    return EvalResult(
+        afp=metrics.afp(ideal_ok),
+        cafp=metrics.cafp(out.success, ideal_ok),
+        lock_err=jnp.mean(lock.astype(jnp.float32)),
+        order_err=jnp.mean(order.astype(jnp.float32)),
+        alg_success=out.success,
+        ideal_ok=ideal_ok,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "policy"))
+def evaluate_policy(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    policy: str,
+    tr_mean,
+    sigma_rlv=None,
+    sigma_go=None,
+    sigma_llv_frac=None,
+    sigma_fsr_frac=None,
+    sigma_tr_frac=None,
+    fsr_mean=None,
+):
+    """Ideal-model policy evaluation: AFP at a given mean tuning range."""
+    sys = instantiate(
+        cfg,
+        units,
+        sigma_rlv=sigma_rlv,
+        sigma_go=sigma_go,
+        sigma_llv_frac=sigma_llv_frac,
+        sigma_fsr_frac=sigma_fsr_frac,
+        sigma_tr_frac=sigma_tr_frac,
+        fsr_mean=fsr_mean,
+    )
+    ok = ideal.success(sys, policy, jnp.asarray(cfg.s), tr_mean)
+    return metrics.afp(ok)
+
+
+@partial(jax.jit, static_argnames=("cfg", "policy"))
+def policy_min_tr(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    policy: str,
+    sigma_rlv=None,
+    sigma_go=None,
+    sigma_llv_frac=None,
+    sigma_fsr_frac=None,
+    sigma_tr_frac=None,
+    fsr_mean=None,
+):
+    """Minimum mean TR for complete arbitration success over the batch."""
+    sys = instantiate(
+        cfg,
+        units,
+        sigma_rlv=sigma_rlv,
+        sigma_go=sigma_go,
+        sigma_llv_frac=sigma_llv_frac,
+        sigma_fsr_frac=sigma_fsr_frac,
+        sigma_tr_frac=sigma_tr_frac,
+        fsr_mean=fsr_mean,
+    )
+    per_trial = ideal.min_tr(sys, policy, jnp.asarray(cfg.s))
+    return metrics.min_tr_for_complete_success(per_trial)
+
+
+def make_units(cfg: ArbitrationConfig, seed: int, n_laser: int, n_ring: int) -> UnitSamples:
+    return draw_unit_samples(jax.random.key(seed), cfg.grid.n_ch, n_laser, n_ring)
+
+
+def shmoo(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    sigma_rlv_values: np.ndarray,
+    tr_values: np.ndarray,
+    *,
+    policy: str | None = None,
+    scheme: str | None = None,
+) -> np.ndarray:
+    """AFP (policy) or CAFP (scheme) over a sigma_rLV x TR grid — Fig. 4/14."""
+    assert (policy is None) != (scheme is None)
+    rows = []
+    for srlv in sigma_rlv_values:
+        row = []
+        for tr in tr_values:
+            if policy is not None:
+                row.append(evaluate_policy(cfg, units, policy, tr, sigma_rlv=srlv))
+            else:
+                row.append(evaluate_scheme(cfg, units, scheme, tr, sigma_rlv=srlv).cafp)
+        rows.append(jnp.stack(row))
+    return np.asarray(jnp.stack(rows))

@@ -1,0 +1,72 @@
+"""Ideal, wavelength-aware arbitration models (paper §III-A).
+
+These evaluate the *policy* layer: given full wavelength knowledge, can the
+system be arbitrated under LtD / LtC / LtA?  Used for AFP and as the
+conditioning event of CAFP.  Each policy also exposes a per-trial *minimum
+mean tuning range* — the smallest TR mean achieving success — from which the
+paper's Fig. 5-8 "minimum tuning range" curves are direct max-reductions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matching import bottleneck_matching_threshold, has_perfect_matching
+from .reach import reach_matrix, scaled_residual
+from .sampling import SystemBatch
+
+
+def _gather_order(res: jax.Array, s: jax.Array, shift: jax.Array | int) -> jax.Array:
+    """res[t, i, (s_i + shift) % N] for each ring i -> (T, N)."""
+    n = res.shape[-1]
+    idx = (jnp.asarray(s) + shift) % n
+    return res[:, jnp.arange(n), idx]
+
+
+def ltd_min_tr(sys: SystemBatch, s: jax.Array) -> jax.Array:
+    """(T,) minimum mean TR for Lock-to-Deterministic success."""
+    res = scaled_residual(sys)
+    return _gather_order(res, s, 0).max(axis=-1)
+
+
+def ltc_min_tr(sys: SystemBatch, s: jax.Array) -> jax.Array:
+    """(T,) minimum mean TR for Lock-to-Cyclic success (best cyclic shift)."""
+    res = scaled_residual(sys)
+    n = res.shape[-1]
+    per_shift = jax.vmap(lambda c: _gather_order(res, s, c).max(axis=-1))(jnp.arange(n))
+    return per_shift.min(axis=0)
+
+
+def ltc_best_shift(sys: SystemBatch, s: jax.Array) -> jax.Array:
+    """(T,) argmin cyclic shift c — the wavelength-aware LtC assignment."""
+    res = scaled_residual(sys)
+    n = res.shape[-1]
+    per_shift = jax.vmap(lambda c: _gather_order(res, s, c).max(axis=-1))(jnp.arange(n))
+    return jnp.argmin(per_shift, axis=0).astype(jnp.int32)
+
+
+def lta_min_tr(sys: SystemBatch) -> jax.Array:
+    """(T,) minimum mean TR for Lock-to-Any success (bottleneck matching)."""
+    return bottleneck_matching_threshold(scaled_residual(sys))
+
+
+def success(sys: SystemBatch, policy: str, s: jax.Array, tr_mean: float) -> jax.Array:
+    """(T,) bool ideal arbitration success at the given mean tuning range."""
+    if policy == "ltd":
+        return ltd_min_tr(sys, s) <= tr_mean
+    if policy == "ltc":
+        return ltc_min_tr(sys, s) <= tr_mean
+    if policy == "lta":
+        return has_perfect_matching(reach_matrix(sys, tr_mean))
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+def min_tr(sys: SystemBatch, policy: str, s: jax.Array) -> jax.Array:
+    """(T,) per-trial minimum mean tuning range for the policy."""
+    if policy == "ltd":
+        return ltd_min_tr(sys, s)
+    if policy == "ltc":
+        return ltc_min_tr(sys, s)
+    if policy == "lta":
+        return lta_min_tr(sys)
+    raise ValueError(f"unknown policy {policy!r}")

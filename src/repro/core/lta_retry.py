@@ -1,0 +1,151 @@
+"""Beyond-paper: a wavelength-oblivious Lock-to-Any implementation.
+
+The paper implements only the LtC policy and leaves LtA algorithms as
+future work (§V-E: "the algorithm implementations of the LtD and LtA
+policies are left for future exploration").  We contribute
+**sequential tuning with conflict retry (SEQ-R)**: the natural oblivious
+LtA arbiter —
+
+  round 0: every ring locks its nearest visible peak (Lock-to-Nearest),
+           in physical order (upstream precedence is the arbiter);
+  round r: every ring whose line was captured by an upstream ring (its
+           lock monitor reads no power — an observable event, no
+           wavelength knowledge needed) re-runs its wavelength search
+           against the now-masked bus and locks its nearest remaining
+           peak.  Repeat up to R rounds.
+
+Termination/soundness: a displaced ring only moves red-ward (its previous
+peak is gone for it), so the process is monotone; R = N_ch rounds suffice.
+No spectral-ordering is enforced — exactly the LtA policy.  Evaluated as
+CAFP against the ideal LtA arbiter (perfect matching), the same way the
+paper scores its LtC algorithms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .search_table import SearchTables
+from .ssm import Assignment
+
+
+def sequential_retry(tables: SearchTables, n_rounds: int | None = None,
+                     constrained_first: bool = True) -> Assignment:
+    """Oblivious LtA arbitration.
+
+    Lock ORDER is a controller choice; by default rings lock
+    most-constrained-first (fewest search-table peaks — a locally
+    observable quantity, so the arbiter stays wavelength-oblivious).
+    VISIBILITY is physical: a searcher sees every line except those
+    captured by locked rings physically upstream of it; a ring whose line
+    is later stolen upstream observes lost power and re-searches.
+    """
+    T, n, E = tables.wl.shape
+    rounds = n if n_rounds is None else n_rounds
+    rows = jnp.arange(T)
+    if constrained_first:
+        order = jnp.argsort(tables.n_valid, axis=1).astype(jnp.int32)  # (T, n)
+    else:
+        order = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (T, n))
+
+    def lock_pass(lock_wl):
+        """One sweep in lock order; per-trial ring selection via gather."""
+        new_lock = lock_wl
+        for rank in range(n):
+            ring = order[:, rank]                           # (T,) ring index
+            # lines captured by locked rings physically upstream of `ring`
+            pos_mask = jnp.arange(n)[None, :] < ring[:, None]   # (T, n)
+            claimed = jnp.where(pos_mask & (new_lock >= 0), new_lock, -1)
+            onehot = jax.nn.one_hot(jnp.clip(claimed, 0, n - 1), n, dtype=bool)
+            taken = jnp.any(onehot & (claimed >= 0)[..., None], axis=1)
+            wl_row = tables.wl[rows, ring, :]               # (T, E)
+            vis = (wl_row >= 0) & ~jnp.take_along_axis(
+                jnp.pad(taken, ((0, 0), (0, 1))),
+                jnp.clip(wl_row, 0, n), axis=1,
+            )
+            first = jnp.argmax(vis, axis=1).astype(jnp.int32)
+            found = vis.any(axis=1)
+            k = jnp.where(found, wl_row[rows, jnp.clip(first, 0, E - 1)], -1)
+            # keep an existing non-conflicting lock (stability): only move
+            # if the current line is now upstream-claimed or none held
+            cur = new_lock[rows, ring]
+            cur_ok = (cur >= 0) & ~jnp.take_along_axis(
+                jnp.pad(taken, ((0, 0), (0, 1))),
+                jnp.clip(cur, 0, n)[:, None], axis=1,
+            )[:, 0]
+            new_lock = new_lock.at[rows, ring].set(jnp.where(cur_ok, cur, k))
+        return new_lock
+
+    def taken_mask(lock_wl, upto):
+        """(T, n_lines) lines claimed by locked rings with index < upto."""
+        pos = jnp.arange(n)[None, :] < upto[:, None]
+        claimed = jnp.where(pos & (lock_wl >= 0), lock_wl, -1)
+        onehot = jax.nn.one_hot(jnp.clip(claimed, 0, n - 1), n, dtype=bool)
+        return jnp.any(onehot & (claimed >= 0)[..., None], axis=1)
+
+    def augment_pass(lock_wl):
+        """Depth-1 oblivious augmenting: a starved ring R probes upstream
+        donors X one at a time (unlock X -> R re-searches; an appearing
+        peak identifies X as holding a line R needs); X moves to its own
+        next visible line and R takes the freed one.  Every primitive is a
+        wavelength search or lock — the paper's unit instructions."""
+        new_lock = lock_wl
+        for R in range(n):
+            starved = new_lock[:, R] < 0
+            wl_R = tables.wl[:, R, :]
+            for X in range(R):  # upstream donors only
+                lx = new_lock[:, X]
+                # does X hold a line R could use?
+                holds_useful = (lx[:, None] == wl_R).any(axis=1) & (lx >= 0)
+                # can X relock elsewhere? (visible to X, excluding its own)
+                taken_x = taken_mask(new_lock, jnp.full((T,), X, jnp.int32))
+                wl_X = tables.wl[:, X, :]
+                vis_x = (
+                    (wl_X >= 0)
+                    & ~jnp.take_along_axis(
+                        jnp.pad(taken_x, ((0, 0), (0, 1))),
+                        jnp.clip(wl_X, 0, n), axis=1,
+                    )
+                    & (wl_X != lx[:, None])
+                )
+                alt_e = jnp.argmax(vis_x, axis=1)
+                has_alt = vis_x.any(axis=1)
+                # R must actually see the freed line (nothing else upstream
+                # of R claims it)
+                taken_r = taken_mask(
+                    new_lock.at[rows, X].set(-1), jnp.full((T,), R, jnp.int32)
+                )
+                freed_visible = ~jnp.take_along_axis(
+                    jnp.pad(taken_r, ((0, 0), (0, 1))),
+                    jnp.clip(lx, 0, n)[:, None], axis=1,
+                )[:, 0]
+                do = starved & holds_useful & has_alt & freed_visible
+                alt_line = wl_X[rows, jnp.clip(alt_e, 0, E - 1)]
+                new_lock = new_lock.at[:, X].set(
+                    jnp.where(do, alt_line, new_lock[:, X])
+                )
+                new_lock = new_lock.at[:, R].set(
+                    jnp.where(do, lx, new_lock[:, R])
+                )
+                starved = starved & ~do
+        return new_lock
+
+    lock = jnp.full((T, n), -1, jnp.int32)
+    for _ in range(rounds):
+        lock = lock_pass(lock)
+    for _ in range(2):          # augmenting + cleanup sweeps
+        lock = augment_pass(lock)
+        lock = lock_pass(lock)
+
+    # resolve entries/deltas for the final locks (nearest alias of the line)
+    hit = tables.wl == lock[:, :, None]
+    entry = jnp.where(hit.any(-1), jnp.argmax(hit, -1).astype(jnp.int32), -1)
+    e_safe = jnp.clip(entry, 0, E - 1)
+    delta = jnp.where(
+        entry >= 0,
+        jnp.take_along_axis(
+            tables.delta, e_safe[..., None], axis=-1
+        )[..., 0],
+        jnp.inf,
+    )
+    return Assignment(entry=entry, wl=jnp.where(entry >= 0, lock, -1), delta=delta)

@@ -1,0 +1,151 @@
+"""Batched exact bipartite matching for the Lock-to-Any ideal arbiter.
+
+Kuhn's augmenting-path algorithm vectorized over a batch of trials using
+int32 wavelength bitmasks — fixed trip counts, no data-dependent control
+flow, so it maps cleanly onto TPU (and is mirrored by the Pallas kernel in
+``repro.kernels.bitmask_match``).
+
+For each left vertex (ring) we BFS over alternating paths:
+  frontier of wavelengths -> matched rings -> their adjacency -> ...
+recording ``parent`` (the ring from which each wavelength was first reached)
+so the augmenting path can be walked back in <= N steps.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def adjacency_bitmask(reach: jax.Array) -> jax.Array:
+    """(T, N, N) bool reach[t, ring, wl] -> (T, N) int32 per-ring wl bitmask."""
+    n = reach.shape[-1]
+    bits = (1 << jnp.arange(n, dtype=jnp.int32))[None, None, :]
+    return jnp.sum(jnp.where(reach, bits, 0), axis=-1).astype(jnp.int32)
+
+
+def _augment_one(adj: jax.Array, match_wl: jax.Array, match_ring: jax.Array, i: jax.Array):
+    """Try to augment the matching from left vertex (ring) ``i``.
+
+    adj:        (T, N) int32 — ring -> wavelength bitmask
+    match_wl:   (T, N) int32 — ring -> matched wl index, -1 if free
+    match_ring: (T, N) int32 — wl   -> matched ring index, -1 if free
+    """
+    T, N = adj.shape
+    rows = jnp.arange(T)
+
+    # --- BFS over alternating paths -------------------------------------
+    start = adj[rows, i]                                   # (T,) frontier bitmask
+    parent = jnp.where(start[:, None] >> jnp.arange(N) & 1 == 1, i, -1).astype(jnp.int32)
+    matched_mask = _matched_bitmask(match_ring)            # (T,) int32
+
+    def bfs_body(_, carry):
+        frontier, visited, parent, free_wl = carry
+        # Wavelengths in frontier that are free -> augmenting path found.
+        free_hit = frontier & ~matched_mask
+        found_now = (free_hit != 0) & (free_wl < 0)
+        free_wl = jnp.where(found_now, _lowest_bit_index(free_hit), free_wl)
+        # Expand via matched rings of (non-free) frontier wavelengths.
+        new_frontier = jnp.zeros_like(frontier)
+        new_parent = parent
+
+        def ring_body(r, inner):
+            nf, par = inner
+            # is ring r matched to some wavelength in the frontier?
+            wl_of_r = match_wl[rows, r]                    # (T,)
+            in_frontier = (wl_of_r >= 0) & ((frontier >> wl_of_r) & 1 == 1)
+            newly = jnp.where(in_frontier, adj[rows, r] & ~visited & ~nf, 0)
+            par = jnp.where((newly[:, None] >> jnp.arange(N)) & 1 == 1, r, par)
+            return nf | newly, par
+
+        new_frontier, new_parent = jax.lax.fori_loop(
+            0, N, ring_body, (new_frontier, new_parent)
+        )
+        cont = free_wl < 0
+        frontier = jnp.where(cont, new_frontier & ~visited, 0)
+        visited = visited | new_frontier
+        parent = jnp.where((free_wl < 0)[:, None], new_parent, parent)
+        return frontier, visited, parent, free_wl
+
+    free_wl0 = jnp.full((T,), -1, jnp.int32)
+    _, _, parent, free_wl = jax.lax.fori_loop(
+        0, N, bfs_body, (start, start, parent, free_wl0)
+    )
+
+    # --- walk the augmenting path back, flipping matched edges ----------
+    def walk_body(_, carry):
+        match_wl, match_ring, k, active = carry
+        k_safe = jnp.maximum(k, 0)
+        r = parent[rows, k_safe]
+        r_safe = jnp.maximum(r, 0)
+        prev = match_wl[rows, r_safe]                      # wl r was matched to
+        match_wl = match_wl.at[rows, r_safe].set(jnp.where(active, k_safe, match_wl[rows, r_safe]))
+        match_ring = match_ring.at[rows, k_safe].set(jnp.where(active, r_safe, match_ring[rows, k_safe]))
+        active = active & (r_safe != i) & (prev >= 0)
+        return match_wl, match_ring, jnp.where(active, prev, k), active
+
+    active0 = free_wl >= 0
+    match_wl, match_ring, _, _ = jax.lax.fori_loop(
+        0, N, walk_body, (match_wl, match_ring, free_wl, active0)
+    )
+    return match_wl, match_ring
+
+
+def _matched_bitmask(match_ring: jax.Array) -> jax.Array:
+    """(T, N) wl->ring matching -> (T,) bitmask of matched wavelengths."""
+    N = match_ring.shape[1]
+    bits = (1 << jnp.arange(N, dtype=jnp.int32))[None, :]
+    return jnp.sum(jnp.where(match_ring >= 0, bits, 0), axis=1).astype(jnp.int32)
+
+
+def _lowest_bit_index(x: jax.Array) -> jax.Array:
+    """Index of lowest set bit (x != 0 assumed where used)."""
+    lsb = x & -x
+    return (31 - jax.lax.clz(lsb)).astype(jnp.int32)
+
+
+@jax.jit
+def max_matching(adj: jax.Array):
+    """Run Kuhn over all left vertices.  Returns (match_wl, match_ring)."""
+    T, N = adj.shape
+    match_wl = jnp.full((T, N), -1, jnp.int32)
+    match_ring = jnp.full((T, N), -1, jnp.int32)
+
+    def body(i, carry):
+        return _augment_one(adj, *carry, i=i)
+
+    return jax.lax.fori_loop(0, N, body, (match_wl, match_ring))
+
+
+def has_perfect_matching(reach: jax.Array) -> jax.Array:
+    """(T, N, N) bool reach -> (T,) bool perfect matching existence."""
+    adj = adjacency_bitmask(reach)
+    match_wl, _ = max_matching(adj)
+    return jnp.all(match_wl >= 0, axis=1)
+
+
+def bottleneck_matching_threshold(weights: jax.Array, n_steps: int | None = None) -> jax.Array:
+    """Minimum t such that a perfect matching exists in {weights <= t}.
+
+    weights: (T, N, N) scaled residuals (ring x wl).  Binary search over the
+    sorted per-trial edge weights — the bottleneck value is always one of the
+    N^2 edge weights.  Returns (T,) float32.
+    """
+    T, N, _ = weights.shape
+    flat = weights.reshape(T, N * N)
+    cand = jnp.sort(flat, axis=1)                          # (T, N^2) ascending
+    steps = n_steps if n_steps is not None else int(math.ceil(math.log2(N * N))) + 1
+
+    lo = jnp.zeros((T,), jnp.int32)
+    hi = jnp.full((T,), N * N - 1, jnp.int32)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        thr = cand[jnp.arange(T), mid]
+        ok = has_perfect_matching(weights <= thr[:, None, None])
+        return jnp.where(ok, lo, mid + 1), jnp.where(ok, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return cand[jnp.arange(T), hi]

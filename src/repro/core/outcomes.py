@@ -1,0 +1,48 @@
+"""Arbitration outcome classification (paper Fig. 9(c)-(f)).
+
+Given a per-ring assignment, classify each trial as success or one of:
+  * zero-lock   — some ring locked nothing (Fig. 9(e))
+  * dup-lock    — two rings locked the same laser line (Fig. 9(d))
+  * order error — spectral-ordering requirement violated (Fig. 9(f))
+The classifier is wavelength-aware (it is part of the evaluator, not the
+arbiter).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .ssm import Assignment
+
+
+class Outcome(NamedTuple):
+    success: jax.Array     # (T,) bool
+    zero_lock: jax.Array   # (T,) bool
+    dup_lock: jax.Array    # (T,) bool
+    order_err: jax.Array   # (T,) bool
+
+
+def classify(assign: Assignment, s: jax.Array, policy: str = "ltc") -> Outcome:
+    wl = assign.wl                                   # (T, N)
+    T, n = wl.shape
+    zero = jnp.any(wl < 0, axis=1)
+
+    onehot = jax.nn.one_hot(jnp.clip(wl, 0, n - 1), n, dtype=jnp.int32)
+    counts = jnp.sum(onehot * (wl >= 0)[..., None], axis=1)      # (T, N) per line
+    dup = jnp.any(counts > 1, axis=1)
+
+    s = jnp.asarray(s)
+    if policy == "ltd":
+        order_ok = jnp.all(wl == s[None, :], axis=1)
+    elif policy == "ltc":
+        shift = (wl - s[None, :]) % n
+        order_ok = jnp.all(shift == shift[:, :1], axis=1)
+    elif policy == "lta":
+        order_ok = jnp.ones((T,), bool)
+    else:
+        raise ValueError(policy)
+    order_err = ~zero & ~dup & ~order_ok
+    success = ~zero & ~dup & order_ok
+    return Outcome(success=success, zero_lock=zero, dup_lock=dup, order_err=order_err)

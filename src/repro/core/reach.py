@@ -1,0 +1,32 @@
+"""Reachability in the wavelength domain (Eq. 5).
+
+A ring's thermally-tuned resonance sweeps red-ward by delta in [0, TR_i] from
+every comb line lambda_ring,i + j*FSR_i.  Laser line k is reachable iff the
+red-shift residual  (lambda_laser,k - lambda_ring,i) mod FSR_i  <= TR_i, and
+that residual is exactly the minimum tuning distance delta_{i,k}.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .sampling import SystemBatch
+
+
+def tuning_residual(sys: SystemBatch) -> jnp.ndarray:
+    """(T, N, N) residual[t, i, k] = min red-shift of ring i to laser k [nm]."""
+    d = sys.laser[:, None, :] - sys.ring[:, :, None]          # (T, ring, laser)
+    return jnp.mod(d, sys.fsr[:, :, None])
+
+
+def scaled_residual(sys: SystemBatch) -> jnp.ndarray:
+    """Residual divided by the per-ring TR multiplier.
+
+    success at mean tuning range t  <=>  scaled_residual <= t, so per-trial
+    minimum tuning ranges are direct max/min-reductions of this tensor.
+    """
+    return tuning_residual(sys) / sys.tr_unit[:, :, None]
+
+
+def reach_matrix(sys: SystemBatch, tr_mean: float) -> jnp.ndarray:
+    """(T, N, N) bool: ring i can be tuned onto laser k at the given TR mean."""
+    return scaled_residual(sys) <= jnp.float32(tr_mean)

@@ -1,0 +1,270 @@
+"""Pure-Python per-trial reference oracle for the arbitration system.
+
+Deliberately written as straightforward scalar code, independent of the
+vectorized JAX implementation, so the two can cross-validate each other in
+tests (including hypothesis property tests).  Semantics follow the paper
+(§II, §V) and are documented inline.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PHI = None  # relation-not-found sentinel
+
+
+@dataclass
+class Trial:
+    laser: np.ndarray   # (N,) ascending laser lines [nm, relative]
+    ring: np.ndarray    # (N,) ring resonances by physical index
+    fsr: np.ndarray     # (N,)
+    tr: np.ndarray      # (N,) actual per-ring tuning ranges
+
+
+def residual(trial: Trial, i: int, k: int) -> float:
+    """Minimum red-shift of ring i to reach laser line k."""
+    return float((trial.laser[k] - trial.ring[i]) % trial.fsr[i])
+
+
+def reach(trial: Trial, i: int, k: int) -> bool:
+    return residual(trial, i, k) <= trial.tr[i]
+
+
+# ----------------------------------------------------------- ideal arbiters
+def ltd_ok(trial: Trial, s: Sequence[int]) -> bool:
+    return all(reach(trial, i, s[i]) for i in range(len(s)))
+
+
+def ltc_ok(trial: Trial, s: Sequence[int]) -> bool:
+    n = len(s)
+    return any(
+        all(reach(trial, i, (s[i] + c) % n) for i in range(n)) for c in range(n)
+    )
+
+
+def lta_ok(trial: Trial) -> bool:
+    """Perfect matching existence — Kuhn's algorithm, recursive."""
+    n = len(trial.laser)
+    adj = [[k for k in range(n) if reach(trial, i, k)] for i in range(n)]
+    match_ring: List[Optional[int]] = [None] * n  # wl -> ring
+
+    def try_augment(i: int, seen: List[bool]) -> bool:
+        for k in adj[i]:
+            if not seen[k]:
+                seen[k] = True
+                if match_ring[k] is None or try_augment(match_ring[k], seen):
+                    match_ring[k] = i
+                    return True
+        return False
+
+    return all(try_augment(i, [False] * n) for i in range(n))
+
+
+def min_tr(trial: Trial, policy: str, s: Sequence[int], tr_unit: np.ndarray) -> float:
+    """Minimum mean TR for success; tr_unit = per-ring (1 + Delta_TR)."""
+    n = len(s)
+    scaled = np.array(
+        [[residual(trial, i, k) / tr_unit[i] for k in range(n)] for i in range(n)]
+    )
+    if policy == "ltd":
+        return float(max(scaled[i, s[i]] for i in range(n)))
+    if policy == "ltc":
+        return float(
+            min(
+                max(scaled[i, (s[i] + c) % n] for i in range(n))
+                for c in range(n)
+            )
+        )
+    if policy == "lta":
+        # Bottleneck assignment by brute force (tests use small N).
+        assert n <= 8, "reference LtA bottleneck is brute-force"
+        return float(
+            min(
+                max(scaled[i, p[i]] for i in range(n))
+                for p in itertools.permutations(range(n))
+            )
+        )
+    raise ValueError(policy)
+
+
+# ----------------------------------------------------------- search tables
+def search_table(
+    trial: Trial, i: int, visible: Optional[Sequence[bool]] = None
+) -> List[Tuple[float, int]]:
+    """Ascending (delta, line) peaks for ring i's wavelength sweep."""
+    out = []
+    for k in range(len(trial.laser)):
+        if visible is not None and not visible[k]:
+            continue
+        base = (trial.laser[k] - trial.ring[i]) % trial.fsr[i]
+        d = float(base)
+        while d <= trial.tr[i]:
+            out.append((d, k))
+            d += float(trial.fsr[i])
+    out.sort()
+    return out
+
+
+# ---------------------------------------------------- relation search (RS)
+def unit_relation_search(
+    trial: Trial, agg: int, vic: int, entry: int
+) -> Optional[int]:
+    """Aggressor (upstream) locks ST(agg)[entry]; victim diffs its table."""
+    st_a = search_table(trial, agg)
+    st_v = search_table(trial, vic)
+    if not (0 <= entry < len(st_a)):
+        return PHI
+    line = st_a[entry][1]
+    masked = [idx for idx, (_, k) in enumerate(st_v) if k == line]
+    if not masked:
+        return PHI
+    return masked[0] - entry
+
+
+def relation_search_pair(
+    trial: Trial, agg: int, vic: int, n_ch: int, variation_tolerant: bool
+) -> Optional[int]:
+    st_a = search_table(trial, agg)
+    ri_last = unit_relation_search(trial, agg, vic, len(st_a) - 1)
+    ri_first = unit_relation_search(trial, agg, vic, 0)
+    if ri_last is not PHI and ri_first is not PHI:
+        ri = ri_last if (ri_last - ri_first) % n_ch == 0 else PHI
+    else:
+        ri = ri_last if ri_last is not PHI else ri_first
+    if ri is PHI and variation_tolerant and len(st_a) >= 2:
+        ri = unit_relation_search(trial, agg, vic, 1)
+    return ri
+
+
+def relation_search(
+    trial: Trial, s: Sequence[int], variation_tolerant: bool = False
+) -> List[Optional[int]]:
+    """Chain-oriented relation indices, one per chain link (pos -> pos+1)."""
+    n = len(s)
+    chain = list(np.argsort(s))
+    out: List[Optional[int]] = []
+    for pos in range(n):
+        a, b = chain[pos], chain[(pos + 1) % n]
+        agg, vic = min(a, b), max(a, b)
+        ri = relation_search_pair(trial, agg, vic, n, variation_tolerant)
+        if ri is not PHI and agg != a:   # measured against chain direction
+            ri = -ri
+        out.append(ri)
+    return out
+
+
+# ------------------------------------------------ single-step matching (SSM)
+def single_step_matching(
+    trial: Trial, s: Sequence[int], ri: List[Optional[int]]
+) -> List[Optional[Tuple[float, int]]]:
+    """Returns per-physical-ring (delta, line) lock target or None.
+
+    Builds sub-chains between RI=phi cuts; head takes its first entry, tail
+    its last, intermediates follow the LAT diagonal (paper Fig. 13).
+    """
+    n = len(s)
+    chain = list(np.argsort(s))
+    tables = [search_table(trial, i) for i in range(n)]
+    cuts = [pos for pos in range(n) if ri[pos] is PHI]
+    assign_pos: List[Optional[int]] = [None] * n  # entry index per chain pos
+
+    if not cuts:
+        # Single cyclic LAT, diagonal from chain position 0 (Fig. 13(a)).
+        segments = [list(range(n))]
+        real_cut = [False]
+    else:
+        segments, real_cut = [], []
+        for ci, cpos in enumerate(cuts):
+            start = (cpos + 1) % n
+            end = cuts[(ci + 1) % len(cuts)]
+            seg = []
+            p = start
+            while True:
+                seg.append(p)
+                if p == end:
+                    break
+                p = (p + 1) % n
+            segments.append(seg)
+            real_cut.append(True)
+
+    # LAT rows are modular: a line reappears N rows apart via the adjacent
+    # FSR, so diagonals advance mod N (smallest in-table representative =
+    # bluest alias).
+    for seg, has_tail in zip(segments, real_cut):
+        acc = 0
+        diag = {}
+        for u, pos in enumerate(seg):
+            if u == 0:
+                e = 0                      # head -> first entry (if anchored)
+            else:
+                prev = seg[u - 1]
+                acc += ri[prev]            # RI along the chain link prev->pos
+                e = u + acc
+            diag[pos] = e
+        if not has_tail:
+            # Zero-phi single cycle (Fig. 13(a)): no anchor; scan cyclic
+            # offsets and take the first whose diagonal fits every table.
+            for rho0 in range(n):
+                cand = {pos: (e + rho0) % n for pos, e in diag.items()}
+                if all(cand[pos] < len(tables[chain[pos]]) for pos in seg):
+                    diag = cand
+                    break
+            else:
+                diag = {pos: e % n for pos, e in diag.items()}
+        else:
+            diag = {pos: e % n for pos, e in diag.items()}
+        for pos, e in diag.items():
+            if has_tail and pos == seg[-1]:
+                e = len(tables[chain[pos]]) - 1   # tail -> last entry
+            assign_pos[pos] = e
+
+    result: List[Optional[Tuple[float, int]]] = [None] * n
+    for pos in range(n):
+        ring_i = chain[pos]
+        e = assign_pos[pos]
+        if e is None or not (0 <= e < len(tables[ring_i])):
+            result[ring_i] = None
+        else:
+            result[ring_i] = tables[ring_i][e]
+    return result
+
+
+# ------------------------------------------------------- sequential tuning
+def sequential_tuning(
+    trial: Trial, s: Sequence[int]
+) -> List[Optional[Tuple[float, int]]]:
+    n = len(s)
+    chain = list(np.argsort(s))
+    locked: List[Optional[Tuple[float, int]]] = [None] * n
+    for pos in range(n):
+        ring_i = chain[pos]
+        taken_upstream = {
+            locked[u][1] for u in range(ring_i) if locked[u] is not None
+        }
+        visible = [k not in taken_upstream for k in range(n)]
+        st = search_table(trial, ring_i, visible=visible)
+        locked[ring_i] = st[0] if st else None
+    return locked
+
+
+# ----------------------------------------------------------- classification
+def classify(
+    locks: List[Optional[Tuple[float, int]]], s: Sequence[int], policy: str = "ltc"
+) -> str:
+    n = len(s)
+    if any(l is None for l in locks):
+        return "zero_lock"
+    lines = [l[1] for l in locks]
+    if len(set(lines)) != n:
+        return "dup_lock"
+    if policy == "ltd":
+        ok = all(lines[i] == s[i] for i in range(n))
+    elif policy == "ltc":
+        shifts = {(lines[i] - s[i]) % n for i in range(n)}
+        ok = len(shifts) == 1
+    else:
+        ok = True
+    return "success" if ok else "order_err"

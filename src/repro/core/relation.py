@@ -1,0 +1,117 @@
+"""Wavelength-oblivious Relation Search (paper §V-B, Fig. 10-11).
+
+The record phase runs N relation searches on consecutive pairs of the target
+spectral ordering s.  For the pair at chain position t:
+
+    a_t = pi[t], b_t = pi[(t+1) % N]        (pi = argsort(s))
+
+the physically-upstream ring min(a, b) is the *aggressor* (light precedence,
+§V-B) and the other the *victim*.  A unit search locks the aggressor onto one
+entry ``e`` of its table, capturing that laser line for every ring downstream;
+the victim re-runs its wavelength search and observes the first masked entry
+``m`` of its own table.  The unit relation index is RI = m - e.
+
+RS combines Lock-to-Last and Lock-to-First unit searches (footnote 8):
+  * both valid and congruent mod N  -> valid RI
+  * exactly one valid              -> that RI
+  * otherwise                       -> RI = phi  (encoded as RI_PHI)
+
+VT-RS retries with Lock-to-Second when RS yields phi (Fig. 11(c)(d)).
+
+Everything is vectorized over trials; the pair list and roles are static
+(derived from s), matching hardware where the sequence is compiled into the
+arbiter FSM.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .search_table import SearchTables
+
+RI_PHI = np.int32(-(10**6))  # sentinel: relation not found
+
+
+class ChainSpec(NamedTuple):
+    """Static per-pair metadata derived from the target ordering s."""
+
+    aggressor: np.ndarray  # (N,) physical ring index of pair aggressor
+    victim: np.ndarray     # (N,) physical ring index of pair victim
+    forward: np.ndarray    # (N,) bool: aggressor is the chain-earlier element
+    chain: np.ndarray      # (N,) pi[t] = ring at chain position t
+
+
+def chain_spec(s: np.ndarray) -> ChainSpec:
+    s = np.asarray(s)
+    n = s.shape[0]
+    pi = np.argsort(s).astype(np.int32)
+    first = pi                                  # chain position t
+    second = pi[(np.arange(n) + 1) % n]         # chain position t+1
+    aggressor = np.minimum(first, second)
+    victim = np.maximum(first, second)
+    forward = aggressor == first                # RI measured along the chain?
+    return ChainSpec(aggressor=aggressor, victim=victim, forward=forward, chain=pi)
+
+
+def _unit_relation_search(
+    tables: SearchTables, agg: int, vic: int, entry: jax.Array
+) -> jax.Array:
+    """One aggressor injection.  entry: (T,) aggressor entry index (or -1).
+
+    Returns (T,) RI = masked_victim_index - entry, or RI_PHI.
+    """
+    T = tables.delta.shape[0]
+    rows = jnp.arange(T)
+    e_ok = (entry >= 0) & (entry < tables.n_valid[:, agg])
+    e_safe = jnp.clip(entry, 0, tables.max_entries - 1)
+    line = tables.wl[rows, agg, e_safe]                   # captured laser line
+    vic_wl = tables.wl[:, vic, :]                         # (T, E)
+    hit = (vic_wl == line[:, None]) & (vic_wl >= 0)
+    masked = jnp.where(hit.any(axis=-1), jnp.argmax(hit, axis=-1), -1)
+    ri = masked.astype(jnp.int32) - entry.astype(jnp.int32)
+    return jnp.where(e_ok & (masked >= 0), ri, RI_PHI)
+
+
+def _combine(ri_a: jax.Array, ri_b: jax.Array, n_ch: int) -> jax.Array:
+    """Footnote-8 combination of two unit searches."""
+    a_ok, b_ok = ri_a != RI_PHI, ri_b != RI_PHI
+    congruent = (ri_a - ri_b) % n_ch == 0
+    both = a_ok & b_ok
+    out = jnp.where(both & congruent, ri_a, RI_PHI)
+    out = jnp.where(a_ok & ~b_ok, ri_a, out)
+    out = jnp.where(b_ok & ~a_ok, ri_b, out)
+    return out
+
+
+def relation_search(
+    tables: SearchTables, spec: ChainSpec, *, variation_tolerant: bool = False
+) -> jax.Array:
+    """Full record phase.  Returns (T, N) chain-oriented relation indices.
+
+    Output ri[t, pos]: ST(pi[pos])[e] and ST(pi[pos+1])[e + ri] refer to the
+    same laser line; RI_PHI where no relation was found.
+    """
+    n = spec.chain.shape[0]
+    T = tables.delta.shape[0]
+    out = []
+    for pos in range(n):
+        agg, vic = int(spec.aggressor[pos]), int(spec.victim[pos])
+        nv = tables.n_valid[:, agg]
+        last = nv - 1
+        first = jnp.zeros((T,), jnp.int32)
+        ri = _combine(
+            _unit_relation_search(tables, agg, vic, last),
+            _unit_relation_search(tables, agg, vic, first),
+            n,
+        )
+        if variation_tolerant:
+            second = jnp.minimum(jnp.ones((T,), jnp.int32), last)
+            ri_vt = _unit_relation_search(tables, agg, vic, second)
+            ri = jnp.where(ri == RI_PHI, ri_vt, ri)
+        # Orient along the chain: RI was measured aggressor->victim.
+        ri_chain = ri if spec.forward[pos] else jnp.where(ri == RI_PHI, RI_PHI, -ri)
+        out.append(ri_chain)
+    return jnp.stack(out, axis=1)  # (T, N)

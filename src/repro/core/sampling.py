@@ -1,0 +1,114 @@
+"""Monte-Carlo sampling of multi-wavelength lasers and microring rows.
+
+The paper's experiments cross ``n_laser`` laser samples with ``n_ring``
+microring-row samples (100 x 100 = 10,000 trials).  To support sweeping the
+variation half-ranges (sigma_*) without re-sampling, we draw *unit* uniform
+deviates in [-1, 1] once and scale them by the sigma values at
+instantiation — sample-efficient exploration exactly as the paper's
+uniform-distribution rationale intends (§II-C).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import ArbitrationConfig, DWDMGrid, VariationModel
+
+
+class UnitSamples(NamedTuple):
+    """Unit uniform deviates in [-1, 1]; scaled by sigma at instantiation."""
+
+    u_go: jax.Array    # (L, 1)  grid offset per laser sample
+    u_llv: jax.Array   # (L, N)  laser local variation
+    u_rlv: jax.Array   # (R, N)  ring local resonance variation
+    u_fsr: jax.Array   # (R, N)  FSR variation
+    u_tr: jax.Array    # (R, N)  tuning-range variation
+
+
+class SystemBatch(NamedTuple):
+    """A batch of T sampled systems, projected onto the wavelength domain.
+
+    All wavelengths relative to lambda_center.  ``tr_unit`` is the per-ring
+    tuning-range multiplier (1 + Delta_TR/TR); actual TR_i = tr_mean * tr_unit.
+    """
+
+    laser: jax.Array    # (T, N) laser wavelengths, ascending in channel index
+    ring: jax.Array     # (T, N) ring resonance wavelengths (physical index i)
+    fsr: jax.Array      # (T, N) per-ring FSR
+    tr_unit: jax.Array  # (T, N) per-ring tuning-range multiplier
+
+    @property
+    def n_trials(self) -> int:
+        return self.laser.shape[0]
+
+    @property
+    def n_ch(self) -> int:
+        return self.laser.shape[1]
+
+
+def draw_unit_samples(key: jax.Array, n_ch: int, n_laser: int, n_ring: int) -> UnitSamples:
+    ks = jax.random.split(key, 5)
+    u = lambda k, shape: jax.random.uniform(k, shape, jnp.float32, -1.0, 1.0)
+    return UnitSamples(
+        u_go=u(ks[0], (n_laser, 1)),
+        u_llv=u(ks[1], (n_laser, n_ch)),
+        u_rlv=u(ks[2], (n_ring, n_ch)),
+        u_fsr=u(ks[3], (n_ring, n_ch)),
+        u_tr=u(ks[4], (n_ring, n_ch)),
+    )
+
+
+def instantiate(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    *,
+    sigma_rlv: float | None = None,
+    sigma_go: float | None = None,
+    sigma_llv_frac: float | None = None,
+    sigma_fsr_frac: float | None = None,
+    sigma_tr_frac: float | None = None,
+    fsr_mean: float | None = None,
+) -> SystemBatch:
+    """Apply sigma scales to unit samples and cross lasers x rings (Eq. 3-4)."""
+    grid, var = cfg.grid, cfg.var
+    s_go = var.sigma_go if sigma_go is None else sigma_go
+    s_llv = (var.sigma_llv_frac if sigma_llv_frac is None else sigma_llv_frac) * grid.grid_spacing
+    s_rlv = var.sigma_rlv if sigma_rlv is None else sigma_rlv
+    s_fsr = var.sigma_fsr_frac if sigma_fsr_frac is None else sigma_fsr_frac
+    s_tr = var.sigma_tr_frac if sigma_tr_frac is None else sigma_tr_frac
+    fsr0 = grid.fsr if fsr_mean is None else fsr_mean
+
+    # Lasers: lambda_i = grid_i + Delta_gO + Delta_lLV,i           (Eq. 3)
+    laser = (
+        jnp.asarray(grid.laser_grid())[None, :]
+        + s_go * units.u_go
+        + s_llv * units.u_llv
+    )  # (L, N)
+    # Rings: lambda_i = grid(r_i) - lambda_rB + Delta_rLV,i        (Eq. 4)
+    ring = jnp.asarray(grid.ring_grid(cfg.r))[None, :] + s_rlv * units.u_rlv  # (R, N)
+    fsr = fsr0 * (1.0 + s_fsr * units.u_fsr)     # (R, N)
+    tr_unit = 1.0 + s_tr * units.u_tr            # (R, N)
+
+    L, R, N = laser.shape[0], ring.shape[0], laser.shape[1]
+    T = L * R
+    # Cross product lasers x rings -> T trials.
+    laser_t = jnp.broadcast_to(laser[:, None, :], (L, R, N)).reshape(T, N)
+    ring_t = jnp.broadcast_to(ring[None, :, :], (L, R, N)).reshape(T, N)
+    fsr_t = jnp.broadcast_to(fsr[None, :, :], (L, R, N)).reshape(T, N)
+    tr_t = jnp.broadcast_to(tr_unit[None, :, :], (L, R, N)).reshape(T, N)
+    return SystemBatch(laser=laser_t, ring=ring_t, fsr=fsr_t, tr_unit=tr_t)
+
+
+def sample_systems(
+    key: jax.Array,
+    cfg: ArbitrationConfig,
+    n_laser: int = 100,
+    n_ring: int = 100,
+    **sigma_overrides,
+) -> SystemBatch:
+    """Convenience: draw units and instantiate in one go."""
+    units = draw_unit_samples(key, cfg.grid.n_ch, n_laser, n_ring)
+    return instantiate(cfg, units, **sigma_overrides)

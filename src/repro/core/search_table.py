@@ -1,0 +1,95 @@
+"""Microring search tables (paper §V-A, Fig. 9-10).
+
+During a wavelength search the tuner sweeps delta in [0, TR_i]; a peak in
+intra-cavity power occurs whenever any comb resonance
+lambda_ring,i + j*FSR_i + delta aligns with a *visible* laser line.  The
+recorded "tuner codes" are monotone in delta, so the wavelength-domain search
+table is the ascending list of (delta, wavelength-id) peaks.
+
+The oblivious algorithms only ever use entry *indices* and masking events —
+the wavelength ids carried here are simulator-side ground truth used by the
+evaluator (outcome classification), never by the arbiter.
+
+Tables are fixed-size (MAX_E entries) with sentinel padding for batching:
+delta = +inf, wl = -1.  If TR > FSR a laser line aliases into multiple
+entries (multi-FSR, paper §V-B); MAX_E = 3*N covers TR up to ~2.5 FSR,
+beyond every sweep in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sampling import SystemBatch
+
+SENTINEL = jnp.float32(jnp.inf)
+
+
+class SearchTables(NamedTuple):
+    delta: jax.Array   # (T, N, E) ascending tuning distances; +inf padded
+    wl: jax.Array      # (T, N, E) laser line index of each peak; -1 padded
+    n_valid: jax.Array  # (T, N) number of valid entries per ring
+
+    @property
+    def max_entries(self) -> int:
+        return self.delta.shape[-1]
+
+
+def max_entries_for(n_ch: int) -> int:
+    return 3 * n_ch
+
+
+def build_search_tables(
+    sys: SystemBatch,
+    tr_mean: float,
+    *,
+    visible: jax.Array | None = None,
+    max_alias: int = 8,
+    max_entries: int | None = None,
+) -> SearchTables:
+    """Construct per-ring search tables for a batch of trials.
+
+    visible: optional bool array of lines present on the bus — (T, N_wl)
+      (same for every ring) or (T, N_ring, N_wl) (per searching ring, for
+      position-dependent capture).  None = all lines visible.  Used for
+      re-searches while other rings hold locks.
+    """
+    T, N = sys.laser.shape
+    E = max_entries_for(N) if max_entries is None else max_entries
+    j = jnp.arange(-max_alias, max_alias + 1, dtype=jnp.float32)  # (J,)
+
+    # delta[t, i, k, j] = laser_k - ring_i - j*FSR_i
+    d = sys.laser[:, None, :, None] - sys.ring[:, :, None, None] - (
+        j[None, None, None, :] * sys.fsr[:, :, None, None]
+    )  # (T, N, N, J)
+    tr = (tr_mean * sys.tr_unit)[:, :, None, None]
+    ok = (d >= 0.0) & (d <= tr)
+    if visible is not None:
+        vis = visible[:, None, :, None] if visible.ndim == 2 else visible[:, :, :, None]
+        ok = ok & vis
+
+    dflat = jnp.where(ok, d, SENTINEL).reshape(T, N, -1)
+    kflat = jnp.broadcast_to(
+        jnp.arange(N, dtype=jnp.int32)[None, None, :, None], d.shape
+    ).reshape(T, N, -1)
+
+    order = jnp.argsort(dflat, axis=-1)[..., :E]
+    delta = jnp.take_along_axis(dflat, order, axis=-1)
+    wl = jnp.where(jnp.isfinite(delta), jnp.take_along_axis(kflat, order, axis=-1), -1)
+    n_valid = jnp.sum(jnp.isfinite(delta), axis=-1).astype(jnp.int32)
+    return SearchTables(delta=delta, wl=wl, n_valid=n_valid)
+
+
+def mask_wavelength(tables: SearchTables, ring: int | jax.Array, wl_id: jax.Array) -> jax.Array:
+    """Indices of entries of ``ring``'s table whose line equals wl_id.
+
+    Returns (T,) int32 index of the *first* masked entry, or -1 if none —
+    exactly what a victim ring observes when an aggressor captures a line
+    (the victim re-runs its search and diffs against its original table).
+    """
+    wl_row = tables.wl[:, ring, :]                       # (T, E)
+    hit = wl_row == wl_id[:, None]
+    first = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    return jnp.where(hit.any(axis=-1), first, -1)

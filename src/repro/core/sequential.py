@@ -1,0 +1,53 @@
+"""Sequential Lock-to-Nearest tuning — the paper's baseline (§V-D).
+
+Rings tune one at a time in target-ordering chain order; each locks onto the
+first (nearest, smallest red-shift) peak visible in its wavelength search.
+Visibility honors light precedence: a locked ring captures its line only for
+rings physically *downstream* of it.  Under permuted orderings a ring that
+tunes later but sits upstream can therefore steal a line already held
+downstream — the dup-lock failure mode of Fig. 15; under natural ordering the
+characteristic failure is tone skipping (zero-lock).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .relation import ChainSpec
+from .search_table import SearchTables
+from .ssm import Assignment
+
+
+def sequential_tuning(tables: SearchTables, spec: ChainSpec) -> Assignment:
+    T, n, E = tables.wl.shape
+    rows = jnp.arange(T)
+    entry = jnp.full((T, n), -1, jnp.int32)
+    cap_wl = jnp.full((T, n), -1, jnp.int32)   # per-physical-ring captured line
+
+    for pos in range(n):                        # static chain order
+        ring = int(spec.chain[pos])
+        # Lines captured by locked rings physically upstream of `ring`.
+        up = cap_wl[:, :ring]                                   # (T, ring)
+        taken = jnp.zeros((T, n), bool)
+        if ring > 0:
+            onehot = jax.nn.one_hot(jnp.clip(up, 0, n - 1), n, dtype=bool)
+            taken = jnp.any(onehot & (up >= 0)[..., None], axis=1)
+        wl_row = tables.wl[:, ring, :]                          # (T, E)
+        vis = (wl_row >= 0) & ~jnp.take_along_axis(
+            jnp.pad(taken, ((0, 0), (0, 1))), jnp.clip(wl_row, 0, n), axis=1
+        )
+        # Tables are delta-ascending: first visible entry = nearest peak.
+        first = jnp.argmax(vis, axis=1).astype(jnp.int32)
+        found = vis.any(axis=1)
+        e = jnp.where(found, first, -1)
+        k = jnp.where(found, wl_row[rows, jnp.clip(first, 0, E - 1)], -1)
+        entry = entry.at[:, ring].set(e)
+        cap_wl = cap_wl.at[:, ring].set(k)
+
+    e_safe = jnp.clip(entry, 0, E - 1)
+    delta = jnp.where(
+        entry >= 0,
+        tables.delta[rows[:, None], jnp.arange(n)[None, :], e_safe],
+        jnp.inf,
+    )
+    return Assignment(entry=entry, wl=cap_wl, delta=delta)

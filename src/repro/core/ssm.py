@@ -1,0 +1,105 @@
+"""Single-Step Matching (paper §V-C, Fig. 12-13).
+
+Builds the Lock Allocation Table implicitly: within a sub-chain (rings
+between two RI=phi cuts, in target-ordering chain order), aligning search
+tables by relation indices makes entry ``e`` of chain position p sit at LAT
+row ``e + off_p`` with off_{p+1} = off_p - RI_p.  The diagonal assignment
+"head takes its first entry, every following ring takes the next row" then
+reduces to the closed form
+
+    e_p = (p - h) + sum_{q=h..p-1} RI_q        (h = sub-chain head position)
+
+with the paper's overrides: sub-chain heads take their first entry and
+sub-chain tails their last (Fig. 13(b)(c)).  With no phi at all the cycle is
+cut at the wrap link and the diagonal starts at chain position 0 (Fig. 13(a)).
+
+The phi pattern differs per trial, so segmentation is data-dependent; we
+resolve it with a doubled scan over chain positions (2N fixed steps) —
+vectorized over trials, no data-dependent shapes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .relation import RI_PHI, ChainSpec
+from .search_table import SearchTables
+
+
+class Assignment(NamedTuple):
+    """Per-physical-ring lock outcome of an oblivious arbitration."""
+
+    entry: jax.Array   # (T, N) chosen search-table entry index, -1 if none
+    wl: jax.Array      # (T, N) laser line id of the chosen entry, -1 if none
+    delta: jax.Array   # (T, N) tuning distance, +inf if none
+
+
+def single_step_matching(
+    tables: SearchTables, ri_chain: jax.Array, spec: ChainSpec
+) -> Assignment:
+    """ri_chain: (T, N) chain-oriented relation indices (RI_PHI = cut)."""
+    T, n = ri_chain.shape
+    chain = jnp.asarray(spec.chain)                       # (N,) pos -> ring
+    cut = ri_chain == RI_PHI                              # (T, N) link p->p+1 broken
+    any_cut = cut.any(axis=1)                             # (T,)
+    # Head at position p iff the incoming link (p-1 -> p) is broken; with no
+    # phi anywhere, cut the cycle at the wrap link => artificial head at 0.
+    prev_cut = jnp.roll(cut, 1, axis=1)
+    is_head = jnp.where(any_cut[:, None], prev_cut, jnp.arange(n)[None, :] == 0)
+
+    ri_safe = jnp.where(cut, 0, ri_chain)
+
+    # Doubled scan: positions 0..2N-1; state (u, acc) = (distance from head,
+    # accumulated RI since head).  Second lap fixes wrapped sub-chains.
+    def body(step, carry):
+        u, acc, e = carry
+        p = step % n
+        head = is_head[:, p]
+        pm1 = (p - 1) % n
+        u = jnp.where(head, 0, u + 1)
+        acc = jnp.where(head, 0, acc + ri_safe[:, pm1])
+        e = e.at[:, p].set(u + acc)
+        return u, acc, e
+
+    u0 = jnp.zeros((T,), jnp.int32)
+    e0 = jnp.zeros((T, n), jnp.int32)
+    _, _, e_diag = jax.lax.fori_loop(0, 2 * n, body, (u0, u0, e0))
+
+    # LAT rows are modular: a laser line reappears N rows apart through the
+    # adjacent FSR (shared resonance periodicity, §V-B), so "the next row" is
+    # taken mod N with the smallest in-table representative (bluest alias,
+    # minimal tuning power).
+    nv_chain = tables.n_valid[:, chain]                   # (T, N) by position
+
+    # Sub-chains anchored at a real phi cut: head -> first entry (e_diag = 0
+    # by construction, the §V-C adjacency argument), diagonal mod N inside.
+    e_anchored = e_diag % n
+
+    # No phi anywhere (Fig. 13(a)): the cycle imposes no anchor; the diagonal
+    # matching scans cyclic offsets rho0 and takes the first that fits every
+    # search table (an offset exists iff the ideal LtC assignment does).
+    rho = jnp.arange(n, dtype=jnp.int32)
+    e_cand = (e_diag[:, None, :] + rho[None, :, None]) % n   # (T, rho, pos)
+    feas = jnp.all(e_cand < nv_chain[:, None, :], axis=-1)   # (T, rho)
+    rho0 = jnp.argmax(feas, axis=1)                          # first feasible
+    e_free = jnp.take_along_axis(e_cand, rho0[:, None, None], axis=1)[:, 0, :]
+
+    e_pos = jnp.where(any_cut[:, None], e_anchored, e_free)
+
+    # Tail override: ring at position p with a real outgoing cut takes its
+    # LAST entry (paper Fig. 13(b)(c)).
+    e_pos = jnp.where(cut, nv_chain - 1, e_pos)
+
+    valid = (e_pos >= 0) & (e_pos < nv_chain)
+    e_pos = jnp.where(valid, e_pos, -1)
+
+    # Scatter back from chain position to physical ring index.
+    entry = jnp.full((T, n), -1, jnp.int32).at[:, chain].set(e_pos)
+    rows = jnp.arange(T)[:, None]
+    e_safe = jnp.clip(entry, 0, tables.max_entries - 1)
+    ring_idx = jnp.arange(n)[None, :]
+    wl = jnp.where(entry >= 0, tables.wl[rows, ring_idx, e_safe], -1)
+    delta = jnp.where(entry >= 0, tables.delta[rows, ring_idx, e_safe], jnp.inf)
+    return Assignment(entry=entry, wl=wl, delta=delta)

@@ -1,0 +1,175 @@
+"""Roofline-term extraction from compiled XLA artifacts (DESIGN.md §7).
+
+Sources:
+  * ``compiled.cost_analysis()``  -> per-device HLO FLOPs and bytes accessed
+  * ``compiled.as_text()``        -> post-SPMD HLO; collective ops parsed by
+    regex with ring-model wire-byte formulas per op type.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum bytes of all array shapes in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(op: str, out_bytes: int, g: int) -> float:
+    """Per-device bytes on the wire, ring algorithms."""
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g * out_bytes
+    if op == "all-gather":
+        return (g - 1) / g * out_bytes
+    if op == "reduce-scatter":
+        return (g - 1) * out_bytes          # input = g * output
+    if op == "all-to-all":
+        return (g - 1) / g * out_bytes
+    if op == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_type_ops: Dict[str, int]
+    per_type_bytes: Dict[str, float]    # per-device wire bytes
+    total_wire_bytes: float
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    ops: Dict[str, int] = {}
+    byts: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        head, _, rest = ls.partition(" = ")
+        m = re.match(r"[\w().\[\],\s]*?(\w[\w\-.]*)\(", rest)
+        if not m:
+            continue
+        opname = m.group(1)
+        base = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-start") or opname.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        out_b = _shape_bytes(rest.split(" ", 1)[0])
+        if base == "all-to-all" and out_b == 0:
+            out_b = _shape_bytes(rest)
+        g = _group_size(ls, n_devices)
+        ops[base] = ops.get(base, 0) + 1
+        byts[base] = byts.get(base, 0.0) + _wire_bytes(base, out_b, g)
+    return CollectiveStats(
+        per_type_ops=ops,
+        per_type_bytes=byts,
+        total_wire_bytes=sum(byts.values()),
+    )
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_flops_ratio: float   # MODEL_FLOPS / (HLO flops * chips)
+    step_time_lower_bound_s: float
+    roofline_fraction: float    # useful-compute time / max(term) — the score
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline(flops: float, byts: float, wire_bytes: float, n_devices: int,
+             model_flops: float) -> Roofline:
+    """All inputs per-device (post-SPMD program) except model_flops (global)."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    total_hlo = flops * n_devices
+    bound = max(terms.values())
+    useful_s = (model_flops / n_devices) / PEAK_FLOPS
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        wire_bytes_per_device=wire_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_flops_ratio=(model_flops / total_hlo) if total_hlo else 0.0,
+        step_time_lower_bound_s=bound,
+        roofline_fraction=(useful_s / bound) if bound else 0.0,
+    )
+
+
+def model_flops_estimate(cfg, cell, n_tokens: int | None = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for training;
+    2*N*D for inference (fwd only)."""
+    from repro.models.model import count_params
+
+    n_active = count_params(cfg, active_only=True)
+    if cell.kind == "train":
+        toks = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * toks
+    if cell.kind == "prefill":
+        toks = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * toks
+    toks = cell.global_batch  # one token per sequence
+    return 2.0 * n_active * toks

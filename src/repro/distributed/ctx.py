@@ -1,0 +1,77 @@
+"""Activation-sharding context: lets model code place sharding constraints
+without threading mesh objects through every layer.
+
+The step builders (or dryrun) activate axes with ``activation_axes``; model
+code calls ``constrain(x, dims)`` where dims is a tuple naming each axis of
+x as one of: "batch" (data-parallel axes), "model", None.  Outside any mesh
+context (CPU unit tests) constraints are identity.
+
+Dims whose size does not divide the named mesh axis degrade to None
+automatically, so one call site serves every architecture.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _axes():
+    return getattr(_state, "axes", None)
+
+
+def current_axes():
+    """Public view of the active activation-sharding context (or None):
+    dict(mesh=..., batch=tuple_of_axis_names, model=name_or_None)."""
+    return _axes()
+
+
+@contextlib.contextmanager
+def activation_axes(mesh, dp: Sequence[str] = ("data",), model: str = "model"):
+    """Enable constraints during tracing.  dp may include 'pod'."""
+    prev = _axes()
+    _state.axes = {
+        "mesh": mesh,
+        "batch": tuple(a for a in dp if a in mesh.axis_names),
+        "model": model if model in mesh.axis_names else None,
+    }
+    try:
+        yield
+    finally:
+        _state.axes = prev
+
+
+def _axis_size(mesh, names) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, dims: Sequence[Optional[str]]):
+    """dims: per-dimension "batch" | "model" | None."""
+    axes = _axes()
+    if axes is None or x is None:
+        return x
+    mesh = axes["mesh"]
+    spec = []
+    for size, d in zip(x.shape, dims):
+        name = axes.get(d) if d else None
+        if name and size % _axis_size(mesh, name) == 0:
+            spec.append(name)
+        else:
+            spec.append(None)
+    try:
+        sh = jax.sharding.NamedSharding(mesh, P(*spec))
+        return jax.lax.with_sharding_constraint(x, sh)
+    except Exception:
+        return x

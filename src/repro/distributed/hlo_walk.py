@@ -1,0 +1,459 @@
+"""Trip-count-aware cost extraction from optimized HLO text.
+
+``compiled.cost_analysis()`` does not multiply while-loop bodies by their
+trip counts, so scan-based models (layers, microbatches, attention chunks)
+are undercounted by orders of magnitude.  This walker parses the post-SPMD
+scheduled HLO, builds the computation call graph (while / fusion / call /
+conditional), extracts static trip counts, and accumulates:
+
+  * dot/conv FLOPs (exact shapes via per-computation symbol tables —
+    scheduled HLO prints operands without types)
+  * HBM traffic at materialization granularity (op outputs + operands in
+    non-fused computations — post-fusion boundaries)
+  * per-collective-type wire bytes (ring model)
+
+All values are per-device (the module is the SPMD-partitioned per-device
+program).  Loop bounds: jax scans bake the length into the loop condition
+as an s32[] constant (possibly behind a wrapped-compare fusion), so the
+trip count is the max s32 scalar constant in the condition computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(line: str):
+    """Procedural parse: '%name = TYPE opcode(args...), attrs'.
+
+    TYPE may be a tuple '(...)' with nested brackets and /*index=N*/ comments,
+    so regexes over a fixed charset fail; walk balanced parens instead.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        out_type = rest[: i + 1]
+        rest = rest[i + 1 :].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        out_type = rest[:sp]
+        rest = rest[sp + 1 :].lstrip()
+    par = rest.find("(")
+    if par <= 0:
+        return None
+    opcode = rest[:par]
+    if not re.fullmatch(r"[\w\-]+", opcode):
+        return None
+    args = rest[par + 1 :]
+    return name, out_type, opcode, args
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_SCALAR_S32_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_HEADER_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*(\(?[^,()]*(?:\([^()]*\))?[^,()]*)")
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes_in(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_type: str
+    args: str      # raw text after the opening paren (operands + attrs)
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    types: Dict[str, str]          # symbol -> type string
+    s32_consts: List[int]
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.startswith("HloModule"):
+            continue
+        if cur is None:
+            if stripped.endswith("{") and "->" in stripped and "(" in stripped:
+                head = stripped.split("(", 1)
+                is_entry = head[0].startswith("ENTRY")
+                name = head[0].replace("ENTRY", "").strip().lstrip("%")
+                cur = Computation(name=name, ops=[], types={}, s32_consts=[])
+                if is_entry:
+                    entry = name
+                # parameter types from the signature segment (up to '->')
+                sig = stripped[len(head[0]):].rsplit("->", 1)[0]
+                for pname, ptype in _HEADER_PARAM_RE.findall(sig):
+                    cur.types[pname] = ptype
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name_, out_type, opcode, args = parsed
+            op = Op(
+                name=name_, opcode=opcode, out_type=out_type, args=args,
+                line=stripped,
+            )
+            cur.ops.append(op)
+            cur.types[op.name] = op.out_type
+        mc = _SCALAR_S32_CONST_RE.search(stripped)
+        if mc:
+            cur.s32_consts.append(int(mc.group(1)))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _operand_names(args: str) -> List[str]:
+    """Operand symbol names: %tokens before the closing paren of the call."""
+    depth = 1
+    end = len(args)
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", args[:end])
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scan bound = s32 scalar constant in the condition computation."""
+    if cond.s32_consts:
+        return max(max(cond.s32_consts), 1)
+    return 1
+
+
+def _dot_flops(op: Op, types: Dict[str, str]) -> float:
+    out_shapes = _shapes_in(op.out_type)
+    if not out_shapes:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    opers = _operand_names(op.args)
+    if not opers:
+        return 0.0
+    lhs_type = types.get(opers[0], "")
+    lhs_shapes = _shapes_in(lhs_type)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m and m.group(1):
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(op: Op, types: Dict[str, str]) -> float:
+    out_shapes = _shapes_in(op.out_type)
+    opers = _operand_names(op.args)
+    if not out_shapes or len(opers) < 2:
+        return 0.0
+    out_elems = 1
+    for d in out_shapes[0][1]:
+        out_elems *= d
+    k_shapes = _shapes_in(types.get(opers[1], ""))
+    if not k_shapes:
+        return 0.0
+    k_elems = 1
+    for d in k_shapes[0][1][:-1]:
+        k_elems *= d
+    return 2.0 * out_elems * k_elems
+
+
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    return default
+
+
+def _wire_bytes(op: str, out_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g * out_bytes
+    if op == "all-gather":
+        return (g - 1) / g * out_bytes
+    if op == "reduce-scatter":
+        return (g - 1) * out_bytes
+    if op == "all-to-all":
+        return (g - 1) / g * out_bytes
+    if op == "collective-permute":
+        return float(out_bytes)
+    return 0.0
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    per_collective_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    per_collective_ops: Dict[str, float] = dataclasses.field(default_factory=dict)
+    while_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+    debug_items: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self):
+        d = dataclasses.asdict(self)
+        d.pop("debug_items", None)
+        return d
+
+
+def analyze(text: str, n_devices: int, debug: bool = False) -> HloCost:
+    comps, entry = parse_computations(text)
+    cost = HloCost()
+
+    _SKIP_BYTES = {
+        "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+        "after-all", "partition-id", "while", "conditional",
+    }
+
+    def _op_bytes(comp: Computation, op: Op) -> float:
+        """Effective HBM traffic of one materialized op.
+
+        dynamic-slice reads only the slice; dynamic-update-slice writes only
+        the update region (in-place).  Fusions whose parameters are consumed
+        exclusively by dynamic-slices (stacked-parameter indexing inside
+        scans) count the sliced bytes, not the full stacked operand; a
+        dynamic-update-slice ROOT counts the update, not the whole buffer.
+        """
+        if op.opcode == "dynamic-slice":
+            return 2.0 * _shape_bytes(op.out_type)
+        opers = _operand_names(op.args)
+        if op.opcode == "dynamic-update-slice":
+            upd = _shape_bytes(comp.types.get(opers[1], "")) if len(opers) > 1 else 0
+            return 2.0 * upd
+        if op.opcode == "copy" and opers:
+            # donation-artifact copies of unmodified parameters (CPU backend
+            # cannot alias donated buffers); free on the TPU target.
+            defs = {o.name: o for o in comp.ops}
+            src = opers[0]
+            for _ in range(8):  # peel bitcast/gte/copy chains
+                if src.startswith("param") or src.startswith("arg_"):
+                    return 0.0
+                d = defs.get(src)
+                if d is None or d.opcode == "parameter":
+                    return 0.0
+                if d.opcode in ("bitcast", "get-tuple-element", "copy"):
+                    srcs = _operand_names(d.args)
+                    if not srcs:
+                        break
+                    src = srcs[0]
+                else:
+                    break
+        out_b = _shape_bytes(op.out_type)
+        if op.opcode == "fusion":
+            called = None
+            for cname in _CALLS_RE.findall(op.line):
+                called = comps.get(cname)
+                break
+            if called is not None:
+                return _fusion_bytes(called, comp, opers, out_b)
+        ib = sum(_shape_bytes(comp.types.get(o, "")) for o in opers)
+        return out_b + ib
+
+    # dtype converts are free on the bf16-native TPU target (XLA CPU inserts
+    # bf16<->f32 emulation chains); bitcasts/copies/reshapes keep aliasing.
+    _TRANSPARENT = {"convert", "bitcast", "copy", "reshape"}
+
+    def _fusion_bytes(called: Computation, caller: Computation, opers, out_b):
+        """Effective traffic of a fusion: reads of params (slice-aware,
+        looking through transparent convert chains), writes of produced
+        tensors (update-region-aware for in-place dynamic-update-slice)."""
+        by_idx = {}
+        defs = {o.name: o for o in called.ops}
+        for o in called.ops:
+            if o.opcode == "parameter":
+                mi = re.match(r"\s*(\d+)", o.args)
+                if mi:
+                    by_idx[int(mi.group(1))] = o.name
+
+        def slim_read(pname) -> Optional[float]:
+            """Bytes actually read from pname if all transitive uses are
+            slices or in-place-update destinations; None => full read."""
+            total, frontier, seen = 0.0, [pname], {pname}
+            while frontier:
+                nm = frontier.pop()
+                for u in called.ops:
+                    uo = _operand_names(u.args)
+                    if nm not in uo:
+                        continue
+                    if u.opcode in _TRANSPARENT:
+                        if u.name not in seen:
+                            seen.add(u.name)
+                            frontier.append(u.name)
+                    elif u.opcode == "dynamic-slice":
+                        total += _shape_bytes(u.out_type)
+                    elif u.opcode == "dynamic-update-slice" and uo[0] == nm:
+                        pass  # aliased destination
+                    else:
+                        return None
+            return total
+
+        read = 0.0
+        for i, oname in enumerate(opers):
+            full = _shape_bytes(caller.types.get(oname, ""))
+            pname = by_idx.get(i)
+            if pname is None:
+                read += full
+                continue
+            slim = slim_read(pname)
+            read += full if slim is None else min(slim, full)
+
+        # writes: every DUS writes its update region; the root (or each
+        # non-DUS-backed tuple element, peeled through converts) adds its
+        # full output.
+        write = 0.0
+        dus_backed = set()
+        for u in called.ops:
+            if u.opcode == "dynamic-update-slice":
+                uo = _operand_names(u.args)
+                upd = _shape_bytes(called.types.get(uo[1], "")) if len(uo) > 1 else 0
+                write += upd
+                dus_backed.add(u.name)
+
+        def peel(name):
+            op = defs.get(name)
+            while op is not None and op.opcode in _TRANSPARENT:
+                o = _operand_names(op.args)
+                if not o:
+                    break
+                op = defs.get(o[0])
+            return op
+
+        root = called.ops[-1] if called.ops else None
+        if root is None:
+            write += out_b
+        elif root.opcode == "tuple":
+            for o in _operand_names(root.args):
+                p = peel(o)
+                if p is None or p.opcode != "dynamic-update-slice":
+                    write += _shape_bytes(called.types.get(o, ""))
+        else:
+            p = peel(root.name)
+            if p is None or p.opcode != "dynamic-update-slice":
+                write += out_b
+        return read + write
+
+    def visit(name: str, mult: float, count_bytes: bool):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            base = None
+            for c in COLLECTIVE_OPS:
+                if op.opcode == c or op.opcode.startswith(c + "-start"):
+                    base = c
+                    break
+            if base:
+                ob = _shape_bytes(op.out_type)
+                g = _group_size(op.line, n_devices)
+                wb = _wire_bytes(base, ob, g) * mult
+                cost.per_collective_bytes[base] = (
+                    cost.per_collective_bytes.get(base, 0.0) + wb
+                )
+                cost.per_collective_ops[base] = (
+                    cost.per_collective_ops.get(base, 0.0) + mult
+                )
+                cost.collective_wire_bytes += wb
+            if op.opcode == "dot":
+                cost.flops += _dot_flops(op, comp.types) * mult
+            elif op.opcode == "convolution":
+                cost.flops += _conv_flops(op, comp.types) * mult
+            if count_bytes and op.opcode not in _SKIP_BYTES:
+                b = _op_bytes(comp, op)
+                cost.bytes += b * mult
+                if debug and b * mult > 1e8:
+                    cost.debug_items.append(
+                        (b * mult, mult, comp.name[:48], op.opcode, op.out_type[:64])
+                    )
+
+            if op.opcode == "while":
+                m = _WHILE_RE.search(op.line)
+                if m:
+                    cond_name, body_name = m.groups()
+                    trips = (
+                        _trip_count(comps[cond_name]) if cond_name in comps else 1
+                    )
+                    cost.while_trips[body_name] = trips
+                    visit(body_name, mult * trips, count_bytes)
+            elif op.opcode in ("fusion", "call", "custom-call", "conditional"):
+                for cname in _CALLS_RE.findall(op.line):
+                    # descend for flops only: fused interiors don't touch HBM
+                    visit(cname, mult, False)
+
+    if entry:
+        visit(entry, 1.0, True)
+    return cost

@@ -1,0 +1,182 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+Scheme (DESIGN.md §6): TP over ``model`` for heads / ffn-hidden / experts /
+vocab; FSDP over ``data`` on the complementary dimension of every large
+matrix; DP gradient reduction over data (+pod) comes from pjit's handling of
+the sharded-parameter <- replicated-compute contraction.  The leading
+``n_super`` scan axis of stacked block params is never sharded.
+
+Rules are *name- and shape-driven* so every architecture family (dense, MoE,
+SSD, hybrid) resolves through one table.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.model import DecodeState, param_shapes
+
+
+def _fsdp_ok(dim: int, mesh: Mesh) -> str | None:
+    """Shard a dimension over `data` only when it divides evenly."""
+    return "data" if dim % mesh.shape["data"] == 0 else None
+
+
+def param_spec(name: str, shape, cfg: ModelConfig, mesh: Mesh, *, stacked: bool,
+               flat_fsdp: bool = False) -> P:
+    """PartitionSpec for one parameter leaf (shape excludes the scan axis).
+
+    flat_fsdp: pure FSDP over the flattened (data, model) axes, no tensor
+    parallelism — the right scheme for small models where TP all-reduces
+    dominate (§Perf, internlm2 iteration)."""
+    model_n = mesh.shape["model"]
+
+    if flat_fsdp:
+        axes = ("data", "model")
+        n_all = mesh.shape["data"] * mesh.shape["model"]
+        spec_l = [None] * len(shape)
+        # shard the largest divisible dim over the flattened axes
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if shape[i] % n_all == 0:
+                spec_l[i] = axes
+                break
+        else:
+            for i in order:  # fall back to data-only
+                if shape[i] % mesh.shape["data"] == 0:
+                    spec_l[i] = "data"
+                    break
+        if stacked:
+            spec_l = [None] + spec_l
+        return P(*spec_l)
+
+    def fsdp(dim):
+        return _fsdp_ok(dim, mesh)
+
+    if name in ("embed",):                       # (vocab, d)
+        spec = ("model" if shape[0] % model_n == 0 else None, fsdp(shape[1]))
+    elif name == "lm_head":                      # (d, vocab)
+        spec = (fsdp(shape[0]), "model" if shape[1] % model_n == 0 else None)
+    elif name in ("wq", "wk", "wv"):             # (d, H*hd)
+        tp = "model" if shape[1] % model_n == 0 else None
+        spec = (fsdp(shape[0]), tp)
+    elif name == "wo":                           # (H*hd, d)
+        tp = "model" if shape[0] % model_n == 0 else None
+        spec = (tp, fsdp(shape[1]))
+    elif name in ("w_gate", "w_up"):
+        if len(shape) == 3:                      # MoE (E, d, ff)
+            spec = ("model" if shape[0] % model_n == 0 else None, fsdp(shape[1]), None)
+        else:                                    # dense (d, ff)
+            spec = (fsdp(shape[0]), "model" if shape[1] % model_n == 0 else None)
+    elif name == "w_down":
+        if len(shape) == 3:                      # MoE (E, ff, d)
+            spec = ("model" if shape[0] % model_n == 0 else None, None, fsdp(shape[2]))
+        else:                                    # dense (ff, d)
+            spec = ("model" if shape[0] % model_n == 0 else None, fsdp(shape[1]))
+    elif name in ("shared_gate", "shared_up"):   # (d, sf)
+        spec = (fsdp(shape[0]), "model" if shape[1] % model_n == 0 else None)
+    elif name == "shared_down":                  # (sf, d)
+        spec = ("model" if shape[0] % model_n == 0 else None, fsdp(shape[1]))
+    elif name == "router":                       # (d, E) small
+        spec = (None, None)
+    elif name == "in_proj":                      # (d, 2*d_in + 2GS + H)
+        tp = "model" if shape[1] % model_n == 0 else None
+        spec = (fsdp(shape[0]), tp)
+    elif name == "out_proj":                     # (d_in, d)
+        tp = "model" if shape[0] % model_n == 0 else None
+        spec = (tp, fsdp(shape[1]))
+    elif name == "conv_w":                       # (K, conv_dim)
+        spec = (None, "model" if shape[1] % model_n == 0 else None)
+    elif name == "conv_b":
+        spec = ("model" if shape[0] % model_n == 0 else None,)
+    else:                                        # norms, A_log, dt_bias, D, ...
+        spec = (None,) * len(shape)
+    if stacked:
+        spec = (None,) + tuple(spec)
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, flat_fsdp: bool = False):
+    """Sharding pytree matching model.param_shapes(cfg)."""
+    shapes = param_shapes(cfg)
+
+    def walk(path, sds):
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        shape = sds.shape[1:] if stacked else sds.shape
+        return NamedSharding(
+            mesh,
+            param_spec(name, shape, cfg, mesh, stacked=stacked,
+                       flat_fsdp=flat_fsdp),
+        )
+
+    return jax.tree_util.tree_map_with_path(walk, shapes)
+
+
+def opt_shardings(param_sh, step_sharding):
+    """Optimizer state shardings: moments follow their parameters."""
+    from repro.optim.adamw import OptState
+
+    return OptState(step=step_sharding, mu=param_sh, nu=param_sh)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return P(dp, None)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, with_frontend: bool,
+                    batch: int | None = None, dp=None):
+    if dp is None:
+        dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if batch is not None:
+        n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+        if batch % n_dp != 0:
+            dp = None  # tiny global batch (long-context decode): replicate
+    out = {
+        "tokens": NamedSharding(mesh, P(dp, None)),
+        "labels": NamedSharding(mesh, P(dp, None)),
+    }
+    if with_frontend:
+        out["extra_embeds"] = NamedSharding(mesh, P(dp, None, None))
+    return out
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, batch: int) -> DecodeState:
+    """KV caches: batch over data(+pod) when divisible, kv-heads over model
+    when divisible; otherwise the sequence axis takes the model sharding
+    (long-context decode at batch 1)."""
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    n_dp = int(np.prod([mesh.shape[a] for a in dp]))
+    model_n = mesh.shape["model"]
+    b_ax = dp if batch % n_dp == 0 else None
+
+    caches = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            kv_ax = "model" if cfg.n_kv_heads % model_n == 0 else None
+            seq_ax = None if kv_ax else "model"
+            sh = NamedSharding(mesh, P(None, b_ax, seq_ax, kv_ax, None))
+            caches.append({"k": sh, "v": sh})
+        else:
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            conv_ax = "model" if conv_dim % model_n == 0 else None
+            head_ax = "model" if cfg.ssm_heads % model_n == 0 else None
+            caches.append(
+                {
+                    "conv": NamedSharding(mesh, P(None, b_ax, None, conv_ax)),
+                    "ssm": NamedSharding(mesh, P(None, b_ax, head_ax, None, None)),
+                }
+            )
+    return DecodeState(
+        caches=tuple(caches),
+        pos=NamedSharding(mesh, P()),
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,89 @@
+"""Distributed train / serve step builders.
+
+``train_step``: gradient accumulation over microbatches (lax.scan, remat'd
+model inside), fused AdamW update — the unit the dry-run lowers for
+``train_*`` cells.  ``prefill_step`` / ``decode_step``: the serving units
+for ``prefill_*`` and ``decode_*`` / ``long_*`` cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, n_microbatch: int):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    The global batch is split into n_microbatch slices along batch dim 0;
+    grads accumulate in cfg.accum_dtype.  Collectives: per-microbatch FSDP
+    all-gathers + one reduce per accumulation (GSPMD inserts them from the
+    parameter shardings).
+    """
+
+    def train_step(params, opt_state, batch):
+        adt = jnp.dtype(cfg.accum_dtype)
+
+        def micro(batch_slice):
+            def loss(p):
+                return M.loss_fn(p, cfg, batch_slice)
+
+            (l, aux), grads = jax.value_and_grad(loss, has_aux=True)(params)
+            return l, aux, grads
+
+        if n_microbatch == 1:
+            l, aux, grads = micro(batch)
+            metrics = {"loss": l, **aux}
+        else:
+            B = batch["tokens"].shape[0]
+            assert B % n_microbatch == 0, (B, n_microbatch)
+            mb = B // n_microbatch
+            sliced = jax.tree.map(
+                lambda x: x.reshape((n_microbatch, mb) + x.shape[1:]), batch
+            )
+
+            def body(carry, bslice):
+                acc, lsum = carry
+                l, aux, grads = micro(bslice)
+                acc = jax.tree.map(lambda a, g: a + g.astype(adt), acc, grads)
+                return (acc, lsum + l), aux
+
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params
+            )
+            (acc, lsum), auxs = jax.lax.scan(body, (acc0, jnp.zeros(())), sliced)
+            grads = jax.tree.map(lambda a: a / n_microbatch, acc)
+            metrics = {"loss": lsum / n_microbatch}
+            metrics.update({k: jnp.mean(v) for k, v in auxs.items()})
+
+        new_params, new_opt, stats = adamw.apply(opt_cfg, params, grads, opt_state)
+        metrics.update(stats)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch: Dict[str, Any]):
+        return M.prefill(
+            params,
+            cfg,
+            batch["tokens"],
+            max_len,
+            extra_embeds=batch.get("extra_embeds"),
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, state: M.DecodeState, tokens):
+        return M.decode_step(params, cfg, state, tokens)
+
+    return decode_step

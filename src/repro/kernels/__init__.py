@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the arbitration Monte-Carlo hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated in
+interpret mode against the pure-jnp oracles in ref.py; ops.py is the
+public jitted wrapper with layout/padding/backends.
+"""
+from .ops import build_tables, feasibility, perfect_matching  # noqa: F401

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: batched bitmask Kuhn matching (ideal LtA arbiter).
+
+Perfect-matching existence over the (ring x line) reachability graph, for a
+lane of 128 trials at once.  All state is int32 vectors/tiles:
+
+  adj       (N, TB)  per-ring line bitmask           (input)
+  match_wl  (N, TB)  ring -> matched line index, -1  (carried in registers)
+  match_rg  (N, TB)  line -> matched ring index, -1
+  parent    (N, TB)  line -> BFS-discovering ring
+
+Per left vertex: BFS over alternating paths using lane-wise variable shifts
+(TPU VPU supports per-lane shift amounts), then an augmenting walk-back of at
+most N steps.  Dynamic row selects use the one-hot reduce trick so nothing
+requires cross-sublane gathers.  No data-dependent control flow: fixed
+fori_loop trip counts, masks everywhere — the kernel is oblivious to which
+trials already finished, exactly like the batched hardware arbiter.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TRIAL_BLOCK = 128
+
+
+def _row_iota(n, tb):
+    return jax.lax.broadcasted_iota(jnp.int32, (n, tb), 0)
+
+
+def _select_row(mat, idx):
+    """mat: (N, TB), idx: (TB,) row index per lane -> (TB,) gathered values."""
+    n, tb = mat.shape
+    hit = _row_iota(n, tb) == idx[None, :]
+    return jnp.sum(jnp.where(hit, mat, 0), axis=0)
+
+
+def _match_kernel(adj_ref, match_wl_ref, ok_ref):
+    n, tb = adj_ref.shape
+    adj = adj_ref[...]
+    match_wl = jnp.full((n, tb), -1, jnp.int32)   # ring -> line
+    match_rg = jnp.full((n, tb), -1, jnp.int32)   # line -> ring
+    riota = _row_iota(n, tb)
+
+    def per_vertex(i, carry):
+        match_wl, match_rg = carry
+        matched_mask = jnp.sum(
+            jnp.where(match_rg >= 0, jnp.int32(1) << riota, 0), axis=0
+        )
+        start = _select_row(adj, jnp.full((tb,), i, jnp.int32))
+        parent = jnp.where((start[None, :] >> riota) & 1 == 1, i, -1)
+        free_wl = jnp.full((tb,), -1, jnp.int32)
+
+        def bfs(_, c):
+            frontier, visited, parent, free_wl = c
+            free_hit = frontier & ~matched_mask
+            lsb = free_hit & -free_hit
+            found = (free_hit != 0) & (free_wl < 0)
+            lsb_idx = 31 - jax.lax.clz(jnp.maximum(lsb, 1))
+            free_wl = jnp.where(found, lsb_idx, free_wl)
+
+            # Expand through matched rings whose line is in the frontier.
+            in_front = (match_wl >= 0) & (
+                (frontier[None, :] >> jnp.maximum(match_wl, 0)) & 1 == 1
+            )
+            newly = jnp.where(in_front, adj & ~visited[None, :], 0)
+
+            def per_ring(r, c2):
+                nf, parent = c2
+                newly_r = _select_row(newly, jnp.full((tb,), r, jnp.int32))
+                fresh = newly_r & ~nf
+                parent = jnp.where((fresh[None, :] >> riota) & 1 == 1, r, parent)
+                return nf | fresh, parent
+
+            union, parent_new = jax.lax.fori_loop(
+                0, n, per_ring, (jnp.zeros((tb,), jnp.int32), parent)
+            )
+            cont = free_wl < 0
+            parent = jnp.where(cont[None, :], parent_new, parent)
+            new_frontier = jnp.where(cont, union & ~visited, 0)
+            visited = visited | union
+            return new_frontier, visited, parent, free_wl
+
+        _, _, parent, free_wl = jax.lax.fori_loop(
+            0, n, bfs, (start, start, parent, free_wl)
+        )
+
+        def walk(_, c):
+            match_wl, match_rg, k, active = c
+            k_safe = jnp.maximum(k, 0)
+            r = _select_row(parent, k_safe)
+            r_safe = jnp.maximum(r, 0)
+            prev = _select_row(match_wl, r_safe)
+            upd_wl = active[None, :] & (riota == r_safe[None, :])
+            match_wl = jnp.where(upd_wl, k_safe[None, :], match_wl)
+            upd_rg = active[None, :] & (riota == k_safe[None, :])
+            match_rg = jnp.where(upd_rg, r_safe[None, :], match_rg)
+            active = active & (r_safe != i) & (prev >= 0)
+            return match_wl, match_rg, jnp.where(active, prev, k), active
+
+        match_wl, match_rg, _, _ = jax.lax.fori_loop(
+            0, n, walk, (match_wl, match_rg, free_wl, free_wl >= 0)
+        )
+        return match_wl, match_rg
+
+    match_wl, match_rg = jax.lax.fori_loop(0, n, per_vertex, (match_wl, match_rg))
+    match_wl_ref[...] = match_wl
+    ok_ref[0, :] = jnp.all(match_wl >= 0, axis=0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def match_pallas(adj, *, interpret=False):
+    """adj: (N, T) int32 per-ring line bitmasks, T % TRIAL_BLOCK == 0.
+
+    Returns (match_wl (N, T) int32, perfect (T,) bool).
+    """
+    n, t = adj.shape
+    assert t % TRIAL_BLOCK == 0, t
+    grid = (t // TRIAL_BLOCK,)
+    match_wl, ok = pl.pallas_call(
+        _match_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b))],
+        out_specs=[
+            pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b)),
+            pl.BlockSpec((1, TRIAL_BLOCK), lambda b: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, t), jnp.int32),
+            jax.ShapeDtypeStruct((1, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(adj)
+    return match_wl, ok[0].astype(bool)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: ideal LtD/LtC feasibility (per-trial minimum TR).
+
+This is the inner loop of every policy-level Monte-Carlo sweep (Fig. 4-8):
+millions of trials, each reducing an (N x N) scaled-residual matrix.  The
+TPU-native layout puts TRIALS on the lane axis (128-wide) and channels on
+sublanes, so each (N, TB) tile is a handful of VREGs and the whole working
+set stays in VMEM:
+
+  inputs   laser/ring/fsr/tr_unit : (N, TB) f32 tiles   (4 * N*TB*4 bytes)
+  scratch  scaled residual        : (N, N, TB) f32      (N^2*TB*4 bytes)
+  outputs  ltd/ltc min-TR         : (1, TB) f32
+
+For N=16, TB=128 the residual scratch is 128 KiB — comfortably in VMEM with
+room for double-buffered input tiles.  The target spectral ordering ``s`` is
+compile-time static (one arbiter FSM per ordering, as in hardware).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TRIAL_BLOCK = 128
+
+
+def _feasibility_kernel(laser_ref, ring_ref, fsr_ref, tru_ref, ltd_ref, ltc_ref, *, s):
+    n = laser_ref.shape[0]
+    laser = laser_ref[...]          # (N, TB) lines x trials
+    ring = ring_ref[...]
+    fsr = fsr_ref[...]
+    tru = tru_ref[...]
+
+    # scaled_res[i][k] : red-shift of ring i onto line k, / TR multiplier.
+    # Unrolled over rings (N is small and static); each row is one VREG op.
+    inv_tru = 1.0 / tru
+    rows = []
+    for i in range(n):
+        d = laser - ring[i][None, :]                    # (N, TB)
+        res = d - fsr[i][None, :] * jnp.floor(d / fsr[i][None, :])
+        rows.append(res * inv_tru[i][None, :])
+
+    # LtD: ring i must take line s_i exactly.
+    ltd = rows[0][s[0]]
+    for i in range(1, n):
+        ltd = jnp.maximum(ltd, rows[i][s[i]])
+    ltd_ref[0, :] = ltd
+
+    # LtC: best cyclic shift of the target ordering.
+    best = None
+    for c in range(n):
+        req = rows[0][(s[0] + c) % n]
+        for i in range(1, n):
+            req = jnp.maximum(req, rows[i][(s[i] + c) % n])
+        best = req if best is None else jnp.minimum(best, req)
+    ltc_ref[0, :] = best
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def feasibility_pallas(laser, ring, fsr, tr_unit, *, s, interpret=False):
+    """laser/ring/fsr/tr_unit: (N, T) f32, T % TRIAL_BLOCK == 0.
+
+    Returns (ltd_min_tr, ltc_min_tr): each (T,) f32.
+    """
+    n, t = laser.shape
+    assert t % TRIAL_BLOCK == 0, t
+    grid = (t // TRIAL_BLOCK,)
+    in_spec = pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b))
+    out_spec = pl.BlockSpec((1, TRIAL_BLOCK), lambda b: (0, b))
+    ltd, ltc = pl.pallas_call(
+        functools.partial(_feasibility_kernel, s=s),
+        grid=grid,
+        in_specs=[in_spec] * 4,
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, t), jnp.float32),
+            jax.ShapeDtypeStruct((1, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(laser, ring, fsr, tr_unit)
+    return ltd[0], ltc[0]

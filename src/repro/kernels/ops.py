@@ -1,0 +1,103 @@
+"""Jitted public wrappers for the arbitration Pallas kernels.
+
+Handles layout (core uses (T, N); kernels put trials on lanes: (N, T)),
+padding to the 128-trial lane block, and backend selection:
+
+  backend="pallas"     compiled Pallas (TPU)
+  backend="interpret"  Pallas interpret mode (CPU correctness path)
+  backend="jnp"        portable pure-jnp oracle (default off-TPU)
+  backend="auto"       pallas on TPU else jnp
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitmask_match import TRIAL_BLOCK, match_pallas
+from .feasibility import feasibility_pallas
+from .table_build import table_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _resolve(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    return backend
+
+
+def _pad_cols(x, t_pad):
+    t = x.shape[-1]
+    if t == t_pad:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, t_pad - t)]
+    return jnp.pad(x, pad)
+
+
+def _padded_t(t: int) -> int:
+    return ((t + TRIAL_BLOCK - 1) // TRIAL_BLOCK) * TRIAL_BLOCK
+
+
+def feasibility(laser, ring, fsr, tr_unit, *, s, backend="auto"):
+    """(T, N) system batch -> per-trial (ltd_min_tr, ltc_min_tr)."""
+    backend = _resolve(backend)
+    cols = [jnp.asarray(a, jnp.float32).T for a in (laser, ring, fsr, tr_unit)]
+    if backend == "jnp":
+        return ref.feasibility_ref(*cols, s=tuple(int(v) for v in s))
+    t = cols[0].shape[1]
+    tp = _padded_t(t)
+    cols = [_pad_cols(c, tp) for c in cols]
+    # Padded trials must stay numerically benign: tr_unit=1 avoids div-by-0.
+    if tp != t:
+        pad_fix = jnp.zeros((cols[3].shape[0], tp), jnp.float32).at[:, t:].set(1.0)
+        cols[3] = cols[3] + pad_fix
+        cols[2] = cols[2] + pad_fix  # fsr > 0 for mod
+    ltd, ltc = feasibility_pallas(
+        *cols, s=tuple(int(v) for v in s), interpret=(backend == "interpret")
+    )
+    return ltd[:t], ltc[:t]
+
+
+def perfect_matching(adj, *, backend="auto"):
+    """adj: (T, N) int32 ring->line bitmasks -> (match_wl (T, N), ok (T,))."""
+    backend = _resolve(backend)
+    adj_c = jnp.asarray(adj, jnp.int32).T
+    if backend == "jnp":
+        mw, ok = ref.match_ref(adj_c)
+        return mw.T, ok
+    t = adj_c.shape[1]
+    tp = _padded_t(t)
+    mw, ok = match_pallas(_pad_cols(adj_c, tp), interpret=(backend == "interpret"))
+    return mw.T[:t], ok[:t]
+
+
+def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend="auto"):
+    """(T, N) inputs (tr = actual per-ring TR) -> core-layout tables.
+
+    Returns (delta (T, N, E), wl (T, N, E), n_valid (T, N)).
+    """
+    backend = _resolve(backend)
+    cols = [jnp.asarray(a, jnp.float32).T for a in (laser, ring, fsr, tr)]
+    if backend == "jnp":
+        d, w, nv = ref.table_ref(*cols, max_alias=max_alias, max_entries=max_entries)
+        return jnp.transpose(d, (2, 0, 1)), jnp.transpose(w, (2, 0, 1)), nv.T
+    t = cols[0].shape[1]
+    tp = _padded_t(t)
+    cols = [_pad_cols(c, tp) for c in cols]
+    if tp != t:
+        pad_fix = jnp.zeros((cols[2].shape[0], tp), jnp.float32).at[:, t:].set(1.0)
+        cols[2] = cols[2] + pad_fix
+    d, w, nv = table_pallas(
+        *cols,
+        max_alias=max_alias,
+        max_entries=max_entries,
+        interpret=(backend == "interpret"),
+    )
+    return (
+        jnp.transpose(d, (2, 0, 1))[:t],
+        jnp.transpose(w, (2, 0, 1))[:t],
+        nv.T[:t],
+    )

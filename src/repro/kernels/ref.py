@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (kernel-layout adapters over the
+portable implementations in ``repro.core``)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ideal
+from repro.core.matching import adjacency_bitmask, max_matching
+from repro.core.sampling import SystemBatch
+from repro.core.search_table import build_search_tables
+
+
+def _sys_from_cols(laser, ring, fsr, tr_unit) -> SystemBatch:
+    """(N, T) kernel layout -> SystemBatch (T, N)."""
+    return SystemBatch(laser=laser.T, ring=ring.T, fsr=fsr.T, tr_unit=tr_unit.T)
+
+
+def feasibility_ref(laser, ring, fsr, tr_unit, *, s):
+    """Oracle for kernels.feasibility: (ltd_min_tr, ltc_min_tr) each (T,)."""
+    sys = _sys_from_cols(laser, ring, fsr, tr_unit)
+    s = jnp.asarray(s)
+    return ideal.ltd_min_tr(sys, s), ideal.ltc_min_tr(sys, s)
+
+
+def match_ref(adj):
+    """Oracle for kernels.bitmask_match: adj (N, T) -> (match_wl, perfect)."""
+    match_wl, _ = max_matching(adj.T)          # (T, N)
+    return match_wl.T, jnp.all(match_wl >= 0, axis=1)
+
+
+def table_ref(laser, ring, fsr, tr, *, max_alias=8, max_entries=None):
+    """Oracle for kernels.table_build: (N, T) inputs, actual TR in ``tr``.
+
+    Returns (delta (N, E, T), wl (N, E, T), n_valid (N, T)).
+    """
+    # build_search_tables consumes tr_mean * tr_unit; pass unit=tr, mean=1.
+    sys = _sys_from_cols(laser, ring, fsr, tr)
+    tables = build_search_tables(sys, 1.0, max_alias=max_alias, max_entries=max_entries)
+    return (
+        jnp.transpose(tables.delta, (1, 2, 0)),
+        jnp.transpose(tables.wl, (1, 2, 0)),
+        tables.n_valid.T,
+    )

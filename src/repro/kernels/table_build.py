@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: search-table construction (record-phase hot spot).
+
+For every (trial, ring) the wavelength sweep yields up to K = N*(2J+1)
+candidate peaks  delta = laser_k - ring_i - j*FSR_i  with 0 <= delta <= TR_i.
+The kernel masks invalid candidates to a big sentinel and bitonic-sorts
+(key = delta, payload = line id) on the sublane axis, emitting the first E
+entries — identical semantics to ``repro.core.search_table``.
+
+Layout: trials on lanes.  Per ring the candidate tile is (K_pad, TB) f32 —
+for N=16, J=4, TB=128 that is 256x128x4 = 128 KiB key + 128 KiB payload in
+VMEM, processed ring-at-a-time inside the kernel to bound the working set.
+The bitonic network is static (log^2 K stages); each compare-exchange is a
+reshape into (blocks, 2, stride, TB) so partners are adjacent — no gathers,
+no captured constants, no data-dependent control flow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+TRIAL_BLOCK = 128
+BIG = 3.0e38  # python literal: Pallas kernels must not capture array consts
+
+
+def _bitonic_sort(key, payload):
+    """Ascending bitonic sort along axis 0 (static power-of-two length)."""
+    k_len, tb = key.shape
+    size = 2
+    while size <= k_len:
+        stride = size // 2
+        while stride >= 1:
+            blocks = k_len // (2 * stride)
+            kr = key.reshape(blocks, 2, stride, tb)
+            pr = payload.reshape(blocks, 2, stride, tb)
+            a_k, b_k = kr[:, 0], kr[:, 1]
+            a_p, b_p = pr[:, 0], pr[:, 1]
+            # Ascending iff bit `size` of the element index is 0; within one
+            # 2*stride block that bit is constant = f(block index).
+            blk = jax.lax.broadcasted_iota(jnp.int32, (blocks, stride, tb), 0)
+            asc = (blk * (2 * stride)) & size == 0
+            swap = jnp.where(asc, a_k > b_k, a_k < b_k)
+            new_a_k = jnp.where(swap, b_k, a_k)
+            new_b_k = jnp.where(swap, a_k, b_k)
+            new_a_p = jnp.where(swap, b_p, a_p)
+            new_b_p = jnp.where(swap, a_p, b_p)
+            key = jnp.stack([new_a_k, new_b_k], axis=1).reshape(k_len, tb)
+            payload = jnp.stack([new_a_p, new_b_p], axis=1).reshape(k_len, tb)
+            stride //= 2
+        size *= 2
+    return key, payload
+
+
+def _table_kernel(
+    laser_ref, ring_ref, fsr_ref, tr_ref, delta_ref, wl_ref, nv_ref, *, max_alias, k_pad
+):
+    n, tb = laser_ref.shape
+    laser = laser_ref[...]
+    j_vals = np.arange(-max_alias, max_alias + 1)
+    n_j = len(j_vals)
+
+    for i in range(n):  # static unroll over rings; working set stays (K, TB)
+        ring_i = ring_ref[i, :][None, :]
+        fsr_i = fsr_ref[i, :][None, :]
+        tr_i = tr_ref[i, :][None, :]
+        keys, pays = [], []
+        for j in j_vals:  # candidate deltas for each FSR alias
+            d = laser - ring_i - float(j) * fsr_i               # (N, TB)
+            ok = (d >= 0.0) & (d <= tr_i)
+            keys.append(jnp.where(ok, d, BIG))
+            pays.append(jax.lax.broadcasted_iota(jnp.int32, (n, tb), 0))
+        key = jnp.concatenate(keys, axis=0)                      # (N*J, TB)
+        pay = jnp.concatenate(pays, axis=0)
+        pad = k_pad - n * n_j
+        if pad:
+            key = jnp.concatenate([key, jnp.full((pad, tb), BIG, jnp.float32)], axis=0)
+            pay = jnp.concatenate([pay, jnp.full((pad, tb), -1, jnp.int32)], axis=0)
+        key, pay = _bitonic_sort(key, pay)
+
+        e = delta_ref.shape[1]
+        valid = key[:e] < BIG
+        delta_ref[i, :, :] = jnp.where(valid, key[:e], float("inf"))
+        wl_ref[i, :, :] = jnp.where(valid, pay[:e], -1)
+        nv_ref[i, :] = jnp.sum(valid.astype(jnp.int32), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_alias", "max_entries", "interpret"))
+def table_pallas(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, interpret=False):
+    """laser/ring/fsr/tr: (N, T) f32 (tr = actual per-ring tuning ranges).
+
+    Returns (delta (N, E, T) f32, wl (N, E, T) int32, n_valid (N, T) int32).
+    """
+    n, t = laser.shape
+    assert t % TRIAL_BLOCK == 0, t
+    e = 3 * n if max_entries is None else max_entries
+    k = n * (2 * max_alias + 1)
+    k_pad = 1 << int(np.ceil(np.log2(k)))
+    grid = (t // TRIAL_BLOCK,)
+    in_spec = pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b))
+    delta, wl, nv = pl.pallas_call(
+        functools.partial(_table_kernel, max_alias=max_alias, k_pad=k_pad),
+        grid=grid,
+        in_specs=[in_spec] * 4,
+        out_specs=[
+            pl.BlockSpec((n, e, TRIAL_BLOCK), lambda b: (0, 0, b)),
+            pl.BlockSpec((n, e, TRIAL_BLOCK), lambda b: (0, 0, b)),
+            pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, e, t), jnp.float32),
+            jax.ShapeDtypeStruct((n, e, t), jnp.int32),
+            jax.ShapeDtypeStruct((n, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(laser, ring, fsr, tr)
+    return delta, wl, nv

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell
+with 512 placeholder host devices standing in for 2 pods x 256 TPU v5e chips,
+prove the distribution config is coherent (sharding, memory, collectives),
+and extract the roofline terms (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (
+    ARCH_IDS,
+    SHAPES,
+    SHAPES_BY_NAME,
+    applicable,
+    get_config,
+    microbatches_for,
+)
+from repro.distributed import analysis, hlo_walk, sharding, steps
+from repro.distributed.ctx import activation_axes
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+def input_specs(cfg: ModelConfig, cell, mesh, dp=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, zero device allocation."""
+    B, L = cell.global_batch, cell.seq_len
+    sh = sharding.batch_shardings(
+        cfg, mesh, with_frontend=bool(cfg.frontend_len), batch=B, dp=dp
+    )
+    i32 = jnp.int32
+    if cell.kind == "train":
+        text_len = L - (cfg.frontend_len if cfg.frontend_len else 0)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, text_len), i32, sharding=sh["tokens"]),
+            "labels": jax.ShapeDtypeStruct((B, text_len), i32, sharding=sh["labels"]),
+        }
+        if cfg.frontend_len:
+            batch["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), jnp.bfloat16,
+                sharding=sh["extra_embeds"],
+            )
+        return batch
+    if cell.kind == "prefill":
+        text_len = L - (cfg.frontend_len if cfg.frontend_len else 0)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, text_len), i32, sharding=sh["tokens"])
+        }
+        if cfg.frontend_len:
+            batch["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), jnp.bfloat16,
+                sharding=sh["extra_embeds"],
+            )
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32, sharding=sh["tokens"])}
+
+
+def _abstract(tree_shapes, shardings):
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        tree_shapes,
+        shardings,
+    )
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_overrides: dict | None = None,
+               n_micro_override: int | None = None,
+               flat_fsdp: bool = False,
+               variant: str = "baseline"):
+    """Build + lower + compile one cell.  Returns (record, compiled).
+
+    cfg_overrides / n_micro_override / flat_fsdp parameterize §Perf
+    hillclimb variants; the default arguments are the recorded baseline.
+    """
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    cell = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    runs, reason = applicable(cfg, cell)
+    if not runs:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skip", "reason": reason}, None
+
+    params_sh = sharding.param_shardings(cfg, mesh, flat_fsdp=flat_fsdp)
+    params_abs = _abstract(M.param_shapes(cfg), params_sh)
+    dp = ("pod", "data") if multi_pod else ("data",)
+    # flat_fsdp: params shard over (data, model) with no TP; activations
+    # stay batch-sharded over (pod, data) and the residual carry can take
+    # the model axis along the sequence (seq_shard_carry in the variant).
+
+    with mesh, activation_axes(mesh, dp=dp):
+        if cell.kind == "train":
+            n_data = int(np.prod([mesh.shape[a] for a in
+                                  (("pod", "data") if multi_pod else ("data",))]))
+            n_micro = n_micro_override or microbatches_for(cfg, cell, n_data)
+            opt_cfg = adamw.AdamWConfig(moment_dtype=cfg.moment_dtype)
+            opt_abs_shapes = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), params_abs)
+            opt_sh = sharding.opt_shardings(params_sh, sharding.replicated(mesh))
+            opt_abs = _abstract(opt_abs_shapes, opt_sh)
+            fn = steps.make_train_step(cfg, opt_cfg, n_micro)
+            jfn = jax.jit(fn, donate_argnums=(0, 1))
+            lowered = jfn.lower(params_abs, opt_abs, input_specs(cfg, cell, mesh, dp=dp))
+            extra = {"n_microbatch": n_micro}
+        elif cell.kind == "prefill":
+            fn = steps.make_prefill_step(cfg, max_len=cell.seq_len)
+            jfn = jax.jit(fn)
+            lowered = jfn.lower(params_abs, input_specs(cfg, cell, mesh, dp=dp))
+            extra = {}
+        else:
+            state_shapes = jax.eval_shape(
+                lambda: M.init_decode_state(cfg, cell.global_batch, cell.seq_len)
+            )
+            state_sh = sharding.decode_state_shardings(cfg, mesh, cell.global_batch)
+            state_abs = _abstract(state_shapes, state_sh)
+            fn = steps.make_decode_step(cfg)
+            jfn = jax.jit(fn, donate_argnums=(1,))
+            lowered = jfn.lower(
+                params_abs, state_abs, input_specs(cfg, cell, mesh, dp=dp)["tokens"]
+            )
+            extra = {}
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    walked = hlo_walk.analyze(compiled.as_text(), n_dev)
+    model_flops = analysis.model_flops_estimate(cfg, cell)
+    roof = analysis.roofline(
+        walked.flops, walked.bytes, walked.collective_wire_bytes, n_dev, model_flops
+    )
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": variant,
+        "status": "ok",
+        "n_devices": int(n_dev),
+        "compile_s": round(compile_s, 1),
+        "params_total": M.count_params(cfg),
+        "params_active": M.count_params(cfg, active_only=True),
+        "memory": {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        },
+        "cost_analysis_raw": {
+            k: float(v)
+            for k, v in cost.items()
+            if k in ("flops", "bytes accessed", "transcendentals")
+        },
+        "hlo_walk": {
+            "flops": walked.flops,
+            "bytes": walked.bytes,
+            "while_trips": walked.while_trips,
+        },
+        "collectives": {
+            "ops": walked.per_collective_ops,
+            "wire_bytes": {
+                k: float(v) for k, v in walked.per_collective_bytes.items()
+            },
+        },
+        "roofline": roof.as_dict(),
+        **extra,
+    }
+    return record, compiled
+
+
+def bytes_per_device(record) -> float:
+    m = record.get("memory", {})
+    return m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    cells = (
+        [(a, s.name) for a in ARCH_IDS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+            fp = outdir / f"{tag}.json"
+            if fp.exists():
+                print(f"[dryrun] {tag}: cached")
+                continue
+            print(f"[dryrun] {tag}: lowering...", flush=True)
+            try:
+                record, compiled = lower_cell(arch, shape_name, multi)
+            except Exception as e:  # a dry-run failure is a bug in our system
+                failures += 1
+                record = {
+                    "arch": arch, "shape": shape_name,
+                    "mesh": "multi" if multi else "single",
+                    "status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:],
+                }
+                compiled = None
+            fp.write_text(json.dumps(record, indent=1))
+            if record["status"] == "ok":
+                r = record["roofline"]
+                print(
+                    f"[dryrun] {tag}: OK compile={record['compile_s']}s "
+                    f"mem/dev={bytes_per_device(record)/2**30:.2f}GiB "
+                    f"terms(s): C={r['compute_s']:.4f} M={r['memory_s']:.4f} "
+                    f"X={r['collective_s']:.4f} dom={r['dominant']}",
+                    flush=True,
+                )
+                # memory_analysis is the fits-proof; cost_analysis feeds §Roofline
+            elif record["status"] == "skip":
+                print(f"[dryrun] {tag}: SKIP ({record['reason'][:60]}...)")
+            else:
+                print(f"[dryrun] {tag}: FAIL {record['error']}")
+            del compiled
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

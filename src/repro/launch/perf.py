@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: runs named variant ladders on the three chosen
+(arch x shape) pairs, recording hypothesis -> change -> before -> after for
+EXPERIMENTS.md.  Each variant re-lowers, re-compiles and re-derives the
+roofline terms; artifacts land in experiments/perf/.
+
+  PYTHONPATH=src python -m repro.launch.perf --pair moe
+  PYTHONPATH=src python -m repro.launch.perf --pair all
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import bytes_per_device, lower_cell
+
+OUT = Path("experiments/perf")
+
+# Each entry: (variant_name, hypothesis, kwargs for lower_cell)
+LADDERS = {
+    # Worst roofline fraction + most collective-bound: expert-buffer
+    # gather/scatter all-gathers the full (E,cap,d) buffers per layer/ub.
+    "moe": {
+        "arch": "qwen3-moe-235b-a22b",
+        "shape": "train_4k",
+        "multi_pod": False,
+        "variants": [
+            (
+                "i1_micro4",
+                "collective wire scales with microbatch count (per-ub FSDP "
+                "gathers + MoE buffer all-gathers); 16->4 ubs should cut the "
+                "collective term ~3-4x at ~2-3x activation memory",
+                dict(n_micro_override=4),
+            ),
+            (
+                "i2_micro4_a2a",
+                "MoE dispatch/return via shard_map all-to-all moves only "
+                "routed tokens (T*k*d bytes) instead of all-gathering "
+                "(E,cap,d) buffers: predict ~10x lower MoE collective bytes",
+                dict(n_micro_override=4, cfg_overrides=dict(moe_impl="a2a")),
+            ),
+            (
+                "i3_micro2_a2a",
+                "with a2a the per-ub collective floor is FSDP param gathers; "
+                "fewer ubs amortize them further; memory should still fit",
+                dict(n_micro_override=2, cfg_overrides=dict(moe_impl="a2a")),
+            ),
+            (
+                "i4_micro8_a2a_cskip",
+                "memory term is now co-dominant and attention-score traffic "
+                "is half wasted on fully-masked causal tiles; the static "
+                "lower-triangle pair scan halves attention flops+bytes, and "
+                "8 ubs rebalance the carry memory that micro4 inflated",
+                dict(n_micro_override=8,
+                     cfg_overrides=dict(moe_impl="a2a", causal_skip=True)),
+            ),
+        ],
+    },
+    # Biggest dense model; collective-bound via FSDP gathers x 16 ubs + SP.
+    "dense340b": {
+        "arch": "nemotron-4-340b",
+        "shape": "train_4k",
+        "multi_pod": False,
+        "variants": [
+            (
+                "i1_micro4",
+                "FSDP all-gathers repeat per microbatch: 16->4 ubs cuts "
+                "param-gather wire ~4x; carry memory rises ~4x (seq-sharded "
+                "carries keep it within HBM)",
+                dict(n_micro_override=4),
+            ),
+            (
+                "i2_micro4_nosp",
+                "ablate sequence-parallel carries: SP halves carry memory "
+                "but adds h-sized all-gathers around every block; without "
+                "SP collective should drop at higher memory",
+                dict(n_micro_override=4, cfg_overrides=dict(seq_shard_carry=False)),
+            ),
+            (
+                "i3_micro8_nosp",
+                "pick the fit point: no-SP at 8 ubs balances carry memory "
+                "vs per-ub gather traffic",
+                dict(n_micro_override=8, cfg_overrides=dict(seq_shard_carry=False)),
+            ),
+            (
+                "i4_micro8_nosp_cskip",
+                "squared-ReLU 96-layer stack at 4k: attention tiles are "
+                "~20% of memory traffic; causal tile skipping halves them",
+                dict(n_micro_override=8,
+                     cfg_overrides=dict(seq_shard_carry=False, causal_skip=True)),
+            ),
+            (
+                "i5_sp_cskip",
+                "no-SP variants beat the bound but blow HBM (carry stash); "
+                "keep SP for fitment and take the free causal-skip win — "
+                "the shipped configuration (i2-i4 recorded as perf upper "
+                "bounds pending sqrt-remat of the layer scan)",
+                dict(cfg_overrides=dict(causal_skip=True)),
+            ),
+            (
+                "i6_micro8_nosp_cskip_sqrt",
+                "the 96-layer carry stash is what forced SP: a two-level "
+                "(12x8) sqrt-remat scan keeps only ~20 boundary carries, "
+                "so the fast no-SP sharding should now FIT — predict i4's "
+                "bound (~205s, 2.5x fraction) at roughly half the memory",
+                dict(n_micro_override=8,
+                     cfg_overrides=dict(seq_shard_carry=False,
+                                        causal_skip=True, scan_levels=2)),
+            ),
+        ],
+    },
+    # Paper-representative: cross-pod DP traffic on arbitrated DWDM links;
+    # small model where 16-way TP is pure overhead.
+    "crosspod": {
+        "arch": "internlm2-1.8b",
+        "shape": "train_4k",
+        "multi_pod": True,
+        "variants": [
+            (
+                "i1_flat_fsdp",
+                "[REFUTED v1: sharding batch over all 512 incl. model axis "
+                "replicated activations (256 % 512 != 0) and exploded both "
+                "terms] v2: 1.8B params need no TP -> flat FSDP params over "
+                "(data x model), batch over (pod x data), carry seq-sharded "
+                "over model: removes the 2-all-reduce-per-layer TP tax",
+                dict(flat_fsdp=True,
+                     cfg_overrides=dict(seq_shard_carry=True)),
+            ),
+            (
+                "i2_flat_fsdp_micro1",
+                "per-device batch is 8 sequences at micro=4; grad "
+                "accumulation is pure overhead at this scale -> 1 ub "
+                "amortizes the FSDP param gathers 4x",
+                dict(flat_fsdp=True, n_micro_override=1,
+                     cfg_overrides=dict(seq_shard_carry=True)),
+            ),
+            (
+                "i3_flat_fsdp_micro1_dots",
+                "small model: full remat recompute is ~25% of compute; "
+                "'dots' policy saves matmul outputs (memory is ample) "
+                "cutting recompute flops",
+                dict(flat_fsdp=True, n_micro_override=1,
+                     cfg_overrides=dict(seq_shard_carry=True, remat="dots")),
+            ),
+            (
+                "i4_flat_fsdp_micro1_cskip",
+                "with collectives fixed the cell turns memory-bound; "
+                "causal tile skipping halves the dominant attention-score "
+                "traffic",
+                dict(flat_fsdp=True, n_micro_override=1,
+                     cfg_overrides=dict(seq_shard_carry=True, remat="dots",
+                                        causal_skip=True)),
+            ),
+        ],
+    },
+}
+
+
+def run_ladder(name: str):
+    spec = LADDERS[name]
+    OUT.mkdir(parents=True, exist_ok=True)
+    arch, shape, multi = spec["arch"], spec["shape"], spec["multi_pod"]
+    mesh_tag = "multi" if multi else "single"
+
+    # baseline from the dry-run artifacts
+    base_fp = Path("experiments/dryrun") / f"{arch}__{shape}__{mesh_tag}.json"
+    baseline = json.loads(base_fp.read_text())
+    rows = [("baseline", "recorded dry-run baseline", baseline)]
+
+    for vname, hypothesis, kw in spec["variants"]:
+        fp = OUT / f"{name}__{vname}.json"
+        if fp.exists():
+            rec = json.loads(fp.read_text())
+        else:
+            print(f"[perf:{name}] {vname}: lowering...", flush=True)
+            try:
+                rec, compiled = lower_cell(
+                    arch, shape, multi, variant=vname, **kw
+                )
+                del compiled
+            except Exception as e:
+                rec = {"status": "fail", "error": f"{type(e).__name__}: {e}"}
+            rec["hypothesis"] = hypothesis
+            fp.write_text(json.dumps(rec, indent=1))
+        rows.append((vname, hypothesis, rec))
+
+    print(f"\n=== ladder {name}: {arch} x {shape} ({mesh_tag}) ===")
+    print(f"{'variant':26s} {'C[s]':>9s} {'M[s]':>9s} {'X[s]':>9s} "
+          f"{'bound[s]':>9s} {'frac':>8s} {'mem GiB':>8s}")
+    prev_bound = None
+    for vname, hyp, rec in rows:
+        if rec.get("status") != "ok":
+            print(f"{vname:26s} FAILED: {rec.get('error', rec.get('status'))[:60]}")
+            continue
+        r = rec["roofline"]
+        mem = bytes_per_device(rec) / 2**30
+        bound = r["step_time_lower_bound_s"]
+        delta = "" if prev_bound is None else f"  ({bound/prev_bound:.2f}x)"
+        print(
+            f"{vname:26s} {r['compute_s']:9.3f} {r['memory_s']:9.3f} "
+            f"{r['collective_s']:9.3f} {bound:9.3f} "
+            f"{r['roofline_fraction']:8.4f} {mem:8.1f}{delta}"
+        )
+        prev_bound = bound
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=list(LADDERS) + ["all"], default="all")
+    args = ap.parse_args()
+    names = list(LADDERS) if args.pair == "all" else [args.pair]
+    for n in names:
+        run_ladder(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,416 @@
+"""Unified LM: parameter init, training forward (scan over super-blocks with
+configurable remat), chunked cross-entropy, and the serving path
+(prefill + single-token decode with KV / SSM caches).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import constrain
+
+from . import layers
+from .config import BlockSpec, ModelConfig
+
+Params = Dict[str, Any]
+COMPUTE = jnp.bfloat16
+
+
+# --------------------------------------------------------------------- init
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _block_shapes(cfg: ModelConfig, spec: BlockSpec) -> Dict[str, Tuple[int, ...]]:
+    d, hd = cfg.d_model, cfg.head_dim
+    shapes: Dict[str, Tuple[int, ...]] = {"norm1": (d,)}
+    if spec.mixer == "attn":
+        shapes.update(
+            wq=(d, cfg.n_heads * hd),
+            wk=(d, cfg.n_kv_heads * hd),
+            wv=(d, cfg.n_kv_heads * hd),
+            wo=(cfg.n_heads * hd, d),
+        )
+        if cfg.qk_norm:
+            shapes.update(q_norm=(hd,), k_norm=(hd,))
+    else:  # mamba
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        shapes.update(
+            in_proj=(d, 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.ssm_heads),
+            conv_w=(cfg.ssm_conv, conv_dim),
+            conv_b=(conv_dim,),
+            dt_bias=(cfg.ssm_heads,),
+            A_log=(cfg.ssm_heads,),
+            D=(cfg.ssm_heads,),
+            out_proj=(cfg.d_inner, d),
+        )
+    if spec.ffn == "dense":
+        shapes["norm2"] = (d,)
+        if cfg.act == "swiglu":
+            shapes.update(w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff), w_down=(cfg.d_ff, d))
+        else:
+            shapes.update(w_up=(d, cfg.d_ff), w_down=(cfg.d_ff, d))
+    elif spec.ffn == "moe":
+        shapes["norm2"] = (d,)
+        E, f = cfg.n_experts, cfg.d_ff
+        shapes.update(router=(d, E))
+        if cfg.act == "swiglu":
+            shapes.update(w_gate=(E, d, f), w_up=(E, d, f), w_down=(E, f, d))
+        else:
+            shapes.update(w_up=(E, d, f), w_down=(E, f, d))
+        if cfg.n_shared_experts:
+            sf = f * cfg.n_shared_experts
+            shapes.update(
+                shared_gate=(d, sf), shared_up=(d, sf), shared_down=(sf, d)
+            )
+    return shapes
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """Abstract parameter tree: leaves are (shape, dtype) ShapeDtypeStructs."""
+    dt = jnp.dtype(cfg.param_dtype)
+    tree: Params = {
+        "embed": jax.ShapeDtypeStruct((cfg.vocab, cfg.d_model), dt),
+        "final_norm": jax.ShapeDtypeStruct((cfg.d_model,), dt),
+        "lm_head": jax.ShapeDtypeStruct((cfg.d_model, cfg.vocab), dt),
+        "blocks": [],
+    }
+    for spec in cfg.pattern:
+        blk = {
+            k: jax.ShapeDtypeStruct((cfg.n_super,) + shp, dt)
+            for k, shp in _block_shapes(cfg, spec).items()
+        }
+        tree["blocks"].append(blk)
+    return tree
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    keys = jax.random.split(key, len(flat))
+
+    def init_leaf(path, sds, k):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if "norm" in str(name):
+            return jnp.ones(sds.shape, sds.dtype)
+        if str(name) == "A_log":
+            # A in [1, 16) as in Mamba-2 reference init
+            u = jax.random.uniform(k, sds.shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(sds.dtype)
+        if str(name) in ("conv_b", "dt_bias"):
+            return jnp.zeros(sds.shape, sds.dtype)
+        if str(name) == "D":
+            return jnp.ones(sds.shape, sds.dtype)
+        return _dense(k, sds.shape, sds.dtype)
+
+    leaves = [init_leaf(p, s, k) for (p, s), k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count; active_only counts top-k of MoE experts."""
+    total = 0
+    for path, sds in jax.tree_util.tree_flatten_with_path(param_shapes(cfg))[0]:
+        n = int(np.prod(sds.shape))
+        name = str(path[-1].key if hasattr(path[-1], "key") else path[-1])
+        if active_only and name in ("w_gate", "w_up", "w_down") and len(sds.shape) == 4:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+# ------------------------------------------------------------------ blocks
+def _mixer(h, p, spec: BlockSpec, cfg: ModelConfig, positions):
+    if spec.mixer == "attn":
+        B, L, d = h.shape
+        hdims = ("batch", None, "model", None)
+        q = constrain((h @ p["wq"]).reshape(B, L, cfg.n_heads, cfg.head_dim), hdims)
+        k = constrain((h @ p["wk"]).reshape(B, L, cfg.n_kv_heads, cfg.head_dim), hdims)
+        v = constrain((h @ p["wv"]).reshape(B, L, cfg.n_kv_heads, cfg.head_dim), hdims)
+        if cfg.qk_norm:
+            q = layers.rms_norm(q, p["q_norm"])
+            k = layers.rms_norm(k, p["k_norm"])
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        o = layers.flash_attention(
+            q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            causal_skip=cfg.causal_skip,
+        )
+        return o.reshape(B, L, cfg.n_heads * cfg.head_dim) @ p["wo"], None
+    out, _ = layers.mamba_mixer(h, p, cfg)
+    return out, None
+
+
+def _ffn(h, p, spec: BlockSpec, cfg: ModelConfig):
+    if spec.ffn == "dense":
+        return layers.dense_ffn(h, p, cfg), jnp.zeros((), jnp.float32)
+    impl = layers.moe_ffn_a2a if cfg.moe_impl == "a2a" else layers.moe_ffn
+    y, stats = impl(h, p, cfg)
+    return y, stats.aux_loss
+
+
+def _cast_tree(p, dtype=COMPUTE):
+    """Cast float params to the compute dtype at point-of-use (master copies
+    stay in cfg.param_dtype)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a, p
+    )
+
+
+def _super_block(h, blk_params, cfg: ModelConfig, positions):
+    aux = jnp.zeros((), jnp.float32)
+    blk_params = _cast_tree(blk_params)
+    seq_ax = "model" if cfg.seq_shard_carry else None
+    hdims = ("batch", seq_ax, None)
+    h = constrain(h, hdims)
+    for j, spec in enumerate(cfg.pattern):
+        p = blk_params[j]
+        mix, _ = _mixer(layers.rms_norm(h, p["norm1"]), p, spec, cfg, positions)
+        h = constrain(h + mix, hdims)
+        if spec.ffn != "none":
+            f, a = _ffn(layers.rms_norm(h, p["norm2"]), p, spec, cfg)
+            h = constrain(h + f, hdims)
+            aux = aux + a
+    return h, aux
+
+
+_REMAT_POLICIES = {
+    "full": None,  # save nothing
+    "dots": "dots_with_no_batch_dims_saveable",
+    "none": "everything_saveable",
+}
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = _REMAT_POLICIES[cfg.remat]
+    if policy is None:
+        return jax.checkpoint(fn)
+    return jax.checkpoint(fn, policy=getattr(jax.checkpoint_policies, policy))
+
+
+# ----------------------------------------------------------------- forward
+def _sqrt_factor(n: int) -> int:
+    """Divisor of n closest to sqrt(n) (outer scan length)."""
+    best = 1
+    for d in range(1, n + 1):
+        if n % d == 0 and abs(d - n ** 0.5) < abs(best - n ** 0.5):
+            best = d
+    return best
+
+
+def backbone(params: Params, cfg: ModelConfig, h, positions):
+    """Run the block stack on embeddings h (B, L, d) -> (hidden, aux_loss)."""
+    body = _maybe_remat(
+        lambda carry, xs: _super_block(carry, xs, cfg, positions), cfg
+    )
+    if cfg.scan_levels == 2 and cfg.n_super > 3:
+        # sqrt-remat: the outer scan saves only group-boundary carries; the
+        # checkpointed group body recomputes its inner carries in backward.
+        outer = _sqrt_factor(cfg.n_super)
+        inner = cfg.n_super // outer
+        grouped = jax.tree.map(
+            lambda a: a.reshape((outer, inner) + a.shape[1:]), params["blocks"]
+        )
+
+        @jax.checkpoint
+        def group_body(carry, xs_group):
+            h2, aux2 = jax.lax.scan(body, carry, xs_group)
+            return h2, jnp.sum(aux2)
+
+        h, aux = jax.lax.scan(group_body, h, grouped)
+    else:
+        h, aux = jax.lax.scan(body, h, params["blocks"])
+    return layers.rms_norm(h, params["final_norm"]), jnp.sum(aux)
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, tokens, extra_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE)
+    if cfg.frontend_len:
+        assert extra_embeds is not None, f"{cfg.name} needs frontend embeddings"
+        h = jnp.concatenate([extra_embeds.astype(COMPUTE), h], axis=1)
+    return constrain(h, ("batch", None, None))
+
+
+def chunked_ce_loss(h, lm_head, labels, mask, chunk: int = 1024):
+    """Cross-entropy without materializing (T, vocab) logits: scan over
+    sequence chunks, fp32 log-softmax, remat'd so backward recomputes."""
+    B, L, d = h.shape
+    chunk = layers._largest_divisor(L, min(chunk, L))
+    nc = L // chunk
+    hc = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        hh, yy, mm = xs
+        logits = constrain(
+            (hh @ lm_head).astype(jnp.float32), ("batch", None, "model")
+        )
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yy[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return (carry[0] + nll.sum(), carry[1] + mm.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())), (hc, yc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch, aux_weight: float = 0.01):
+    """batch: dict(tokens (B,L) int32, labels (B,L) int32, extra_embeds?).
+
+    Frontend positions (if any) carry no loss.
+    """
+    tokens = batch["tokens"]
+    h = embed_inputs(params, cfg, tokens, batch.get("extra_embeds"))
+    B, L, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+    hidden, aux = backbone(params, cfg, h, positions)
+    labels = batch["labels"]
+    mask = jnp.ones_like(labels, jnp.float32)
+    if cfg.frontend_len:  # prepend ignore for frontend positions
+        pad_lab = jnp.zeros((B, cfg.frontend_len), labels.dtype)
+        labels = jnp.concatenate([pad_lab, labels], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, cfg.frontend_len), jnp.float32), mask], axis=1
+        )
+    ce = chunked_ce_loss(hidden, params["lm_head"].astype(COMPUTE), labels, mask)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ------------------------------------------------------------------- serve
+class DecodeState(NamedTuple):
+    """Per-pattern-position caches, each stacked over n_super blocks."""
+
+    caches: Tuple[Any, ...]   # attn: dict(k, v); mamba: dict(conv, ssm)
+    pos: jax.Array            # current length (scalar int32)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> DecodeState:
+    caches = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            shp = (cfg.n_super, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+            caches.append(
+                {"k": jnp.zeros(shp, COMPUTE), "v": jnp.zeros(shp, COMPUTE)}
+            )
+        else:
+            conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+            caches.append(
+                {
+                    "conv": jnp.zeros(
+                        (cfg.n_super, batch, cfg.ssm_conv - 1, conv_dim), COMPUTE
+                    ),
+                    "ssm": jnp.zeros(
+                        (cfg.n_super, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                        jnp.float32,
+                    ),
+                }
+            )
+    return DecodeState(caches=tuple(caches), pos=jnp.zeros((), jnp.int32))
+
+
+def _mixer_decode(h, p, spec, cfg, cache, pos):
+    """One-token mixer with cache update.  h: (B, 1, d)."""
+    B = h.shape[0]
+    if spec.mixer == "attn":
+        q = (h @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = (h @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = layers.rms_norm(q, p["q_norm"])
+            k = layers.rms_norm(k, p["k_norm"])
+        posb = jnp.full((B, 1), pos, jnp.int32)
+        q = layers.apply_rope(q, posb, cfg.rope_theta)
+        k = layers.apply_rope(k, posb, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        o = layers.decode_attention(q, kc, vc, pos + 1)
+        out = o.reshape(B, 1, cfg.n_heads * cfg.head_dim) @ p["wo"]
+        return out, {"k": kc, "v": vc}
+    out, new_state = layers.mamba_mixer(h, p, cfg, state=cache)
+    return out, new_state
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: DecodeState, tokens):
+    """tokens: (B, 1) -> (logits (B, vocab), new state)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(COMPUTE)
+    pos = state.pos
+
+    def body(carry, xs):
+        h = carry
+        blk_params, caches = xs
+        blk_params = _cast_tree(blk_params)
+        new_caches = []
+        for j, spec in enumerate(cfg.pattern):
+            p = blk_params[j]
+            mix, nc = _mixer_decode(
+                layers.rms_norm(h, p["norm1"]), p, spec, cfg, caches[j], pos
+            )
+            h = h + mix
+            new_caches.append(nc)
+            if spec.ffn != "none":
+                f, _ = _ffn(layers.rms_norm(h, p["norm2"]), p, spec, cfg)
+                h = h + f
+        return h, tuple(new_caches)
+
+    h, new_caches = jax.lax.scan(body, h, (params["blocks"], state.caches))
+    h = layers.rms_norm(h, params["final_norm"])
+    logits = (h[:, 0, :] @ params["lm_head"].astype(COMPUTE)).astype(jnp.float32)
+    return logits, DecodeState(caches=new_caches, pos=pos + 1)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, max_len: int,
+            extra_embeds=None):
+    """Batched prompt ingestion: returns (last-token logits, DecodeState)."""
+    h = embed_inputs(params, cfg, tokens, extra_embeds)
+    B, L, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(L)[None, :], (B, L))
+
+    def body(carry, blk_params):
+        h = carry
+        blk_params = _cast_tree(blk_params)
+        caches = []
+        for j, spec in enumerate(cfg.pattern):
+            p = blk_params[j]
+            hn = layers.rms_norm(h, p["norm1"])
+            if spec.mixer == "attn":
+                q = (hn @ p["wq"]).reshape(B, L, cfg.n_heads, cfg.head_dim)
+                k = (hn @ p["wk"]).reshape(B, L, cfg.n_kv_heads, cfg.head_dim)
+                v = (hn @ p["wv"]).reshape(B, L, cfg.n_kv_heads, cfg.head_dim)
+                if cfg.qk_norm:
+                    q = layers.rms_norm(q, p["q_norm"])
+                    k = layers.rms_norm(k, p["k_norm"])
+                q = layers.apply_rope(q, positions, cfg.rope_theta)
+                k = layers.apply_rope(k, positions, cfg.rope_theta)
+                o = layers.flash_attention(
+                    q, k, v, causal=True, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+                )
+                h = h + o.reshape(B, L, cfg.n_heads * cfg.head_dim) @ p["wo"]
+                pad = max_len - L
+                kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(COMPUTE)
+                vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(COMPUTE)
+                caches.append({"k": kc, "v": vc})
+            else:
+                mix, st = layers.mamba_mixer(hn, p, cfg, return_state=True)
+                h = h + mix
+                caches.append(
+                    {"conv": st["conv"].astype(COMPUTE), "ssm": st["ssm"]}
+                )
+            if spec.ffn != "none":
+                f, _ = _ffn(layers.rms_norm(h, p["norm2"]), p, spec, cfg)
+                h = h + f
+        return h, tuple(caches)
+
+    h, caches = jax.lax.scan(body, h, params["blocks"])
+    h = layers.rms_norm(h, params["final_norm"])
+    logits = (h[:, -1, :] @ params["lm_head"].astype(COMPUTE)).astype(jnp.float32)
+    return logits, DecodeState(caches=caches, pos=jnp.asarray(L, jnp.int32))

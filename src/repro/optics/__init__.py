@@ -1,0 +1,7 @@
+from .interconnect import (  # noqa: F401
+    FabricState,
+    LinkHealth,
+    bringup,
+    expected_failure_rates,
+    rearbitrate,
+)

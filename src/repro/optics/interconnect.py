@@ -1,0 +1,181 @@
+"""Optical interconnect runtime: wavelength arbitration as the first-class
+link-initialization feature of the multi-pod fabric (DESIGN.md §2).
+
+Every inter-pod edge of the production mesh is a bundle of microring DWDM
+transceivers (paper §II).  Bring-up runs the wavelength-oblivious arbiter
+(VT-RS/SSM by default) on every transceiver; outcomes become `LinkHealth`:
+
+  * usable lanes  (zero/dup-locked channels are dead lanes)
+  * spectral ordering + the barrel-shift remap cost (LtC) feeding the
+    port-remapper config (paper §II-A)
+  * effective per-link bandwidth, consumed by the collective scheduler and
+    the roofline collective term
+
+Failures do not kill the job: LtC re-arbitration (barrel shift) runs
+in-place; persistent lane loss degrades bandwidth and triggers straggler
+mitigation instead (runtime/trainer.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ArbitrationConfig,
+    classify,
+    evaluate_scheme,
+    make_units,
+    oblivious_arbitrate,
+)
+from repro.core import ideal
+from repro.core.sampling import instantiate
+
+LINK_GBPS_PER_LANE = 6.25  # 50 Gb/s/lane optical -> 6.25 GB/s
+
+
+@dataclasses.dataclass
+class LinkHealth:
+    src_pod: int
+    dst_pod: int
+    transceiver: int
+    lanes_total: int
+    lanes_up: int
+    spectral_shift: int          # LtC barrel shift c (remap cost metric)
+    failure: Optional[str]       # None | zero_lock | dup_lock | order_err
+
+    @property
+    def bandwidth_gbps(self) -> float:
+        return self.lanes_up * LINK_GBPS_PER_LANE
+
+    @property
+    def degraded(self) -> bool:
+        return self.lanes_up < self.lanes_total
+
+
+@dataclasses.dataclass
+class FabricState:
+    links: List[LinkHealth]
+    scheme: str
+    tr_mean: float
+
+    @property
+    def min_link_bandwidth(self) -> float:
+        return min(l.bandwidth_gbps for l in self.links) if self.links else 0.0
+
+    @property
+    def bandwidth_fraction(self) -> float:
+        """Worst-link usable-lane fraction — scales the roofline collective
+        term for cross-pod traffic."""
+        if not self.links:
+            return 1.0
+        return min(l.lanes_up / l.lanes_total for l in self.links)
+
+    def degraded_links(self) -> List[LinkHealth]:
+        return [l for l in self.links if l.degraded]
+
+
+def _arbitrate_batch(cfg: ArbitrationConfig, seed: int, n_links: int,
+                     tr_mean: float, scheme: str):
+    """Run the oblivious arbiter on n_links sampled transceivers at once
+    (each link draws an independent laser x ring-row pair)."""
+    units = make_units(cfg, seed=seed, n_laser=n_links, n_ring=1)
+    # cross product gives n_links trials (one ring row per laser here);
+    # re-draw rings per link for full independence
+    units2 = make_units(cfg, seed=seed + 1, n_laser=1, n_ring=n_links)
+    units = units._replace(u_rlv=units2.u_rlv, u_fsr=units2.u_fsr, u_tr=units2.u_tr)
+    sys = instantiate(cfg, units)
+    assign = oblivious_arbitrate(cfg, sys, tr_mean, scheme)
+    out = classify(assign, jnp.asarray(cfg.s), policy="ltc")
+    shift = (assign.wl[:, 0] - jnp.asarray(cfg.s)[0]) % cfg.grid.n_ch
+    return out, np.asarray(shift), np.asarray(assign.wl)
+
+
+def bringup(
+    pods: int,
+    links_per_pod_pair: int,
+    cfg: ArbitrationConfig,
+    *,
+    tr_mean: float = 8.96,
+    scheme: str = "vtrs_ssm",
+    seed: int = 0,
+) -> FabricState:
+    """Arbitrate every inter-pod transceiver; returns fabric health."""
+    links: List[LinkHealth] = []
+    pairs = [(a, b) for a in range(pods) for b in range(pods) if a < b]
+    for pi, (a, b) in enumerate(pairs):
+        out, shift, wl = _arbitrate_batch(
+            cfg, seed + 101 * pi, links_per_pod_pair, tr_mean, scheme
+        )
+        succ = np.asarray(out.success)
+        zl = np.asarray(out.zero_lock)
+        dl = np.asarray(out.dup_lock)
+        oe = np.asarray(out.order_err)
+        for t in range(links_per_pod_pair):
+            if succ[t]:
+                lanes_up, fail = cfg.grid.n_ch, None
+            else:
+                # lanes that did lock a unique line still carry data;
+                # order errors cost remap but keep lanes alive.
+                lanes = wl[t]
+                good = len({int(k) for k in lanes if k >= 0})
+                dup_loss = len([k for k in lanes if k >= 0]) - good
+                lanes_up = max(0, good - dup_loss)
+                fail = (
+                    "zero_lock" if zl[t] else
+                    "dup_lock" if dl[t] else
+                    "order_err" if oe[t] else None
+                )
+                if fail == "order_err":
+                    lanes_up = cfg.grid.n_ch  # crossbar remap, no lane loss
+            links.append(
+                LinkHealth(
+                    src_pod=a, dst_pod=b, transceiver=t,
+                    lanes_total=cfg.grid.n_ch, lanes_up=int(lanes_up),
+                    spectral_shift=int(shift[t]), failure=fail,
+                )
+            )
+    return FabricState(links=links, scheme=scheme, tr_mean=tr_mean)
+
+
+def rearbitrate(state: FabricState, cfg: ArbitrationConfig, *, seed: int,
+                max_rounds: int = 3) -> Tuple[FabricState, int]:
+    """Re-run arbitration on degraded links (fresh thermal state => fresh
+    draw).  Returns (new_state, rounds_used)."""
+    rounds = 0
+    links = list(state.links)
+    for r in range(max_rounds):
+        degraded = [i for i, l in enumerate(links) if l.degraded]
+        if not degraded:
+            break
+        rounds += 1
+        out, shift, wl = _arbitrate_batch(
+            cfg, seed + 31 * r, len(degraded), state.tr_mean, state.scheme
+        )
+        succ = np.asarray(out.success)
+        for j, i in enumerate(degraded):
+            if succ[j]:
+                l = links[i]
+                links[i] = dataclasses.replace(
+                    l, lanes_up=l.lanes_total, spectral_shift=int(shift[j]),
+                    failure=None,
+                )
+    return FabricState(links=links, scheme=state.scheme, tr_mean=state.tr_mean), rounds
+
+
+def expected_failure_rates(cfg: ArbitrationConfig, tr_mean: float,
+                           scheme: str = "vtrs_ssm", seed: int = 0,
+                           n: int = 64) -> Dict[str, float]:
+    """Fleet-planning numbers: AFP (policy yield) and CAFP (algorithmic) at
+    the deployed operating point — the paper's metrics, evaluated on the
+    deployment config."""
+    units = make_units(cfg, seed=seed, n_laser=n, n_ring=n)
+    r = evaluate_scheme(cfg, units, scheme, tr_mean)
+    return {
+        "afp": float(r.afp),
+        "cafp": float(r.cafp),
+        "total_failure": float(r.afp + r.cafp),
+    }

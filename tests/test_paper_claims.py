@@ -1,0 +1,104 @@
+"""Validation of the paper's headline claims against our implementation
+(EXPERIMENTS.md §Repro).  Monte-Carlo sizes are CPU-scaled; the full-size
+runs live in benchmarks/ (--full)."""
+import numpy as np
+import pytest
+
+from repro.configs.wdm import WDM8_G200
+from repro.core import evaluate_scheme, make_units, policy_min_tr
+
+
+@pytest.fixture(scope="module")
+def units():
+    return make_units(WDM8_G200, seed=42, n_laser=32, n_ring=32)
+
+
+def test_vt_rs_ssm_tracks_ideal(units):
+    """Fig. 14: VT-RS/SSM closely approximates ideal LtC arbitration."""
+    for tr in (3.0, 5.0, 7.0, 8.96):
+        r = evaluate_scheme(WDM8_G200, units, "vtrs_ssm", tr)
+        assert float(r.cafp) <= 0.01, tr
+
+
+def test_schemes_beat_sequential(units):
+    """Fig. 14: proposed schemes outperform sequential tuning everywhere."""
+    for tr in (4.0, 6.0, 8.0):
+        seq = float(evaluate_scheme(WDM8_G200, units, "seq", tr).cafp)
+        rs = float(evaluate_scheme(WDM8_G200, units, "rs_ssm", tr).cafp)
+        vt = float(evaluate_scheme(WDM8_G200, units, "vtrs_ssm", tr).cafp)
+        assert vt <= rs + 1e-6
+        assert rs < seq
+        assert seq > 0.3  # the baseline really does fail on most trials
+
+
+def test_rs_ssm_errors_at_large_tr(units):
+    """Fig. 14: RS/SSM residual errors appear around TR ~ 8 nm (10% TR
+    variation corrupts Lock-to-Last relation searches)."""
+    lo = float(evaluate_scheme(WDM8_G200, units, "rs_ssm", 4.0).cafp)
+    hi = float(evaluate_scheme(WDM8_G200, units, "rs_ssm", 8.0).cafp)
+    assert hi > lo
+
+
+def test_ltc_ramp_slope_two(units):
+    """§IV-A: min tuning range ramps at slope ~2 in sigma_rLV for LtC."""
+    rlvs = np.array([0.28, 0.56, 1.12, 1.68])
+    mt = [float(policy_min_tr(WDM8_G200, units, "ltc", sigma_rlv=float(s)))
+          for s in rlvs]
+    slope = np.polyfit(rlvs, mt, 1)[0]
+    assert 1.5 <= slope <= 2.5, slope
+
+
+def test_ltd_slope_one_and_impractical(units):
+    """§IV-B: LtD ramps at slope ~1; grid offsets >= 4 nm push the
+    requirement beyond the FSR."""
+    rlvs = np.array([0.28, 0.56, 1.12, 2.24])
+    mt = [float(policy_min_tr(WDM8_G200, units, "ltd",
+                              sigma_rlv=float(s), sigma_go=0.0))
+          for s in rlvs]
+    slope = np.polyfit(rlvs, mt, 1)[0]
+    assert 0.7 <= slope <= 1.4, slope
+    mt4 = float(policy_min_tr(WDM8_G200, units, "ltd", sigma_go=4.0))
+    assert mt4 > WDM8_G200.grid.fsr
+
+
+def test_ordering_invariance_of_ideal_min_tr(units):
+    """§IV-A: pre-fab/post-arb ordering choice does not change the ideal
+    minimum tuning range (N/N vs P/P)."""
+    for policy in ("lta", "ltc"):
+        nat = float(policy_min_tr(WDM8_G200.with_orders("natural"),
+                                  units, policy))
+        per = float(policy_min_tr(WDM8_G200.with_orders("permuted"),
+                                  units, policy))
+        assert abs(nat - per) / nat < 0.15, (policy, nat, per)
+
+
+def test_fsr_design_guideline(units):
+    """§IV-D: the nominal FSR (N_ch * gS) is near-optimal; under-design
+    degrades sharply, over-design gradually."""
+    mt_nom = float(policy_min_tr(WDM8_G200, units, "ltc", fsr_mean=8.96))
+    mt_under = float(policy_min_tr(WDM8_G200, units, "ltc", fsr_mean=6.72))
+    mt_over = float(policy_min_tr(WDM8_G200, units, "ltc", fsr_mean=15.68))
+    assert mt_under > mt_nom + 0.5
+    assert mt_over > mt_nom + 0.5
+
+
+def test_policy_tuning_range_ordering(units):
+    """Fig. 4: LtA needs the least tuning range, then LtC, then LtD."""
+    lta = float(policy_min_tr(WDM8_G200, units, "lta"))
+    ltc = float(policy_min_tr(WDM8_G200, units, "ltc"))
+    ltd = float(policy_min_tr(WDM8_G200, units, "ltd"))
+    assert lta <= ltc <= ltd
+
+
+def test_beyond_lta_oblivious_arbiter(units):
+    """Beyond-paper (§V-E future work): the oblivious LtA arbiter
+    (sequential-retry + depth-1 augmenting) far outperforms naive
+    sequential against the ideal LtA matcher, and is near-exact at the
+    operating extremes."""
+    lo = float(evaluate_scheme(WDM8_G200, units, "seq_retry", 2.0).cafp)
+    hi = float(evaluate_scheme(WDM8_G200, units, "seq_retry", 8.96).cafp)
+    mid = float(evaluate_scheme(WDM8_G200, units, "seq_retry", 4.0).cafp)
+    assert lo <= 0.05 and hi <= 0.05
+    # mid-TR starvation gap persists but stays far below the naive
+    # baseline's ~0.9 failure plateau; documented in EXPERIMENTS.
+    assert mid <= 0.6

@@ -1,0 +1,127 @@
+"""Hypothesis property tests on system-level arbitration invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ArbitrationConfig, DWDMGrid, VariationModel, make_units
+from repro.core import ideal
+from repro.core.sampling import instantiate
+from repro.core.reach import tuning_residual
+from repro.core.search_table import build_search_tables
+from repro.core.relation import chain_spec, relation_search
+from repro.core.ssm import single_step_matching
+from repro.core.outcomes import classify
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _cfg(n_ch, sigma_rlv, sigma_go, order_kind):
+    grid = DWDMGrid(n_ch=n_ch)
+    var = VariationModel(sigma_rlv=sigma_rlv, sigma_go=sigma_go)
+    return ArbitrationConfig(grid=grid, var=var).with_orders(order_kind)
+
+
+@given(
+    n_ch=st.sampled_from([4, 8]),
+    sigma_rlv=st.floats(0.0, 6.0),
+    sigma_go=st.floats(0.0, 15.0),
+    order_kind=st.sampled_from(["natural", "permuted"]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_residual_bounds(n_ch, sigma_rlv, sigma_go, order_kind, seed):
+    """The tuning residual is a red-shift within one FSR."""
+    cfg = _cfg(n_ch, sigma_rlv, sigma_go, order_kind)
+    sys = instantiate(cfg, make_units(cfg, seed, 3, 3))
+    res = np.asarray(tuning_residual(sys))
+    fsr = np.asarray(sys.fsr)[:, :, None]
+    assert np.all(res >= 0.0)
+    assert np.all(res < fsr + 1e-5)
+
+
+@given(
+    n_ch=st.sampled_from([4, 8]),
+    sigma_rlv=st.floats(0.0, 6.0),
+    sigma_go=st.floats(0.0, 15.0),
+    order_kind=st.sampled_from(["natural", "permuted"]),
+    seed=st.integers(0, 2**16),
+)
+@settings(**SETTINGS)
+def test_policy_nesting(n_ch, sigma_rlv, sigma_go, order_kind, seed):
+    """LtD success => LtC success => LtA success (enforcement inclusion)."""
+    cfg = _cfg(n_ch, sigma_rlv, sigma_go, order_kind)
+    sys = instantiate(cfg, make_units(cfg, seed, 3, 3))
+    s = jnp.asarray(cfg.s)
+    lta = np.asarray(ideal.lta_min_tr(sys))
+    ltc = np.asarray(ideal.ltc_min_tr(sys, s))
+    ltd = np.asarray(ideal.ltd_min_tr(sys, s))
+    assert np.all(lta <= ltc + 1e-5)
+    assert np.all(ltc <= ltd + 1e-5)
+
+
+@given(seed=st.integers(0, 2**16), shift_mult=st.integers(1, 3))
+@settings(**SETTINGS)
+def test_barrel_shift_invariance(seed, shift_mult):
+    """Grid offsets of exact multiples of the grid spacing are cancelled by
+    cyclic reordering for LtC/LtA (paper §IV-C, Fig. 7(a)) when FSR has no
+    variation, FSR == N * spacing, and laser lines sit on the exact grid
+    (local laser variation breaks per-trial exactness, leaving only the
+    statistical flatness the paper reports)."""
+    grid = DWDMGrid(n_ch=8)
+    var = VariationModel(sigma_fsr_frac=0.0, sigma_go=0.0, sigma_llv_frac=0.0)
+    cfg = ArbitrationConfig(grid=grid, var=var)
+    units = make_units(cfg, seed, 4, 4)
+    base = instantiate(cfg, units)
+    shifted = base._replace(laser=base.laser + shift_mult * grid.grid_spacing)
+    s = jnp.asarray(cfg.s)
+    np.testing.assert_allclose(
+        np.asarray(ideal.ltc_min_tr(base, s)),
+        np.asarray(ideal.ltc_min_tr(shifted, s)),
+        atol=2e-4,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ideal.lta_min_tr(base)),
+        np.asarray(ideal.lta_min_tr(shifted)),
+        atol=2e-4,
+    )
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    tr_mean=st.floats(1.5, 10.0),
+    order_kind=st.sampled_from(["natural", "permuted"]),
+)
+@settings(**SETTINGS)
+def test_ssm_assignment_physical(seed, tr_mean, order_kind):
+    """Whatever SSM assigns must be physically lockable: the tuning distance
+    is within the ring's actual tuning range, and the line id valid."""
+    cfg = ArbitrationConfig().with_orders(order_kind)
+    sys = instantiate(cfg, make_units(cfg, seed, 4, 4))
+    tables = build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    spec = chain_spec(cfg.s)
+    ri = relation_search(tables, spec, variation_tolerant=True)
+    asg = single_step_matching(tables, ri, spec)
+    wl = np.asarray(asg.wl)
+    delta = np.asarray(asg.delta)
+    tr = tr_mean * np.asarray(sys.tr_unit)
+    locked = wl >= 0
+    assert np.all(delta[locked] <= tr[locked] + 1e-5)
+    assert np.all(wl[locked] < cfg.grid.n_ch)
+
+
+@given(seed=st.integers(0, 2**16), tr_mean=st.floats(2.0, 9.0))
+@settings(**SETTINGS)
+def test_oblivious_success_implies_ideal_when_anchored(seed, tr_mean):
+    """An LtC-classified success of the oblivious algorithm is a valid cyclic
+    assignment — therefore the ideal LtC arbiter must also succeed."""
+    cfg = ArbitrationConfig()
+    sys = instantiate(cfg, make_units(cfg, seed, 4, 4))
+    s = jnp.asarray(cfg.s)
+    tables = build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    spec = chain_spec(cfg.s)
+    ri = relation_search(tables, spec, variation_tolerant=True)
+    asg = single_step_matching(tables, ri, spec)
+    out = classify(asg, s, policy="ltc")
+    ideal_ok = np.asarray(ideal.ltc_min_tr(sys, s) <= tr_mean)
+    alg_ok = np.asarray(out.success)
+    assert not np.any(alg_ok & ~ideal_ok)

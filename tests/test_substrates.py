@@ -1,0 +1,130 @@
+"""Substrate tests: data pipeline, checkpoint store, optimizer, optics
+fabric, and a small end-to-end fault-tolerant training run on host devices."""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import store
+from repro.configs import get_smoke
+from repro.configs.wdm import WDM8_G200
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed import sharding, steps
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.optics import bringup, expected_failure_rates, rearbitrate
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def test_pipeline_determinism_and_shapes():
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=4, seed=3)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1, b2 = next(iter(p1)), next(iter(p2))
+    p1.close()
+    p2.close()
+    assert b1["tokens"].shape == (4, 16)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 128
+
+
+def test_pipeline_host_sharding():
+    full = DataConfig(vocab=64, seq_len=8, global_batch=4, seed=9)
+    b_full = next(iter(TokenPipeline(full)))
+    h0 = DataConfig(vocab=64, seq_len=8, global_batch=4, seed=9, n_hosts=2, host_id=0)
+    b0 = next(iter(TokenPipeline(h0)))
+    assert b0["tokens"].shape == (2, 8)
+
+
+def test_checkpoint_roundtrip_and_gc():
+    tree = {
+        "w": jnp.arange(24.0).reshape(4, 6),
+        "blocks": [{"a": jnp.ones((2, 3))}],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            store.save(d, s, tree, keep=2)
+        assert store.latest_step(d) == 5
+        kept = sorted(p.name for p in Path(d).iterdir())
+        assert len(kept) == 2
+        out = store.restore(d, 5, jax.eval_shape(lambda: tree))
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_adamw_decreases_quadratic():
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=0, decay_steps=100,
+                            weight_decay=0.0)
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = adamw.init(cfg, params)
+    for _ in range(60):
+        grads = {"x": 2 * params["x"]}
+        params, state, stats = adamw.apply(cfg, params, grads, state)
+    assert float(jnp.abs(params["x"]).max()) < 1.0
+    assert np.isfinite(float(stats["grad_norm"]))
+
+
+def test_optics_bringup_and_rearbitration():
+    fab = bringup(pods=2, links_per_pod_pair=8, cfg=WDM8_G200, tr_mean=5.0)
+    assert len(fab.links) == 8
+    assert 0.0 <= fab.bandwidth_fraction <= 1.0
+    fab2, _ = rearbitrate(fab, WDM8_G200, seed=11)
+    assert fab2.bandwidth_fraction >= fab.bandwidth_fraction
+    rates = expected_failure_rates(WDM8_G200, 8.96, n=16)
+    assert rates["cafp"] <= 0.05  # VT-RS/SSM ~ ideal at nominal TR
+
+
+def test_trainer_end_to_end_with_restart():
+    """Two-phase run: train, 'crash', restore from checkpoint, continue —
+    losses finite, checkpoint step honored, fabric arbitrated."""
+    cfg = get_smoke("internlm2-1.8b")
+    mesh = make_host_mesh()
+    opt_cfg = adamw.AdamWConfig(warmup_steps=2, decay_steps=50)
+    params_sh = sharding.param_shardings(cfg, mesh)
+    opt_sh = sharding.opt_shardings(params_sh, sharding.replicated(mesh))
+    step_fn = jax.jit(steps.make_train_step(cfg, opt_cfg, n_microbatch=2),
+                      donate_argnums=(0, 1))
+
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainerConfig(total_steps=6, ckpt_every=3, ckpt_dir=d,
+                             log_every=2, pods=2, links_per_pod_pair=4,
+                             link_failure_prob_per_step=0.5, seed=0)
+        tr = Trainer(cfg, tcfg, opt_cfg, mesh, step_fn, params_sh, opt_sh)
+        fab = tr.bringup_fabric()
+        assert fab is not None and len(fab.links) == 4
+
+        data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                        global_batch=4, seed=1))
+        state = tr.init_state()
+        state = tr.fit(state, iter(data))
+        assert state.step == 6
+        losses = [m["loss"] for m in tr.metrics_log]
+        assert all(np.isfinite(l) for l in losses)
+
+        # "crash" and restart from latest checkpoint: resumes at step 6
+        tr2 = Trainer(cfg, tcfg, opt_cfg, mesh, step_fn, params_sh, opt_sh)
+        state2 = tr2.init_state()
+        assert state2.step == 6
+        data.close()
+
+
+def test_checkpoint_reshard_on_restore():
+    """Elastic restart: a checkpoint written under one sharding restores
+    onto a different mesh layout (pod-count change)."""
+    cfg = get_smoke("internlm2-1.8b")
+    mesh1 = make_host_mesh(model_parallel=1)
+    params = M.init_params(jax.random.key(7), cfg)
+    sh1 = sharding.param_shardings(cfg, mesh1)
+    placed = jax.device_put(params, sh1)
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, 11, placed)
+        # restore under a different (trivially different on 1 CPU, but the
+        # code path exercises slice reassembly + re-placement) sharding
+        mesh2 = make_host_mesh(model_parallel=1)
+        sh2 = sharding.param_shardings(cfg, mesh2)
+        out = store.restore(d, 11, M.param_shapes(cfg), sh2)
+        a = np.asarray(jax.tree.leaves(placed)[0])
+        b = np.asarray(jax.tree.leaves(out)[0])
+        np.testing.assert_allclose(a, b)
