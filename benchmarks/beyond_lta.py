@@ -4,37 +4,39 @@ scored as CAFP against the ideal LtA perfect-matching arbiter.
 
 Finding: retry+augment closes most of the naive-greedy gap at the extremes
 but mid-TR starvation needs multi-hop augmenting (an O(N^3)-probe
-protocol) — quantitative evidence for why the paper deferred LtA."""
+protocol) — quantitative evidence for why the paper deferred LtA.
+
+The TR axis is one jitted sweep-engine call."""
 from __future__ import annotations
+
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import evaluate_scheme, make_units
+from repro.core import make_units, sweep_scheme
 
-from .common import n_samples, tr_sweep
+from .common import n_samples, timed_steady, tr_sweep
 
 
 def run(full: bool = False):
     n = n_samples(full)
     units = make_units(WDM8_G200, seed=21, n_laser=n, n_ring=n)
     trs = tr_sweep()
-    rows = []
-    afp, cafp = [], []
-    for tr in trs:
-        r = evaluate_scheme(WDM8_G200, units, "seq_retry", float(tr))
-        afp.append(round(float(r.afp), 4))
-        cafp.append(round(float(r.cafp), 4))
-    rows.append(
+    res, engine_ms = timed_steady(
+        sweep_scheme, WDM8_G200, units, "seq_retry", {"tr_mean": trs}
+    )
+    afp = [round(float(v), 4) for v in np.asarray(res.afp)]
+    cafp = [round(float(v), 4) for v in np.asarray(res.cafp)]
+    return [
         (
             "beyond/lta_seq_retry_augment",
             {
                 "tr": trs.tolist(),
                 "afp_lta_ideal": afp,
                 "cafp_vs_ideal_lta": cafp,
+                "engine_ms": round(engine_ms, 1),
                 "note": "zero-lock starvation dominates residual CAFP; "
                         "multi-hop augmenting required for ideal parity",
             },
         )
-    )
-    return rows
+    ]

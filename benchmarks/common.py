@@ -29,9 +29,42 @@ def timed(fn: Callable, *args, **kw):
     return out, (time.time() - t0) * 1e6
 
 
+def timed_steady(fn: Callable, *args, **kw):
+    """(result, steady_ms): first call warms the jit cache, second is timed.
+
+    Keeps ``engine_ms`` comparable across figures and commits in the
+    BENCH_*.json trajectory — compile time is excluded everywhere.
+    """
+    import jax
+
+    out = jax.block_until_ready(fn(*args, **kw))
+    t0 = time.time()
+    jax.block_until_ready(fn(*args, **kw))
+    return out, (time.time() - t0) * 1e3
+
+
 def emit(rows: List[Tuple[str, float, Dict]]):
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{json.dumps(derived, default=float)}")
+
+
+def write_json(path: str, records: List[Dict], *, full: bool) -> None:
+    """Machine-readable benchmark output (seed for BENCH_*.json tracking).
+
+    records: [{"figure": module, "name": row, "module_wall_ms": wall-time of
+    the row's whole module, "derived": {...}}].  Schema version bumps on
+    layout changes.
+    """
+    payload = {
+        "schema": "bench.v1",
+        "generated": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "full": full,
+        "trials_per_point": n_samples(full) ** 2,
+        "records": records,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+        f.write("\n")
 
 
 def tr_sweep(n_ch: int = 8, spacing: float = 1.12) -> np.ndarray:

@@ -74,3 +74,34 @@ def run(full: bool = False):
     )
     rows.append(("kernel/interpret_parity", {"pass": parity}))
     return rows
+
+
+def main() -> None:
+    """Standalone entry: ``python -m benchmarks.kernel_bench --json kb.json``."""
+    import argparse
+
+    from .common import write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="OUT")
+    args = ap.parse_args()
+    t0 = time.time()
+    rows = run(full=args.full)
+    wall_ms = (time.time() - t0) * 1e3
+    for name, derived in rows:
+        print(name, derived)
+    if args.json_out:
+        write_json(
+            args.json_out,
+            [
+                {"figure": "kernel_bench", "name": name,
+                 "module_wall_ms": round(wall_ms, 1), "derived": derived}
+                for name, derived in rows
+            ],
+            full=args.full,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,14 @@
 """Benchmark driver: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (derived = paper-comparable values)."""
+Prints ``name,us_per_call,derived`` CSV (derived = paper-comparable values);
+``--json out.json`` additionally writes the per-figure wall-times and derived
+metrics machine-readably (the seed for BENCH_*.json trajectory tracking)."""
 from __future__ import annotations
 
 import argparse
 import json
 import time
+
+from .common import write_json
 
 
 def main() -> None:
@@ -12,6 +16,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-size Monte Carlo (100x100 trials)")
     ap.add_argument("--only", default=None, help="substring filter")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
+                    help="also write machine-readable results to OUT")
     args = ap.parse_args()
 
     from . import (
@@ -42,15 +48,27 @@ def main() -> None:
         beyond_lta,
     ]
     print("name,us_per_call,derived")
+    records = []
     for mod in modules:
         mod_name = mod.__name__.rsplit(".", 1)[-1]
         if args.only and args.only not in mod_name:
             continue
         t0 = time.time()
         rows = mod.run(full=args.full)
-        us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+        wall_ms = (time.time() - t0) * 1e3
+        us = wall_ms * 1e3 / max(len(rows), 1)
         for name, derived in rows:
             print(f"{name},{us:.0f},{json.dumps(derived, default=float)}")
+            records.append(
+                {
+                    "figure": mod_name,
+                    "name": name,
+                    "module_wall_ms": round(wall_ms, 1),
+                    "derived": derived,
+                }
+            )
+    if args.json_out:
+        write_json(args.json_out, records, full=args.full)
 
 
 if __name__ == "__main__":

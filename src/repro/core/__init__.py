@@ -22,12 +22,23 @@ from .reach import reach_matrix, scaled_residual, tuning_residual  # noqa: F401
 from .api import (  # noqa: F401
     SCHEMES,
     EvalResult,
+    SchemeSpec,
     evaluate_policy,
     evaluate_scheme,
     make_units,
     oblivious_arbitrate,
     policy_min_tr,
+    register_scheme,
+    registered_schemes,
+    scheme_spec,
     shmoo,
+)
+from .sweep import (  # noqa: F401
+    sweep_grid,
+    sweep_grid_reference,
+    sweep_min_tr,
+    sweep_policy,
+    sweep_scheme,
 )
 from .outcomes import Outcome, classify  # noqa: F401
 from .ssm import Assignment  # noqa: F401

@@ -3,12 +3,18 @@ optics runtime and the examples.
 
 All heavy functions are jitted with the (hashable, frozen) ArbitrationConfig
 static; sigma values and tuning ranges are traced scalars so parameter sweeps
-reuse one compilation.
+reuse one compilation.  The un-jitted ``*_impl`` bodies are exported for the
+sweep engine (``repro.core.sweep``), which vmaps them over whole sigma x TR
+grids inside a single jit.
+
+Schemes are pluggable: ``register_scheme`` adds a wavelength-oblivious
+arbiter to the dispatch registry used by ``oblivious_arbitrate`` and
+``evaluate_scheme`` — no core edits needed to experiment with a new scheme.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -16,36 +22,139 @@ import numpy as np
 
 from . import ideal, metrics
 from .grid import ArbitrationConfig
+from .matching import adjacency_bitmask
 from .outcomes import Outcome, classify
-from .relation import chain_spec, relation_search
+from .reach import reach_matrix
+from .relation import ChainSpec, chain_spec, relation_search
 from .sampling import SystemBatch, UnitSamples, draw_unit_samples, instantiate
 from .lta_retry import sequential_retry
-from .search_table import build_search_tables
+from .search_table import SearchTables, build_search_tables
 from .sequential import sequential_tuning
 from .ssm import Assignment, single_step_matching
 
-SCHEMES = ("seq", "rs_ssm", "vtrs_ssm", "seq_retry")
-SCHEME_POLICY = {"seq": "ltc", "rs_ssm": "ltc", "vtrs_ssm": "ltc",
-                 "seq_retry": "lta"}
+# An arbiter maps (cfg, tables, spec) -> Assignment using only oblivious
+# primitives (entry indices and masking events; never wavelength values).
+Arbiter = Callable[[ArbitrationConfig, SearchTables, ChainSpec], Assignment]
+
+
+class SchemeSpec(NamedTuple):
+    """Registry record for a wavelength-oblivious arbitration scheme."""
+
+    name: str
+    arbiter: Arbiter
+    policy: str  # conditioning ideal policy for CAFP: "ltc" | "lta" | "ltd"
+
+
+_SCHEME_REGISTRY: dict[str, SchemeSpec] = {}
+
+
+def register_scheme(name: str, arbiter: Arbiter, *, policy: str = "ltc") -> SchemeSpec:
+    """Register an oblivious arbitration scheme under ``name``.
+
+    ``policy`` selects the ideal arbiter the scheme is scored against (CAFP
+    conditioning event).  Registered names are accepted everywhere a scheme
+    string is: ``oblivious_arbitrate``, ``evaluate_scheme`` and the sweep
+    engine.  Names are jit-static cache keys, so re-binding a name after it
+    has been evaluated would silently serve stale compiled code — duplicate
+    registration is therefore an error; pick a fresh name to iterate.
+    """
+    if name in _SCHEME_REGISTRY:
+        raise ValueError(f"scheme {name!r} already registered")
+    if policy not in ("ltd", "ltc", "lta"):
+        raise ValueError(f"unknown conditioning policy {policy!r}")
+    spec = SchemeSpec(name=name, arbiter=arbiter, policy=policy)
+    _SCHEME_REGISTRY[name] = spec
+    return spec
+
+
+def scheme_spec(name: str) -> SchemeSpec:
+    try:
+        return _SCHEME_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {registered_schemes()}"
+        ) from None
+
+
+def registered_schemes() -> tuple[str, ...]:
+    return tuple(_SCHEME_REGISTRY)
+
+
+register_scheme("seq", lambda cfg, tables, spec: sequential_tuning(tables, spec))
+register_scheme(
+    "rs_ssm",
+    lambda cfg, tables, spec: single_step_matching(
+        tables, relation_search(tables, spec, variation_tolerant=False), spec
+    ),
+)
+register_scheme(
+    "vtrs_ssm",
+    lambda cfg, tables, spec: single_step_matching(
+        tables, relation_search(tables, spec, variation_tolerant=True), spec
+    ),
+)
+# beyond-paper oblivious LtA (§V-E future work)
+register_scheme(
+    "seq_retry", lambda cfg, tables, spec: sequential_retry(tables), policy="lta"
+)
+
+# Back-compat module-level views (the built-in schemes; later registrations
+# are visible through registered_schemes()/scheme_spec()).
+SCHEMES = registered_schemes()
+SCHEME_POLICY = {n: s.policy for n, s in _SCHEME_REGISTRY.items()}
+
+
+def _build_tables(cfg, sys: SystemBatch, tr_mean, backend: str | None):
+    """Search tables via core jnp (backend=None) or the kernel wrappers."""
+    if backend is None:
+        return build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    from repro.kernels import ops  # local import: kernels layer is optional
+
+    delta, wl, nv = ops.build_tables(
+        sys.laser, sys.ring, sys.fsr, tr_mean * sys.tr_unit,
+        max_alias=cfg.max_fsr_alias, backend=backend,
+    )
+    return SearchTables(delta=delta, wl=wl, n_valid=nv)
+
+
+def _ideal_min_tr(cfg, sys: SystemBatch, policy: str, backend: str | None):
+    """(T,) per-trial ideal minimum mean TR, optionally via the kernels."""
+    if backend is None or policy == "lta":
+        return ideal.min_tr(sys, policy, jnp.asarray(cfg.s))
+    from repro.kernels import ops
+
+    ltd, ltc = ops.feasibility(
+        sys.laser, sys.ring, sys.fsr, sys.tr_unit,
+        s=tuple(int(v) for v in cfg.s), backend=backend,
+    )
+    return ltd if policy == "ltd" else ltc
+
+
+def _ideal_success(cfg, sys: SystemBatch, policy: str, tr_mean, backend: str | None):
+    """(T,) bool ideal arbitration success at the given mean tuning range."""
+    if backend is None:
+        return ideal.success(sys, policy, jnp.asarray(cfg.s), tr_mean)
+    if policy == "lta":
+        from repro.kernels import ops
+
+        adj = adjacency_bitmask(reach_matrix(sys, tr_mean))
+        _, ok = ops.perfect_matching(adj, backend=backend)
+        return ok
+    return _ideal_min_tr(cfg, sys, policy, backend) <= tr_mean
 
 
 def oblivious_arbitrate(
-    cfg: ArbitrationConfig, sys: SystemBatch, tr_mean, scheme: str
+    cfg: ArbitrationConfig,
+    sys: SystemBatch,
+    tr_mean,
+    scheme: str,
+    *,
+    backend: str | None = None,
 ) -> Assignment:
     """Run a wavelength-oblivious arbitration scheme on a system batch."""
-    tables = build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    tables = _build_tables(cfg, sys, tr_mean, backend)
     spec = chain_spec(cfg.s)
-    if scheme == "seq":
-        return sequential_tuning(tables, spec)
-    if scheme == "rs_ssm":
-        ri = relation_search(tables, spec, variation_tolerant=False)
-        return single_step_matching(tables, ri, spec)
-    if scheme == "vtrs_ssm":
-        ri = relation_search(tables, spec, variation_tolerant=True)
-        return single_step_matching(tables, ri, spec)
-    if scheme == "seq_retry":   # beyond-paper oblivious LtA (§V-E future work)
-        return sequential_retry(tables)
-    raise ValueError(f"unknown scheme {scheme!r}")
+    return scheme_spec(scheme).arbiter(cfg, tables, spec)
 
 
 class EvalResult(NamedTuple):
@@ -57,8 +166,7 @@ class EvalResult(NamedTuple):
     ideal_ok: jax.Array     # (T,) bool
 
 
-@partial(jax.jit, static_argnames=("cfg", "scheme"))
-def evaluate_scheme(
+def evaluate_scheme_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     scheme: str,
@@ -68,8 +176,13 @@ def evaluate_scheme(
     sigma_tr_frac=None,
     sigma_go=None,
     sigma_llv_frac=None,
+    fsr_mean=None,
+    backend: str | None = None,
 ) -> EvalResult:
-    """Instantiate systems, run the scheme, and score CAFP vs ideal LtC."""
+    """Instantiate systems, run the scheme, and score CAFP vs ideal LtC.
+
+    Un-jitted body; vmap-safe (the sweep engine maps it over grid points).
+    """
     sys = instantiate(
         cfg,
         units,
@@ -78,14 +191,12 @@ def evaluate_scheme(
         sigma_tr_frac=sigma_tr_frac,
         sigma_go=sigma_go,
         sigma_llv_frac=sigma_llv_frac,
+        fsr_mean=fsr_mean,
     )
     s = jnp.asarray(cfg.s)
-    policy = SCHEME_POLICY[scheme]
-    if policy == "lta":
-        ideal_ok = ideal.lta_min_tr(sys) <= tr_mean
-    else:
-        ideal_ok = ideal.ltc_min_tr(sys, s) <= tr_mean
-    assign = oblivious_arbitrate(cfg, sys, tr_mean, scheme)
+    policy = scheme_spec(scheme).policy
+    ideal_ok = _ideal_success(cfg, sys, policy, tr_mean, backend)
+    assign = oblivious_arbitrate(cfg, sys, tr_mean, scheme, backend=backend)
     out = classify(assign, s, policy=policy)
     lock = (out.zero_lock | out.dup_lock) & ideal_ok
     order = out.order_err & ideal_ok
@@ -99,8 +210,12 @@ def evaluate_scheme(
     )
 
 
-@partial(jax.jit, static_argnames=("cfg", "policy"))
-def evaluate_policy(
+evaluate_scheme = jax.jit(
+    evaluate_scheme_impl, static_argnames=("cfg", "scheme", "backend")
+)
+
+
+def evaluate_policy_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     policy: str,
@@ -111,6 +226,7 @@ def evaluate_policy(
     sigma_fsr_frac=None,
     sigma_tr_frac=None,
     fsr_mean=None,
+    backend: str | None = None,
 ):
     """Ideal-model policy evaluation: AFP at a given mean tuning range."""
     sys = instantiate(
@@ -123,12 +239,16 @@ def evaluate_policy(
         sigma_tr_frac=sigma_tr_frac,
         fsr_mean=fsr_mean,
     )
-    ok = ideal.success(sys, policy, jnp.asarray(cfg.s), tr_mean)
+    ok = _ideal_success(cfg, sys, policy, tr_mean, backend)
     return metrics.afp(ok)
 
 
-@partial(jax.jit, static_argnames=("cfg", "policy"))
-def policy_min_tr(
+evaluate_policy = jax.jit(
+    evaluate_policy_impl, static_argnames=("cfg", "policy", "backend")
+)
+
+
+def policy_trial_min_tr_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     policy: str,
@@ -138,8 +258,14 @@ def policy_min_tr(
     sigma_fsr_frac=None,
     sigma_tr_frac=None,
     fsr_mean=None,
+    backend: str | None = None,
 ):
-    """Minimum mean TR for complete arbitration success over the batch."""
+    """(T,) per-trial ideal minimum mean TR at the given sigma overrides.
+
+    The sweep engine's TR-axis fast path: ideal success at mean TR t is
+    exactly ``trial_min_tr <= t`` for every policy, so one min-TR evaluation
+    prices the entire TR axis.
+    """
     sys = instantiate(
         cfg,
         units,
@@ -150,8 +276,34 @@ def policy_min_tr(
         sigma_tr_frac=sigma_tr_frac,
         fsr_mean=fsr_mean,
     )
-    per_trial = ideal.min_tr(sys, policy, jnp.asarray(cfg.s))
+    return _ideal_min_tr(cfg, sys, policy, backend)
+
+
+def policy_min_tr_impl(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    policy: str,
+    sigma_rlv=None,
+    sigma_go=None,
+    sigma_llv_frac=None,
+    sigma_fsr_frac=None,
+    sigma_tr_frac=None,
+    fsr_mean=None,
+    backend: str | None = None,
+):
+    """Minimum mean TR for complete arbitration success over the batch."""
+    per_trial = policy_trial_min_tr_impl(
+        cfg, units, policy,
+        sigma_rlv=sigma_rlv, sigma_go=sigma_go, sigma_llv_frac=sigma_llv_frac,
+        sigma_fsr_frac=sigma_fsr_frac, sigma_tr_frac=sigma_tr_frac,
+        fsr_mean=fsr_mean, backend=backend,
+    )
     return metrics.min_tr_for_complete_success(per_trial)
+
+
+policy_min_tr = jax.jit(
+    policy_min_tr_impl, static_argnames=("cfg", "policy", "backend")
+)
 
 
 def make_units(cfg: ArbitrationConfig, seed: int, n_laser: int, n_ring: int) -> UnitSamples:
@@ -167,15 +319,14 @@ def shmoo(
     policy: str | None = None,
     scheme: str | None = None,
 ) -> np.ndarray:
-    """AFP (policy) or CAFP (scheme) over a sigma_rLV x TR grid — Fig. 4/14."""
+    """AFP (policy) or CAFP (scheme) over a sigma_rLV x TR grid — Fig. 4/14.
+
+    One jitted call via the sweep engine (see ``repro.core.sweep``).
+    """
+    from .sweep import sweep_policy, sweep_scheme  # avoid import cycle
+
     assert (policy is None) != (scheme is None)
-    rows = []
-    for srlv in sigma_rlv_values:
-        row = []
-        for tr in tr_values:
-            if policy is not None:
-                row.append(evaluate_policy(cfg, units, policy, tr, sigma_rlv=srlv))
-            else:
-                row.append(evaluate_scheme(cfg, units, scheme, tr, sigma_rlv=srlv).cafp)
-        rows.append(jnp.stack(row))
-    return np.asarray(jnp.stack(rows))
+    axes = {"sigma_rlv": sigma_rlv_values, "tr_mean": tr_values}
+    if policy is not None:
+        return np.asarray(sweep_policy(cfg, units, policy, axes))
+    return np.asarray(sweep_scheme(cfg, units, scheme, axes).cafp)

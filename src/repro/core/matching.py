@@ -12,10 +12,57 @@ so the augmenting path can be walked back in <= N steps.
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+#: Up to this many channels, matching existence and bottleneck thresholds are
+#: evaluated via Hall's condition over all 2^N ring subsets — pure
+#: elementwise/reduction work with no sequential augmenting loops, which is
+#: far faster on CPU and vmaps cleanly inside the sweep engine.  Beyond it
+#: the subset table would dominate memory and Kuhn's algorithm takes over.
+_HALL_MAX_N = 10
+
+
+@functools.lru_cache(maxsize=None)
+def _subset_masks(n: int) -> np.ndarray:
+    """(2^n, n) bool: row s = membership mask of subset s."""
+    s = np.arange(1 << n, dtype=np.uint32)
+    return ((s[:, None] >> np.arange(n)) & 1).astype(bool)
+
+
+@functools.lru_cache(maxsize=None)
+def _sorting_network(n: int) -> tuple:
+    """Batcher odd-even compare-exchange pairs for a power-of-two n.
+
+    XLA's comparator sort is far slower than a fixed min/max network on the
+    small trailing lane axis of the Hall subset table, and the network is
+    pure elementwise ops so it fuses and vmaps freely.
+    """
+    assert n & (n - 1) == 0, n
+    pairs = []
+
+    def merge(lo, m, r):
+        step = r * 2
+        if step < m:
+            merge(lo, m, step)
+            merge(lo + r, m, step)
+            pairs.extend((i, i + r) for i in range(lo + r, lo + m - r, step))
+        else:
+            pairs.append((lo, lo + r))
+
+    def sort(lo, m):
+        if m > 1:
+            h = m // 2
+            sort(lo, h)
+            sort(lo + h, h)
+            merge(lo, m, 1)
+
+    sort(0, n)
+    return tuple(pairs)
 
 
 def adjacency_bitmask(reach: jax.Array) -> jax.Array:
@@ -118,20 +165,89 @@ def max_matching(adj: jax.Array):
     return jax.lax.fori_loop(0, N, body, (match_wl, match_ring))
 
 
+def _has_perfect_matching_hall(reach: jax.Array) -> jax.Array:
+    """Hall's condition: a perfect matching exists iff every ring subset S
+    reaches at least |S| laser lines.  Loop-free (the n-step accumulation
+    unrolls to elementwise ops on a (T, 2^n, n) table)."""
+    T, n, _ = reach.shape
+    sub = jnp.asarray(_subset_masks(n))                    # (S, n)
+    size = jnp.asarray(_subset_masks(n).sum(1), jnp.int32)  # (S,)
+    nbr = jnp.zeros((T, sub.shape[0], n), bool)
+    for i in range(n):
+        nbr = jnp.where(sub[None, :, i:i + 1], nbr | reach[:, None, i, :], nbr)
+    ok = nbr.sum(axis=-1) >= size[None, :]
+    return ok.all(axis=1)
+
+
 def has_perfect_matching(reach: jax.Array) -> jax.Array:
     """(T, N, N) bool reach -> (T,) bool perfect matching existence."""
+    if reach.shape[-1] <= _HALL_MAX_N:
+        return _has_perfect_matching_hall(reach)
     adj = adjacency_bitmask(reach)
     match_wl, _ = max_matching(adj)
     return jnp.all(match_wl >= 0, axis=1)
 
 
+def _bottleneck_threshold_hall(weights: jax.Array) -> jax.Array:
+    """Bottleneck threshold via Hall: subset S becomes satisfiable once the
+    |S|-th smallest of (min over i in S of w[i, k]) is reached, and the
+    bottleneck is the worst subset's requirement.  One shot, no search.
+
+    Runs the subset DP on uint8 *ranks* instead of f32 weights (4x less
+    traffic through the (T, 2^N, N) table; this path is memory-bound), with
+    ranks from an all-pairs comparison count and the k-th selection from a
+    fixed min/max sorting network — no XLA comparator sorts anywhere.  Rank
+    -> value is monotone (ties share a rank and a value) so every comparison,
+    selection and max lands on the same edge weight the f32 computation would
+    pick — the result stays bit-for-bit equal to the binary-search reference.
+    """
+    T, n, _ = weights.shape
+    sub = jnp.asarray(_subset_masks(n))                    # (S, n)
+    size = jnp.asarray(_subset_masks(n).sum(1), jnp.int32)
+    n_sub = sub.shape[0]
+    flat = weights.reshape(T, n * n)
+    # rank_e = |{e' : w_e' < w_e}|  (== searchsorted-left into sorted edges)
+    ranks = jnp.sum(
+        (flat[:, None, :] < flat[:, :, None]), axis=-1
+    ).astype(jnp.uint8)                                    # (T, n^2), max n^2-1
+    rank_grid = ranks.reshape(T, n, n)
+    minr = jnp.full((T, n_sub, n), 255, jnp.uint8)
+    for i in range(n):
+        minr = jnp.where(
+            sub[None, :, i:i + 1], jnp.minimum(minr, rank_grid[:, None, i, :]), minr
+        )
+    # Ascending per-subset lanes via the compare-exchange network (255-padded
+    # to the next power of two; pads sink to the tail, past any real size).
+    m = 1 << (n - 1).bit_length()
+    lanes = [minr[..., k] for k in range(n)]
+    lanes += [jnp.full(minr.shape[:-1], 255, jnp.uint8)] * (m - n)
+    for i, j in _sorting_network(m):
+        lanes[i], lanes[j] = (
+            jnp.minimum(lanes[i], lanes[j]), jnp.maximum(lanes[i], lanes[j])
+        )
+    vals = jnp.stack(lanes, axis=-1)                       # (T, S, m) ascending
+    idx = jnp.broadcast_to(
+        jnp.clip(size - 1, 0)[None, :, None], (T, n_sub, 1)
+    )
+    req = jnp.take_along_axis(vals, idx, axis=-1)[..., 0]  # (T, S) uint8 ranks
+    req = jnp.where(size[None, :] > 0, req, 0)
+    bottleneck_rank = req.max(axis=1)                      # (T,)
+    # The bottleneck is the edge weight carrying that rank (ties share it).
+    return jnp.max(
+        jnp.where(ranks == bottleneck_rank[:, None], flat, -jnp.inf), axis=-1
+    )
+
+
 def bottleneck_matching_threshold(weights: jax.Array, n_steps: int | None = None) -> jax.Array:
     """Minimum t such that a perfect matching exists in {weights <= t}.
 
-    weights: (T, N, N) scaled residuals (ring x wl).  Binary search over the
-    sorted per-trial edge weights — the bottleneck value is always one of the
+    weights: (T, N, N) scaled residuals (ring x wl).  Small N uses the
+    loop-free Hall formulation; otherwise binary search over the sorted
+    per-trial edge weights — the bottleneck value is always one of the
     N^2 edge weights.  Returns (T,) float32.
     """
+    if weights.shape[-1] <= _HALL_MAX_N:
+        return _bottleneck_threshold_hall(weights)
     T, N, _ = weights.shape
     flat = weights.reshape(T, N * N)
     cand = jnp.sort(flat, axis=1)                          # (T, N^2) ascending

@@ -57,19 +57,23 @@ def chain_spec(s: np.ndarray) -> ChainSpec:
 
 
 def _unit_relation_search(
-    tables: SearchTables, agg: int, vic: int, entry: jax.Array
+    tables: SearchTables, agg, vic, entry: jax.Array
 ) -> jax.Array:
-    """One aggressor injection.  entry: (T,) aggressor entry index (or -1).
+    """Aggressor injections for one or many pairs at once.
 
-    Returns (T,) RI = masked_victim_index - entry, or RI_PHI.
+    agg, vic: scalar ring indices (one pair) or (P,) static index arrays;
+    entry: matching (T,) or (T, P) aggressor entry index (or -1).
+    Returns RI = masked_victim_index - entry, or RI_PHI, same shape as entry.
     """
-    T = tables.delta.shape[0]
-    rows = jnp.arange(T)
+    agg = np.asarray(agg)
+    pair_axis = agg.ndim == 1
+    rows = jnp.arange(tables.delta.shape[0])
+    rows = rows[:, None] if pair_axis else rows
     e_ok = (entry >= 0) & (entry < tables.n_valid[:, agg])
     e_safe = jnp.clip(entry, 0, tables.max_entries - 1)
     line = tables.wl[rows, agg, e_safe]                   # captured laser line
-    vic_wl = tables.wl[:, vic, :]                         # (T, E)
-    hit = (vic_wl == line[:, None]) & (vic_wl >= 0)
+    vic_wl = tables.wl[:, vic, :]                         # (T[, P], E)
+    hit = (vic_wl == line[..., None]) & (vic_wl >= 0)
     masked = jnp.where(hit.any(axis=-1), jnp.argmax(hit, axis=-1), -1)
     ri = masked.astype(jnp.int32) - entry.astype(jnp.int32)
     return jnp.where(e_ok & (masked >= 0), ri, RI_PHI)
@@ -93,6 +97,41 @@ def relation_search(
 
     Output ri[t, pos]: ST(pi[pos])[e] and ST(pi[pos+1])[e + ri] refer to the
     same laser line; RI_PHI where no relation was found.
+
+    All N pair searches run at once over a pair axis (the pair list and roles
+    are static, so the gathers compile to fixed-index slices): one trace of
+    ``_unit_relation_search`` instead of N, which keeps jaxpr size O(1) in N
+    and lets the whole record phase sit under an outer ``vmap`` (the sweep
+    engine maps it over sigma/TR grid points).
+    """
+    n = spec.chain.shape[0]
+    T = tables.delta.shape[0]
+    agg, vic = spec.aggressor, spec.victim               # (N,) static
+    nv = tables.n_valid[:, agg]                          # (T, N) per-pair
+    last = nv - 1
+    first = jnp.zeros((T, n), jnp.int32)
+    ri = _combine(
+        _unit_relation_search(tables, agg, vic, last),
+        _unit_relation_search(tables, agg, vic, first),
+        n,
+    )
+    if variation_tolerant:
+        second = jnp.minimum(jnp.ones((T, n), jnp.int32), last)
+        ri_vt = _unit_relation_search(tables, agg, vic, second)
+        ri = jnp.where(ri == RI_PHI, ri_vt, ri)
+    # Orient along the chain: RI was measured aggressor->victim.
+    forward = jnp.asarray(spec.forward)[None, :]
+    return jnp.where(forward | (ri == RI_PHI), ri, -ri)  # (T, N)
+
+
+def relation_search_loop(
+    tables: SearchTables, spec: ChainSpec, *, variation_tolerant: bool = False
+) -> jax.Array:
+    """Reference per-position loop (the pre-vectorization implementation).
+
+    Kept as the golden oracle for ``relation_search``: one unit search per
+    chain position, traced N times.  Semantically identical; only used by
+    tests and never on the hot path.
     """
     n = spec.chain.shape[0]
     T = tables.delta.shape[0]
@@ -111,7 +150,6 @@ def relation_search(
             second = jnp.minimum(jnp.ones((T,), jnp.int32), last)
             ri_vt = _unit_relation_search(tables, agg, vic, second)
             ri = jnp.where(ri == RI_PHI, ri_vt, ri)
-        # Orient along the chain: RI was measured aggressor->victim.
         ri_chain = ri if spec.forward[pos] else jnp.where(ri == RI_PHI, RI_PHI, -ri)
         out.append(ri_chain)
     return jnp.stack(out, axis=1)  # (T, N)

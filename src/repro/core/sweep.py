@@ -1,0 +1,309 @@
+"""Batched sweep engine: whole sigma x TR grids in a single jitted call.
+
+The paper's headline results (Figs. 4-8, 14-16) are shmoo grids: every point
+is one ``evaluate_policy`` / ``evaluate_scheme`` / ``policy_min_tr`` call at
+a different (sigma_*, TR) combination.  Filling those grids with nested
+Python loops costs one host->device dispatch per point and dominates
+wall-time long before the arithmetic does.  This module evaluates the entire
+grid device-resident:
+
+  * named axes (``tr_mean``, ``sigma_rlv``, ``sigma_go``, ``sigma_llv_frac``,
+    ``sigma_fsr_frac``, ``sigma_tr_frac``, ``fsr_mean``) are crossed into a
+    flat (P, K) point list on the host;
+  * the un-jitted evaluation body is ``vmap``-ped over points within a
+    chunk, and ``lax.map`` iterates the chunks — so peak memory is bounded
+    by ``chunk_size`` times the per-point T x N x N x J table footprint while
+    the whole grid remains ONE jit compilation and ONE dispatch;
+  * results come back as grid-shaped arrays (leading dims = axis lengths,
+    in the order the ``axes`` mapping lists them).
+
+Usage::
+
+    from repro.core import make_units, sweep_policy, sweep_scheme, sweep_min_tr
+    from repro.configs.wdm import WDM8_G200
+
+    cfg = WDM8_G200
+    units = make_units(cfg, seed=4, n_laser=100, n_ring=100)
+
+    # Fig. 4: AFP over a sigma_rLV x TR shmoo, one dispatch.
+    afp = sweep_policy(cfg, units, "ltc",
+                       {"sigma_rlv": rlvs, "tr_mean": trs})   # (len(rlvs), len(trs))
+
+    # Fig. 16: CAFP grid with fixed harsh variations.
+    res = sweep_scheme(cfg, units, "vtrs_ssm",
+                       {"sigma_rlv": rlvs, "tr_mean": trs},
+                       fixed={"sigma_fsr_frac": 0.05, "sigma_tr_frac": 0.20})
+    cafp = res.cafp                                           # grid-shaped
+
+    # Fig. 5/7/8: minimum tuning range along any named axis.
+    mt = sweep_min_tr(cfg, units, "lta", {"fsr_mean": fsrs})  # (len(fsrs),)
+
+``backend`` threads through to the kernel wrappers in ``repro.kernels.ops``
+(``"jnp"``, ``"interpret"``, ``"pallas"``); the default ``None`` uses the
+pure-jnp core path.  ``sweep_grid_reference`` keeps the pre-engine per-point
+loop as the golden oracle — the engine is bit-for-bit equal to it (asserted
+in tests/test_sweep.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import (
+    EvalResult,
+    evaluate_policy,
+    evaluate_policy_impl,
+    evaluate_scheme,
+    evaluate_scheme_impl,
+    policy_min_tr,
+    policy_min_tr_impl,
+    policy_trial_min_tr_impl,
+)
+from .grid import ArbitrationConfig
+from .matching import _HALL_MAX_N
+from .sampling import UnitSamples
+from .search_table import max_entries_for
+
+#: Axis/fixed names accepted by the engine (keyword names of the eval impls;
+#: ``tr_mean`` is positional there but a named axis here).
+AXIS_NAMES = (
+    "tr_mean",
+    "sigma_rlv",
+    "sigma_go",
+    "sigma_llv_frac",
+    "sigma_fsr_frac",
+    "sigma_tr_frac",
+    "fsr_mean",
+)
+
+#: Per-chunk device memory budget for auto chunk sizing [bytes].
+_CHUNK_BUDGET = 256 * 1024 * 1024
+
+
+def _check_names(names, *, metric: str) -> None:
+    for name in names:
+        if name not in AXIS_NAMES:
+            raise ValueError(f"unknown sweep axis {name!r}; valid: {AXIS_NAMES}")
+    if metric == "min_tr" and "tr_mean" in names:
+        raise ValueError("min_tr sweeps solve for TR; 'tr_mean' cannot be an axis")
+
+
+def _grid_points(axes: Mapping[str, np.ndarray]):
+    """Cross the named axes into a flat (P, K) float32 point array."""
+    if not axes:
+        raise ValueError("at least one sweep axis required")
+    names = tuple(axes)
+    values = [np.asarray(v, np.float32).reshape(-1) for v in axes.values()]
+    shape = tuple(len(v) for v in values)
+    mesh = np.meshgrid(*values, indexing="ij")
+    points = np.stack([m.reshape(-1) for m in mesh], axis=-1)  # (P, K)
+    return names, points, shape
+
+
+def _auto_chunk(cfg: ArbitrationConfig, units: UnitSamples, n_points: int,
+                scheme: str | None) -> int:
+    """Largest chunk whose per-point working set fits the memory budget."""
+    n = cfg.grid.n_ch
+    trials = units.u_rlv.shape[0] * units.u_go.shape[0]
+    if scheme is not None:
+        # dominant: the (T, N, N, J) candidate-peak tensor of the table build
+        # plus the (T, N, 3N) sorted tables; ~3 live f32 copies through sort.
+        j = 2 * cfg.max_fsr_alias + 1
+        per_point = trials * n * (n * j + max_entries_for(n)) * 4 * 3
+    else:
+        # dominant: the (T, 2^N, N) Hall subset table (small N) or the
+        # (T, N, N) residual tensor; a few live f32 copies either way.
+        width = max(n, (1 << n) if n <= _HALL_MAX_N else 0)
+        per_point = trials * n * width * 4 * 3
+    return int(np.clip(_CHUNK_BUDGET // max(per_point, 1), 1, n_points))
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "policy", "scheme", "metric", "names",
+                     "fixed_names", "chunk", "backend"),
+)
+def _sweep_flat(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    points,            # (P, K) traced
+    fixed_values,      # (F,) traced
+    *,
+    policy: str | None,
+    scheme: str | None,
+    metric: str,
+    names: tuple,
+    fixed_names: tuple,
+    chunk: int,
+    backend: str | None,
+):
+    """Chunked vmap over flat grid points; one compilation for the grid."""
+
+    def eval_point(vals):
+        kw = {fn: fixed_values[i] for i, fn in enumerate(fixed_names)}
+        kw.update({name: vals[i] for i, name in enumerate(names)})
+        if metric == "min_tr":
+            return policy_min_tr_impl(cfg, units, policy, backend=backend, **kw)
+        if metric == "trial_min_tr":
+            return policy_trial_min_tr_impl(cfg, units, policy, backend=backend, **kw)
+        tr_mean = kw.pop("tr_mean", cfg.grid.tr_mean)
+        if policy is not None:
+            return evaluate_policy_impl(
+                cfg, units, policy, tr_mean, backend=backend, **kw
+            )
+        return evaluate_scheme_impl(
+            cfg, units, scheme, tr_mean, backend=backend, **kw
+        )
+
+    p = points.shape[0]
+    n_chunks = -(-p // chunk)
+    pad = n_chunks * chunk - p
+    # Padded points repeat the last row: numerically benign, results dropped.
+    padded = jnp.concatenate([points, jnp.tile(points[-1:], (pad, 1))]) if pad else points
+    out = jax.lax.map(jax.vmap(eval_point), padded.reshape(n_chunks, chunk, -1))
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:p], out
+    )
+
+
+@jax.jit
+def _afp_from_trial_min_tr(trial_min_tr, tr_values):
+    """(..., T) per-trial min TR x (L,) TR axis -> (..., L) AFP grid.
+
+    Bit-exact vs evaluating each TR point: success bools are identical
+    (ideal success at t == trial_min_tr <= t for every policy) and a mean
+    of 0/1 float32 values is order-independent (integer sums < 2^24).
+    """
+    ok = trial_min_tr[..., None, :] <= tr_values[:, None]
+    return 1.0 - jnp.mean(ok.astype(jnp.float32), axis=-1)
+
+
+def sweep_grid(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    axes: Mapping[str, np.ndarray],
+    *,
+    policy: str | None = None,
+    scheme: str | None = None,
+    metric: str = "eval",
+    fixed: Mapping[str, float] | None = None,
+    chunk_size: int | None = None,
+    backend: str | None = None,
+    tr_fast: bool = True,
+):
+    """Evaluate a full named-axis grid in one jitted call.
+
+    axes:   ordered mapping axis name -> 1-D values; output leading dims
+            follow this order.
+    metric: "eval" (AFP for a policy / EvalResult for a scheme) or
+            "min_tr" (policy only; minimum mean TR for complete success).
+    fixed:  scalar overrides applied at every point (traced, so changing
+            them does not recompile).
+    tr_fast: policy-eval sweeps with a ``tr_mean`` axis collapse that axis
+            to a free threshold comparison against one per-trial min-TR
+            evaluation per remaining point (bit-exact; see
+            ``_afp_from_trial_min_tr``).  Disable to force the direct path.
+    Returns grid-shaped array(s): EvalResult of grids for a scheme,
+    a single grid otherwise.
+    """
+    if (policy is None) == (scheme is None):
+        raise ValueError("exactly one of policy/scheme required")
+    if metric not in ("eval", "min_tr"):
+        raise ValueError(f"unknown metric {metric!r}")
+    if metric == "min_tr" and policy is None:
+        raise ValueError("min_tr sweeps are policy sweeps")
+    fixed = dict(fixed or {})
+    names, points, shape = _grid_points(axes)
+    _check_names(names, metric=metric)
+    _check_names(fixed, metric=metric)
+    overlap = set(names) & set(fixed)
+    if overlap:
+        raise ValueError(f"axes and fixed overlap: {sorted(overlap)}")
+
+    if policy is not None and metric == "eval" and tr_fast and "tr_mean" in names:
+        # TR fast path: one per-trial min-TR evaluation per non-TR point,
+        # then the whole TR axis is a broadcast threshold comparison.
+        metric = "trial_min_tr"
+        tr_idx = names.index("tr_mean")
+        tr_values = jnp.asarray(np.asarray(axes["tr_mean"], np.float32).reshape(-1))
+        names = tuple(n for n in names if n != "tr_mean")
+        shape = shape[:tr_idx] + shape[tr_idx + 1:]
+        if names:
+            points = _grid_points({n: axes[n] for n in names})[1]
+        else:
+            points = np.zeros((1, 0), np.float32)  # single all-defaults point
+    else:
+        tr_idx = None
+
+    chunk = chunk_size or _auto_chunk(cfg, units, points.shape[0], scheme)
+    fixed_names = tuple(fixed)
+    fixed_values = jnp.asarray([float(fixed[k]) for k in fixed_names], jnp.float32)
+    out = _sweep_flat(
+        cfg, units, jnp.asarray(points), fixed_values,
+        policy=policy, scheme=scheme, metric=metric, names=names,
+        fixed_names=fixed_names, chunk=chunk, backend=backend,
+    )
+    if tr_idx is not None:
+        afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
+        return jnp.moveaxis(afp, -1, tr_idx)
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(shape + a.shape[1:]), out
+    )
+
+
+def sweep_policy(cfg, units, policy, axes, **kw):
+    """Grid of AFP values for an ideal policy.  See ``sweep_grid``."""
+    return sweep_grid(cfg, units, axes, policy=policy, **kw)
+
+
+def sweep_scheme(cfg, units, scheme, axes, **kw) -> EvalResult:
+    """EvalResult whose fields are grids, for an oblivious scheme."""
+    return sweep_grid(cfg, units, axes, scheme=scheme, **kw)
+
+
+def sweep_min_tr(cfg, units, policy, axes, **kw):
+    """Grid of minimum mean tuning ranges for an ideal policy."""
+    return sweep_grid(cfg, units, axes, policy=policy, metric="min_tr", **kw)
+
+
+def sweep_grid_reference(
+    cfg: ArbitrationConfig,
+    units: UnitSamples,
+    axes: Mapping[str, np.ndarray],
+    *,
+    policy: str | None = None,
+    scheme: str | None = None,
+    metric: str = "eval",
+    fixed: Mapping[str, float] | None = None,
+    backend: str | None = None,
+):
+    """Pre-engine per-point Python loop: one jitted call per grid point.
+
+    The golden oracle for ``sweep_grid`` (bit-for-bit equal on CPU); also a
+    readable spec of what the engine computes.  Never use on a hot path.
+    """
+    if (policy is None) == (scheme is None):
+        raise ValueError("exactly one of policy/scheme required")
+    fixed = dict(fixed or {})
+    names, points, shape = _grid_points(axes)
+    _check_names(names, metric=metric)
+    outs = []
+    for vals in points:
+        kw = dict(fixed, backend=backend)
+        kw.update({name: float(v) for name, v in zip(names, vals)})
+        if metric == "min_tr":
+            outs.append(policy_min_tr(cfg, units, policy, **kw))
+        else:
+            tr_mean = kw.pop("tr_mean", cfg.grid.tr_mean)
+            if policy is not None:
+                outs.append(evaluate_policy(cfg, units, policy, tr_mean, **kw))
+            else:
+                outs.append(evaluate_scheme(cfg, units, scheme, tr_mean, **kw))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(shape + a.shape[1:]), stacked
+    )

@@ -7,6 +7,12 @@ padding to the 128-trial lane block, and backend selection:
   backend="interpret"  Pallas interpret mode (CPU correctness path)
   backend="jnp"        portable pure-jnp oracle (default off-TPU)
   backend="auto"       pallas on TPU else jnp
+
+Every wrapper is **vmap-safe**: layout moves use explicit last-two-axes
+swaps (never ``.T``, which reverses all axes), and padding/slicing is
+expressed on the trial axis only — so the sweep engine
+(``repro.core.sweep``) can map them over sigma/TR grid points under
+``backend="jnp"`` and ``"interpret"`` (guarded by tests/test_sweep.py).
 """
 from __future__ import annotations
 
@@ -26,7 +32,15 @@ def _on_tpu() -> bool:
 def _resolve(backend: str) -> str:
     if backend == "auto":
         return "pallas" if _on_tpu() else "jnp"
+    if backend not in ("pallas", "interpret", "jnp"):
+        raise ValueError(f"unknown backend {backend!r}")
     return backend
+
+
+def _to_cols(a) -> jax.Array:
+    """Core (T, N) -> kernel (N, T) layout (swap of the last two axes only,
+    so extra leading vmap axes pass through untouched)."""
+    return jnp.swapaxes(jnp.asarray(a, jnp.float32), -1, -2)
 
 
 def _pad_cols(x, t_pad):
@@ -44,7 +58,7 @@ def _padded_t(t: int) -> int:
 def feasibility(laser, ring, fsr, tr_unit, *, s, backend="auto"):
     """(T, N) system batch -> per-trial (ltd_min_tr, ltc_min_tr)."""
     backend = _resolve(backend)
-    cols = [jnp.asarray(a, jnp.float32).T for a in (laser, ring, fsr, tr_unit)]
+    cols = [_to_cols(a) for a in (laser, ring, fsr, tr_unit)]
     if backend == "jnp":
         return ref.feasibility_ref(*cols, s=tuple(int(v) for v in s))
     t = cols[0].shape[1]
@@ -64,14 +78,14 @@ def feasibility(laser, ring, fsr, tr_unit, *, s, backend="auto"):
 def perfect_matching(adj, *, backend="auto"):
     """adj: (T, N) int32 ring->line bitmasks -> (match_wl (T, N), ok (T,))."""
     backend = _resolve(backend)
-    adj_c = jnp.asarray(adj, jnp.int32).T
+    adj_c = jnp.swapaxes(jnp.asarray(adj, jnp.int32), -1, -2)
     if backend == "jnp":
         mw, ok = ref.match_ref(adj_c)
-        return mw.T, ok
+        return jnp.swapaxes(mw, -1, -2), ok
     t = adj_c.shape[1]
     tp = _padded_t(t)
     mw, ok = match_pallas(_pad_cols(adj_c, tp), interpret=(backend == "interpret"))
-    return mw.T[:t], ok[:t]
+    return jnp.swapaxes(mw, -1, -2)[:t], ok[:t]
 
 
 def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend="auto"):
@@ -80,10 +94,11 @@ def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend
     Returns (delta (T, N, E), wl (T, N, E), n_valid (T, N)).
     """
     backend = _resolve(backend)
-    cols = [jnp.asarray(a, jnp.float32).T for a in (laser, ring, fsr, tr)]
+    cols = [_to_cols(a) for a in (laser, ring, fsr, tr)]
     if backend == "jnp":
         d, w, nv = ref.table_ref(*cols, max_alias=max_alias, max_entries=max_entries)
-        return jnp.transpose(d, (2, 0, 1)), jnp.transpose(w, (2, 0, 1)), nv.T
+        to_core = lambda a: jnp.moveaxis(a, -1, -3)  # (N, E, T) -> (T, N, E)
+        return to_core(d), to_core(w), jnp.swapaxes(nv, -1, -2)
     t = cols[0].shape[1]
     tp = _padded_t(t)
     cols = [_pad_cols(c, tp) for c in cols]
@@ -96,8 +111,9 @@ def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend
         max_entries=max_entries,
         interpret=(backend == "interpret"),
     )
+    to_core = lambda a: jnp.moveaxis(a, -1, -3)
     return (
-        jnp.transpose(d, (2, 0, 1))[:t],
-        jnp.transpose(w, (2, 0, 1))[:t],
-        nv.T[:t],
+        to_core(d)[:t],
+        to_core(w)[:t],
+        jnp.swapaxes(nv, -1, -2)[:t],
     )

@@ -9,6 +9,14 @@ import pytest
 from repro.configs import ARCH_IDS, get_smoke
 from repro.models import model as M
 
+# Tier-1 keeps two cheap representative architectures; the full matrix is
+# minutes of CPU compile time and runs under ``pytest -m slow``.
+_FAST_ARCHS = ("mamba2-130m", "internlm2-1.8b")
+_ARCH_PARAMS = [
+    a if a in _FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+    for a in ARCH_IDS
+]
+
 
 def _batch(cfg, B=2, L=32):
     key = jax.random.key(0)
@@ -21,7 +29,7 @@ def _batch(cfg, B=2, L=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_forward_and_grad(arch):
     cfg = get_smoke(arch)
     params = M.init_params(jax.random.key(1), cfg)
@@ -40,7 +48,7 @@ def test_forward_and_grad(arch):
     assert any(float(jnp.abs(g).max()) > 0 for g in leaves), arch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 def test_prefill_decode(arch):
     cfg = get_smoke(arch)
     params = M.init_params(jax.random.key(2), cfg)
@@ -60,6 +68,7 @@ def test_prefill_decode(arch):
         nxt = jnp.argmax(logits, axis=-1)[:, None]
 
 
+@pytest.mark.slow
 def test_sqrt_remat_parity():
     """scan_levels=2 (sqrt-remat) computes identical loss and gradients."""
     import dataclasses
@@ -78,7 +87,7 @@ def test_sqrt_remat_parity():
         )
 
 
-@pytest.mark.parametrize("arch", ["mamba2-130m", "jamba-v0.1-52b", "internlm2-1.8b"])
+@pytest.mark.parametrize("arch", ["mamba2-130m", pytest.param("jamba-v0.1-52b", marks=pytest.mark.slow), "internlm2-1.8b"])
 def test_prefill_decode_consistency(arch):
     """Decoding token t+1 after prefill(0..t) must match prefill(0..t+1)'s
     next-token distribution (cache correctness across mixer families)."""

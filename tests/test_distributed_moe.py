@@ -4,6 +4,12 @@ and all-to-all MoE implementations under a real (data, model) mesh."""
 import subprocess
 import sys
 
+import pytest
+
+# Spawns a child JAX process with 8 forced host devices: minutes of compile
+# on a loaded CPU and timing-sensitive; excluded from the tier-1 default.
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

@@ -6,6 +6,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.checkpoint import store
 from repro.configs import get_smoke
@@ -76,6 +77,7 @@ def test_optics_bringup_and_rearbitration():
     assert rates["cafp"] <= 0.05  # VT-RS/SSM ~ ideal at nominal TR
 
 
+@pytest.mark.slow
 def test_trainer_end_to_end_with_restart():
     """Two-phase run: train, 'crash', restore from checkpoint, continue —
     losses finite, checkpoint step honored, fabric arbitrated."""
@@ -110,6 +112,7 @@ def test_trainer_end_to_end_with_restart():
         data.close()
 
 
+@pytest.mark.slow
 def test_checkpoint_reshard_on_restore():
     """Elastic restart: a checkpoint written under one sharding restores
     onto a different mesh layout (pod-count change)."""
