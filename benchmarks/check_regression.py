@@ -1,0 +1,116 @@
+"""BENCH trajectory gate: diff two ``BENCH_*.json`` files and exit non-zero
+on per-figure wall-time regressions beyond a threshold.
+
+Intended as the CI step behind ROADMAP's "BENCH trajectory tracking":
+
+  python -m benchmarks.run --json BENCH_new.json
+  python -m benchmarks.check_regression BENCH_sweep.json BENCH_new.json
+
+Comparison happens at two granularities, both against the same threshold
+(default 20%):
+
+  * per figure: ``module_wall_ms`` (each record of a module carries the
+    module's wall-time; the max is used);
+  * per record: the steady-state ``derived.engine_ms`` where a record in
+    both files has one (compile time excluded, so this is the stable
+    trajectory signal).
+
+Figures/records present in only one file are reported but never fail the
+gate (benchmarks come and go); a ``full`` flag mismatch is a hard error
+(exit 2) since fast and paper-scale runs are not comparable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Tuple
+
+#: Default maximum allowed slowdown (new/old - 1) before the gate fails.
+DEFAULT_THRESHOLD = 0.20
+
+
+def _figure_walls(payload: dict) -> Dict[str, float]:
+    walls: Dict[str, float] = {}
+    for rec in payload.get("records", []):
+        walls[rec["figure"]] = max(
+            walls.get(rec["figure"], 0.0), float(rec.get("module_wall_ms", 0.0))
+        )
+    return walls
+
+
+def _engine_times(payload: dict) -> Dict[str, float]:
+    times: Dict[str, float] = {}
+    for rec in payload.get("records", []):
+        ms = rec.get("derived", {}).get("engine_ms")
+        if ms is not None:
+            times[rec["name"]] = float(ms)
+    return times
+
+
+def compare(old: dict, new: dict, threshold: float = DEFAULT_THRESHOLD
+            ) -> Tuple[List[dict], List[str]]:
+    """Returns (regressions, notes).  A regression dict has ``kind``
+    ("figure" | "record"), ``name``, ``old_ms``, ``new_ms``, ``ratio``."""
+    regressions: List[dict] = []
+    notes: List[str] = []
+    for kind, old_map, new_map in (
+        ("figure", _figure_walls(old), _figure_walls(new)),
+        ("record", _engine_times(old), _engine_times(new)),
+    ):
+        for name in sorted(set(old_map) | set(new_map)):
+            if name not in old_map or name not in new_map:
+                side = "new" if name in new_map else "old"
+                notes.append(f"{kind} {name!r} only in {side} file (ignored)")
+                continue
+            o, n = old_map[name], new_map[name]
+            if o <= 0.0:
+                notes.append(f"{kind} {name!r} has non-positive old time (ignored)")
+                continue
+            ratio = n / o
+            if ratio > 1.0 + threshold:
+                regressions.append(
+                    {"kind": kind, "name": name, "old_ms": o, "new_ms": n,
+                     "ratio": round(ratio, 3)}
+                )
+    return regressions, notes
+
+
+def main(argv: List[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail on >threshold per-figure BENCH regressions."
+    )
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed fractional slowdown (default 0.20)")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+    if old.get("full") != new.get("full") or old.get("schema") != new.get("schema"):
+        print(
+            f"incomparable runs: old full={old.get('full')} "
+            f"schema={old.get('schema')} vs new full={new.get('full')} "
+            f"schema={new.get('schema')}"
+        )
+        return 2
+
+    regressions, notes = compare(old, new, threshold=args.threshold)
+    for note in notes:
+        print(f"note: {note}")
+    for r in regressions:
+        print(
+            f"REGRESSION [{r['kind']}] {r['name']}: "
+            f"{r['old_ms']:.1f}ms -> {r['new_ms']:.1f}ms ({r['ratio']:.2f}x)"
+        )
+    if regressions:
+        print(f"{len(regressions)} regression(s) beyond {args.threshold:.0%}")
+        return 1
+    print(f"OK: no regressions beyond {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

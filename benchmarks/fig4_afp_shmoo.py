@@ -22,10 +22,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import make_units, metrics, sweep_grid_reference, sweep_policy
-from repro.core.matching import adjacency_bitmask, max_matching
-from repro.core.reach import reach_matrix
+from repro.core.matching import (
+    _bottleneck_threshold_kuhn,
+    adjacency_bitmask,
+    max_matching,
+)
+from repro.core.reach import reach_matrix, scaled_residual
 from repro.core.sampling import instantiate
-from repro.configs.wdm import WDM8_G200
+from repro.configs.wdm import WDM8_G200, WDM16_G200
 
 from .common import n_samples, rlv_sweep, tr_sweep
 
@@ -53,6 +57,22 @@ def _seed_lta_loop(cfg, units, rlvs, trs):
         for j, tr in enumerate(trs):
             grid[i, j] = float(_seed_lta_point(cfg, units, float(tr), float(srlv)))
     return grid
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _kuhn_engine_grid(cfg, units, rlvs, trs):
+    """PR 1-style engine replica for N > 10: the same batched TR-fast-path
+    sweep, but with per-trial LtA min-TRs from the Kuhn binary search
+    instead of the single-pass bottleneck sweep.  The before/after baseline
+    for the wdm16 row — only the matching algorithm differs."""
+
+    def one(srlv):
+        sys = instantiate(cfg, units, sigma_rlv=srlv)
+        return _bottleneck_threshold_kuhn(scaled_residual(sys))
+
+    min_tr = jax.vmap(one)(rlvs)                            # (R, T)
+    ok = min_tr[:, None, :] <= trs[None, :, None]           # (R, L, T)
+    return 1.0 - jnp.mean(ok.astype(jnp.float32), axis=-1)
 
 
 def _best_of(fn, reps: int = 3) -> float:
@@ -130,4 +150,44 @@ def run(full: bool = False):
             engine_first_ms=round(engine_first_ms, 1),
         )
         rows.append((f"fig4/{name}", derived))
+
+    # wdm16 scale-out row: the same sigma_rLV x TR shmoo at N=16, where the
+    # engine's bottleneck thresholds come from the single-pass sweep.  The
+    # PR 1 path (identical engine, Kuhn binary-search thresholds) is timed
+    # as the before-baseline; grids must be bit-identical to each other and
+    # to the per-point reference loop.
+    cfg16 = WDM16_G200
+    trs16 = tr_sweep(n_ch=16)
+    axes16 = {"sigma_rlv": rlvs, "tr_mean": trs16}
+    units16 = make_units(cfg16, seed=4, n_laser=n, n_ring=n)
+    grid16 = np.asarray(
+        jax.block_until_ready(sweep_policy(cfg16, units16, "lta", axes16))
+    )
+    engine16_ms = _best_of(
+        lambda: jax.block_until_ready(sweep_policy(cfg16, units16, "lta", axes16))
+    )
+    jrlvs, jtrs = jnp.asarray(rlvs), jnp.asarray(trs16)
+    kuhn_grid = np.asarray(
+        jax.block_until_ready(_kuhn_engine_grid(cfg16, units16, jrlvs, jtrs))
+    )
+    kuhn_ms = _best_of(
+        lambda: jax.block_until_ready(_kuhn_engine_grid(cfg16, units16, jrlvs, jtrs)),
+        reps=2,
+    )
+    ref16 = np.asarray(sweep_grid_reference(cfg16, units16, axes16, policy="lta"))
+    if not np.array_equal(grid16, ref16):
+        raise AssertionError("fig4/LtA-16: engine grid != per-point loop grid")
+    if not np.array_equal(grid16, kuhn_grid):
+        raise AssertionError("fig4/LtA-16: engine grid != Kuhn binary-search grid")
+    rows.append(
+        ("fig4/LtA-16",
+         {"shmoo_afp": np.round(np.abs(grid16), 4).tolist(),
+          "sigma_rlv": rlvs.tolist(),
+          "tr": trs16.tolist(),
+          "engine_ms": round(engine16_ms, 1),
+          "kuhn_ms": round(kuhn_ms, 1),
+          "speedup_vs_kuhn": round(kuhn_ms / engine16_ms, 2),
+          "identical_to_loop": True,
+          "identical_to_kuhn": True})
+    )
     return rows

@@ -9,9 +9,13 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ArbitrationConfig, make_units
-from repro.core.matching import adjacency_bitmask
-from repro.core.reach import reach_matrix
+from repro.core import ArbitrationConfig, make_units, wdm_config
+from repro.core.matching import (
+    adjacency_bitmask,
+    _bottleneck_threshold_kuhn,
+    bottleneck_matching_threshold,
+)
+from repro.core.reach import reach_matrix, scaled_residual
 from repro.core.sampling import instantiate
 from repro.kernels import ops
 
@@ -61,6 +65,30 @@ def run(full: bool = False):
         ("kernel/table_build_jnp",
          {"trials": sys.n_trials, "us_per_call": round(us)})
     )
+
+    # Bottleneck matching across channel counts: the retired Kuhn binary
+    # search vs the current dispatch (Hall subsets at N=8, the single-pass
+    # bottleneck sweep at N=16/32).  Thresholds must stay bit-identical —
+    # the oracle pin is part of the benchmark, not just the test suite.
+    new_fn = jax.jit(bottleneck_matching_threshold)
+    kuhn_fn = jax.jit(_bottleneck_threshold_kuhn)
+    for n_ch in (8, 16, 32):
+        cfg_n = wdm_config(n_ch=n_ch)
+        m = min(n, 16) if n_ch == 32 else n   # bound the Kuhn oracle's cost
+        units_n = make_units(cfg_n, seed=5, n_laser=m, n_ring=m)
+        w = scaled_residual(instantiate(cfg_n, units_n))
+        new_thr, us_new = _time(new_fn, w, reps=3 if n_ch < 32 else 1)
+        kuhn_thr, us_kuhn = _time(kuhn_fn, w, reps=3 if n_ch < 32 else 1)
+        identical = bool(np.array_equal(np.asarray(new_thr), np.asarray(kuhn_thr)))
+        if not identical:
+            raise AssertionError(f"bottleneck n={n_ch}: sweep != Kuhn oracle")
+        rows.append(
+            (f"kernel/bottleneck_match_n{n_ch}",
+             {"trials": int(w.shape[0]),
+              "us_new": round(us_new), "us_kuhn": round(us_kuhn),
+              "speedup_vs_kuhn": round(us_kuhn / us_new, 2),
+              "identical_to_kuhn": identical})
+        )
 
     # interpret-mode parity on a 128-trial lane block (correctness proof)
     sub = type(sys)(*[a[:128] for a in sys])

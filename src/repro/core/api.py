@@ -24,7 +24,7 @@ from . import ideal, metrics
 from .grid import ArbitrationConfig
 from .matching import adjacency_bitmask
 from .outcomes import Outcome, classify
-from .reach import reach_matrix
+from .reach import reach_matrix, scaled_residual
 from .relation import ChainSpec, chain_spec, relation_search
 from .sampling import SystemBatch, UnitSamples, draw_unit_samples, instantiate
 from .lta_retry import sequential_retry
@@ -119,10 +119,12 @@ def _build_tables(cfg, sys: SystemBatch, tr_mean, backend: str | None):
 
 def _ideal_min_tr(cfg, sys: SystemBatch, policy: str, backend: str | None):
     """(T,) per-trial ideal minimum mean TR, optionally via the kernels."""
-    if backend is None or policy == "lta":
+    if backend is None:
         return ideal.min_tr(sys, policy, jnp.asarray(cfg.s))
     from repro.kernels import ops
 
+    if policy == "lta":
+        return ops.bottleneck_threshold(scaled_residual(sys), backend=backend)
     ltd, ltc = ops.feasibility(
         sys.laser, sys.ring, sys.fsr, sys.tr_unit,
         s=tuple(int(v) for v in cfg.s), backend=backend,

@@ -1,11 +1,25 @@
 """Batched exact bipartite matching for the Lock-to-Any ideal arbiter.
 
-Kuhn's augmenting-path algorithm vectorized over a batch of trials using
-int32 wavelength bitmasks — fixed trip counts, no data-dependent control
-flow, so it maps cleanly onto TPU (and is mirrored by the Pallas kernel in
+Three exact formulations, dispatched by channel count:
+
+  * N <= ``_HALL_MAX_N``: Hall's condition over all 2^N ring subsets —
+    loop-free elementwise/reduction work (existence and bottleneck).
+  * N >  ``_HALL_MAX_N``: a single-pass *bottleneck sweep* — for each left
+    vertex a Dijkstra-style search over alternating paths that minimizes the
+    maximum edge weight, so the bottleneck threshold comes from ONE matching
+    pass instead of ~log(N^2) full Kuhn runs under a binary search.
+    Existence queries reuse the same pass on 0/1 weights.
+  * Kuhn's augmenting-path algorithm (``max_matching``, and the binary
+    search ``_bottleneck_threshold_kuhn``): the exactness oracle the fast
+    paths are pinned against bit-for-bit, and the producer of an explicit
+    matching when one is needed.
+
+All paths are vectorized over a batch of trials with fixed trip counts and
+no data-dependent control flow, so they map cleanly onto TPU (Kuhn existence
+and the bottleneck sweep are mirrored by the Pallas kernels in
 ``repro.kernels.bitmask_match``).
 
-For each left vertex (ring) we BFS over alternating paths:
+For Kuhn, each left vertex (ring) BFSes over alternating paths:
   frontier of wavelengths -> matched rings -> their adjacency -> ...
 recording ``parent`` (the ring from which each wavelength was first reached)
 so the augmenting path can be walked back in <= N steps.
@@ -180,12 +194,100 @@ def _has_perfect_matching_hall(reach: jax.Array) -> jax.Array:
 
 
 def has_perfect_matching(reach: jax.Array) -> jax.Array:
-    """(T, N, N) bool reach -> (T,) bool perfect matching existence."""
+    """(T, N, N) bool reach -> (T,) bool perfect matching existence.
+
+    N > ``_HALL_MAX_N`` runs the bottleneck sweep on 0/1 weights: a perfect
+    matching within ``reach`` exists iff a bottleneck using only weight-0
+    edges exists.  One pass, ~N x fewer sequential steps than Kuhn (whose
+    BFS nests an N-trip ring expansion inside each of N levels); booleans
+    are identical to ``max_matching`` (both exact).
+    """
     if reach.shape[-1] <= _HALL_MAX_N:
         return _has_perfect_matching_hall(reach)
-    adj = adjacency_bitmask(reach)
-    match_wl, _ = max_matching(adj)
-    return jnp.all(match_wl >= 0, axis=1)
+    weights = jnp.where(reach, jnp.float32(0), jnp.float32(1))
+    return _bottleneck_threshold_sweep(weights) < 0.5
+
+
+def _bottleneck_threshold_sweep(weights: jax.Array) -> jax.Array:
+    """Single-pass bottleneck matching threshold for a (T, N, N) batch.
+
+    Incremental formulation: left vertices (rings) are inserted one at a
+    time; for each, a Dijkstra-style search over alternating paths finds the
+    augmenting path minimizing the maximum edge weight along it
+    (``dist[k]`` = cheapest achievable path bottleneck from vertex ``i`` to
+    wavelength ``k`` given the current matching).  The global threshold is
+    the running max of the per-vertex augmentation bottlenecks — exactly the
+    minimum t such that {weights <= t} admits a perfect matching, because
+    feasible thresholds for covering the first i vertices form an up-set and
+    a maximum matching on cheaper edges always extends by one augmenting
+    path.  Only comparisons and max-compositions of input values are
+    performed, so the result is bit-for-bit one of the N^2 edge weights and
+    identical to the Kuhn binary-search oracle.
+
+    Fixed trip counts throughout: N vertices x (N selection steps + N
+    walk-back steps) — one matching pass, vs ~ceil(log2 N^2)+1 full Kuhn
+    runs for the binary search it replaces.
+    """
+    T, N, _ = weights.shape
+    rows = jnp.arange(T)
+    inf = jnp.float32(jnp.inf)
+
+    def per_vertex(i, carry):
+        match_wl, match_ring, thr = carry
+
+        # --- Dijkstra over alternating paths, bottleneck (max) metric ----
+        dist = weights[:, i, :]                        # (T, N)
+        parent = jnp.full((T, N), i, jnp.int32)        # wl -> relaxing ring
+        visited = jnp.zeros((T, N), bool)
+
+        def select_relax(_, c):
+            dist, parent, visited = c
+            d = jnp.where(visited, inf, dist)
+            k = jnp.argmin(d, axis=1).astype(jnp.int32)   # (T,) settled wl
+            dk = jnp.min(d, axis=1)
+            visited = visited.at[rows, k].set(True)
+            r = match_ring[rows, k]                    # matched ring or -1
+            r_safe = jnp.maximum(r, 0)
+            cand = jnp.maximum(dk[:, None], weights[rows, r_safe, :])
+            # Free wavelengths end the path: no expansion through them.
+            better = (r[:, None] >= 0) & ~visited & (cand < dist)
+            dist = jnp.where(better, cand, dist)
+            parent = jnp.where(better, r_safe[:, None], parent)
+            return dist, parent, visited
+
+        dist, parent, _ = jax.lax.fori_loop(
+            0, N, select_relax, (dist, parent, visited)
+        )
+
+        # --- cheapest free wavelength = this vertex's augmentation cost ---
+        df = jnp.where(match_ring < 0, dist, inf)      # >= 1 free wl always
+        k0 = jnp.argmin(df, axis=1).astype(jnp.int32)
+        thr = jnp.maximum(thr, jnp.min(df, axis=1))
+
+        # --- walk the augmenting path back, flipping matched edges -------
+        def walk(_, c):
+            match_wl, match_ring, k, active = c
+            r = parent[rows, k]
+            prev = match_wl[rows, r]                   # wl r was matched to
+            match_wl = match_wl.at[rows, r].set(
+                jnp.where(active, k, match_wl[rows, r])
+            )
+            match_ring = match_ring.at[rows, k].set(
+                jnp.where(active, r, match_ring[rows, k])
+            )
+            active = active & (r != i)
+            return match_wl, match_ring, jnp.where(active, jnp.maximum(prev, 0), k), active
+
+        match_wl, match_ring, _, _ = jax.lax.fori_loop(
+            0, N, walk, (match_wl, match_ring, k0, jnp.ones((T,), bool))
+        )
+        return match_wl, match_ring, thr
+
+    match_wl0 = jnp.full((T, N), -1, jnp.int32)
+    match_ring0 = jnp.full((T, N), -1, jnp.int32)
+    thr0 = jnp.full((T,), -jnp.inf, jnp.float32)
+    _, _, thr = jax.lax.fori_loop(0, N, per_vertex, (match_wl0, match_ring0, thr0))
+    return thr
 
 
 def _bottleneck_threshold_hall(weights: jax.Array) -> jax.Array:
@@ -238,16 +340,25 @@ def _bottleneck_threshold_hall(weights: jax.Array) -> jax.Array:
     )
 
 
-def bottleneck_matching_threshold(weights: jax.Array, n_steps: int | None = None) -> jax.Array:
+def bottleneck_matching_threshold(weights: jax.Array) -> jax.Array:
     """Minimum t such that a perfect matching exists in {weights <= t}.
 
     weights: (T, N, N) scaled residuals (ring x wl).  Small N uses the
-    loop-free Hall formulation; otherwise binary search over the sorted
-    per-trial edge weights — the bottleneck value is always one of the
-    N^2 edge weights.  Returns (T,) float32.
+    loop-free Hall formulation; larger N the single-pass bottleneck sweep
+    (``_bottleneck_threshold_sweep``).  The bottleneck value is always one
+    of the N^2 edge weights, bit-for-bit equal to the retired Kuhn binary
+    search (``_bottleneck_threshold_kuhn``, kept as the exactness oracle).
+    Returns (T,) float32.
     """
     if weights.shape[-1] <= _HALL_MAX_N:
         return _bottleneck_threshold_hall(weights)
+    return _bottleneck_threshold_sweep(weights)
+
+
+def _bottleneck_threshold_kuhn(weights: jax.Array, n_steps: int | None = None) -> jax.Array:
+    """Exactness oracle: binary search over sorted per-trial edge weights
+    with a full Kuhn matching-existence query per step — the pre-sweep
+    (PR 1) N > ``_HALL_MAX_N`` path, ~ceil(log2 N^2)+1 Kuhn runs."""
     T, N, _ = weights.shape
     flat = weights.reshape(T, N * N)
     cand = jnp.sort(flat, axis=1)                          # (T, N^2) ascending
@@ -260,7 +371,8 @@ def bottleneck_matching_threshold(weights: jax.Array, n_steps: int | None = None
         lo, hi = carry
         mid = (lo + hi) // 2
         thr = cand[jnp.arange(T), mid]
-        ok = has_perfect_matching(weights <= thr[:, None, None])
+        mw, _ = max_matching(adjacency_bitmask(weights <= thr[:, None, None]))
+        ok = jnp.all(mw >= 0, axis=1)
         return jnp.where(ok, lo, mid + 1), jnp.where(ok, mid, hi)
 
     lo, hi = jax.lax.fori_loop(0, steps, body, (lo, hi))

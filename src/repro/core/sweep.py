@@ -38,11 +38,22 @@ Usage::
     # Fig. 5/7/8: minimum tuning range along any named axis.
     mt = sweep_min_tr(cfg, units, "lta", {"fsr_mean": fsrs})  # (len(fsrs),)
 
+    # Device-parallel grids: shard the chunk axis over a 1-D mesh.  Works
+    # with real TPUs and with placeholder CPU devices (dryrun.py's
+    # --xla_force_host_platform_device_count); results are bit-identical
+    # to the unsharded engine and invariant to the mesh size.
+    from repro.launch.mesh import make_sweep_mesh
+
+    mesh = make_sweep_mesh()           # ("sweep",) over all visible devices
+    afp = sweep_policy(cfg, units, "ltc",
+                       {"sigma_rlv": rlvs, "tr_mean": trs}, mesh=mesh)
+
 ``backend`` threads through to the kernel wrappers in ``repro.kernels.ops``
 (``"jnp"``, ``"interpret"``, ``"pallas"``); the default ``None`` uses the
 pure-jnp core path.  ``sweep_grid_reference`` keeps the pre-engine per-point
 loop as the golden oracle — the engine is bit-for-bit equal to it (asserted
-in tests/test_sweep.py).
+in tests/test_sweep.py), and it validates requests identically so it rejects
+exactly what the engine rejects.
 """
 from __future__ import annotations
 
@@ -84,12 +95,40 @@ AXIS_NAMES = (
 _CHUNK_BUDGET = 256 * 1024 * 1024
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
+    """shard_map across jax versions (jax.shard_map landed in 0.6)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_rep
+    )
+
+
 def _check_names(names, *, metric: str) -> None:
     for name in names:
         if name not in AXIS_NAMES:
             raise ValueError(f"unknown sweep axis {name!r}; valid: {AXIS_NAMES}")
     if metric == "min_tr" and "tr_mean" in names:
         raise ValueError("min_tr sweeps solve for TR; 'tr_mean' cannot be an axis")
+
+
+def _validate_request(names, fixed, *, metric: str, policy, scheme) -> None:
+    """Shared request validation: the engine and the reference loop must
+    accept/reject identically (the oracle is only an oracle on the domain
+    the engine serves)."""
+    if (policy is None) == (scheme is None):
+        raise ValueError("exactly one of policy/scheme required")
+    if metric not in ("eval", "min_tr"):
+        raise ValueError(f"unknown metric {metric!r}")
+    if metric == "min_tr" and policy is None:
+        raise ValueError("min_tr sweeps are policy sweeps")
+    _check_names(names, metric=metric)
+    _check_names(fixed, metric=metric)
+    overlap = set(names) & set(fixed)
+    if overlap:
+        raise ValueError(f"axes and fixed overlap: {sorted(overlap)}")
 
 
 def _grid_points(axes: Mapping[str, np.ndarray]):
@@ -125,7 +164,7 @@ def _auto_chunk(cfg: ArbitrationConfig, units: UnitSamples, n_points: int,
 @partial(
     jax.jit,
     static_argnames=("cfg", "policy", "scheme", "metric", "names",
-                     "fixed_names", "chunk", "backend"),
+                     "fixed_names", "chunk", "backend", "mesh"),
 )
 def _sweep_flat(
     cfg: ArbitrationConfig,
@@ -140,10 +179,18 @@ def _sweep_flat(
     fixed_names: tuple,
     chunk: int,
     backend: str | None,
+    mesh=None,
 ):
-    """Chunked vmap over flat grid points; one compilation for the grid."""
+    """Chunked vmap over flat grid points; one compilation for the grid.
 
-    def eval_point(vals):
+    With ``mesh`` (a 1-D ``jax.sharding.Mesh``), the chunk axis is split
+    over the mesh devices with ``shard_map`` — each device runs the same
+    per-chunk program on its slice of the chunk list, so results are
+    bit-identical to the unsharded engine and invariant to the mesh size
+    (the chunking contract extended to devices).
+    """
+
+    def eval_point(units, fixed_values, vals):
         kw = {fn: fixed_values[i] for i, fn in enumerate(fixed_names)}
         kw.update({name: vals[i] for i, name in enumerate(names)})
         if metric == "min_tr":
@@ -159,12 +206,30 @@ def _sweep_flat(
             cfg, units, scheme, tr_mean, backend=backend, **kw
         )
 
+    def run_chunks(units, fixed_values, chunks):  # (C, chunk, K) -> C-leading tree
+        return jax.lax.map(
+            jax.vmap(partial(eval_point, units, fixed_values)), chunks
+        )
+
     p = points.shape[0]
     n_chunks = -(-p // chunk)
+    if mesh is not None:
+        n_dev = mesh.devices.size
+        n_chunks = -(-n_chunks // n_dev) * n_dev   # whole chunks per device
     pad = n_chunks * chunk - p
     # Padded points repeat the last row: numerically benign, results dropped.
     padded = jnp.concatenate([points, jnp.tile(points[-1:], (pad, 1))]) if pad else points
-    out = jax.lax.map(jax.vmap(eval_point), padded.reshape(n_chunks, chunk, -1))
+    chunks = padded.reshape(n_chunks, chunk, -1)
+    if mesh is None:
+        out = run_chunks(units, fixed_values, chunks)
+    else:
+        P = jax.sharding.PartitionSpec
+        axis = mesh.axis_names[0]
+        out = _shard_map(
+            run_chunks, mesh=mesh,
+            in_specs=(P(), P(), P(axis)), out_specs=P(axis),
+            check_rep=False,
+        )(units, fixed_values, chunks)
     return jax.tree_util.tree_map(
         lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:p], out
     )
@@ -194,6 +259,7 @@ def sweep_grid(
     chunk_size: int | None = None,
     backend: str | None = None,
     tr_fast: bool = True,
+    mesh=None,
 ):
     """Evaluate a full named-axis grid in one jitted call.
 
@@ -207,22 +273,21 @@ def sweep_grid(
             to a free threshold comparison against one per-trial min-TR
             evaluation per remaining point (bit-exact; see
             ``_afp_from_trial_min_tr``).  Disable to force the direct path.
+    mesh:   optional 1-D ``jax.sharding.Mesh`` (e.g. from
+            ``repro.launch.mesh.make_sweep_mesh``); the chunk axis is split
+            over its devices with ``shard_map``.  A pure performance knob:
+            results are bit-identical to the unsharded engine and invariant
+            to the mesh size.
     Returns grid-shaped array(s): EvalResult of grids for a scheme,
     a single grid otherwise.
     """
-    if (policy is None) == (scheme is None):
-        raise ValueError("exactly one of policy/scheme required")
-    if metric not in ("eval", "min_tr"):
-        raise ValueError(f"unknown metric {metric!r}")
-    if metric == "min_tr" and policy is None:
-        raise ValueError("min_tr sweeps are policy sweeps")
     fixed = dict(fixed or {})
     names, points, shape = _grid_points(axes)
-    _check_names(names, metric=metric)
-    _check_names(fixed, metric=metric)
-    overlap = set(names) & set(fixed)
-    if overlap:
-        raise ValueError(f"axes and fixed overlap: {sorted(overlap)}")
+    _validate_request(names, fixed, metric=metric, policy=policy, scheme=scheme)
+    if mesh is not None and len(mesh.axis_names) != 1:
+        raise ValueError(
+            f"sweep meshes are 1-D (the chunk axis); got axes {mesh.axis_names}"
+        )
 
     if policy is not None and metric == "eval" and tr_fast and "tr_mean" in names:
         # TR fast path: one per-trial min-TR evaluation per non-TR point,
@@ -245,7 +310,7 @@ def sweep_grid(
     out = _sweep_flat(
         cfg, units, jnp.asarray(points), fixed_values,
         policy=policy, scheme=scheme, metric=metric, names=names,
-        fixed_names=fixed_names, chunk=chunk, backend=backend,
+        fixed_names=fixed_names, chunk=chunk, backend=backend, mesh=mesh,
     )
     if tr_idx is not None:
         afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
@@ -284,13 +349,13 @@ def sweep_grid_reference(
     """Pre-engine per-point Python loop: one jitted call per grid point.
 
     The golden oracle for ``sweep_grid`` (bit-for-bit equal on CPU); also a
-    readable spec of what the engine computes.  Never use on a hot path.
+    readable spec of what the engine computes.  Validates requests with the
+    same ``_validate_request`` as the engine, so it rejects exactly what the
+    engine rejects.  Never use on a hot path.
     """
-    if (policy is None) == (scheme is None):
-        raise ValueError("exactly one of policy/scheme required")
     fixed = dict(fixed or {})
     names, points, shape = _grid_points(axes)
-    _check_names(names, metric=metric)
+    _validate_request(names, fixed, metric=metric, policy=policy, scheme=scheme)
     outs = []
     for vals in points:
         kw = dict(fixed, backend=backend)

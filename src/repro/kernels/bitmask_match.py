@@ -1,7 +1,9 @@
-"""Pallas TPU kernel: batched bitmask Kuhn matching (ideal LtA arbiter).
+"""Pallas TPU kernels: batched matching for the ideal LtA arbiter.
 
-Perfect-matching existence over the (ring x line) reachability graph, for a
-lane of 128 trials at once.  All state is int32 vectors/tiles:
+Two kernels over the (ring x line) graph, each for a lane of 128 trials:
+
+``_match_kernel`` — bitmask Kuhn perfect-matching existence.  All state is
+int32 vectors/tiles:
 
   adj       (N, TB)  per-ring line bitmask           (input)
   match_wl  (N, TB)  ring -> matched line index, -1  (carried in registers)
@@ -10,10 +12,20 @@ lane of 128 trials at once.  All state is int32 vectors/tiles:
 
 Per left vertex: BFS over alternating paths using lane-wise variable shifts
 (TPU VPU supports per-lane shift amounts), then an augmenting walk-back of at
-most N steps.  Dynamic row selects use the one-hot reduce trick so nothing
-requires cross-sublane gathers.  No data-dependent control flow: fixed
-fori_loop trip counts, masks everywhere — the kernel is oblivious to which
-trials already finished, exactly like the batched hardware arbiter.
+most N steps.
+
+``_bottleneck_kernel`` — single-pass bottleneck matching threshold over f32
+edge weights (N, N, TB), mirroring
+``repro.core.matching._bottleneck_threshold_sweep``: per left vertex a
+Dijkstra-style search minimizing the max edge weight on an alternating path
+(``dist``/``parent``/``visited`` all (N, TB)), then the same walk-back.
+Selection argmins run as min-reductions over the sublane axis with an iota
+tie-break, so results stay bit-identical to the jnp path.
+
+Dynamic row selects use the one-hot reduce trick so nothing requires
+cross-sublane gathers.  No data-dependent control flow: fixed fori_loop trip
+counts, masks everywhere — the kernels are oblivious to which trials already
+finished, exactly like the batched hardware arbiter.
 """
 from __future__ import annotations
 
@@ -108,6 +120,97 @@ def _match_kernel(adj_ref, match_wl_ref, ok_ref):
     match_wl, match_rg = jax.lax.fori_loop(0, n, per_vertex, (match_wl, match_rg))
     match_wl_ref[...] = match_wl
     ok_ref[0, :] = jnp.all(match_wl >= 0, axis=0).astype(jnp.int32)
+
+
+def _bottleneck_kernel(w_ref, thr_ref):
+    n, _, tb = w_ref.shape
+    w = w_ref[...]                                    # (ring, wl, trial) f32
+    riota = _row_iota(n, tb)
+    iota3 = jax.lax.broadcasted_iota(jnp.int32, (n, n, tb), 0)
+    inf = jnp.float32(jnp.inf)
+
+    def ring_row(r):
+        """(TB,) ring index per lane -> (N, TB) that ring's weight row."""
+        return jnp.sum(jnp.where(iota3 == r[None, None, :], w, 0.0), axis=0)
+
+    def first_min(d):
+        """(N, TB) -> per-lane (min value, lowest index attaining it)."""
+        dmin = jnp.min(d, axis=0)
+        idx = jnp.min(jnp.where(d == dmin[None, :], riota, n), axis=0)
+        return dmin, idx
+
+    def per_vertex(i, carry):
+        match_wl, match_rg, thr = carry
+        dist = jnp.sum(jnp.where(iota3 == i, w, 0.0), axis=0)   # w[i] (N, TB)
+        parent = jnp.full((n, tb), i, jnp.int32)
+        visited = jnp.zeros((n, tb), jnp.int32)
+
+        def select_relax(_, c):
+            dist, parent, visited = c
+            d = jnp.where(visited == 1, inf, dist)
+            dk, k = first_min(d)
+            visited = jnp.where(riota == k[None, :], 1, visited)
+            r = _select_row(match_rg, k)              # matched ring or -1
+            r_safe = jnp.maximum(r, 0)
+            cand = jnp.maximum(dk[None, :], ring_row(r_safe))
+            better = (r[None, :] >= 0) & (visited == 0) & (cand < dist)
+            dist = jnp.where(better, cand, dist)
+            parent = jnp.where(better, r_safe[None, :], parent)
+            return dist, parent, visited
+
+        dist, parent, _ = jax.lax.fori_loop(
+            0, n, select_relax, (dist, parent, visited)
+        )
+        df = jnp.where(match_rg < 0, dist, inf)
+        best, k0 = first_min(df)
+        thr = jnp.maximum(thr, best)
+
+        def walk(_, c):
+            match_wl, match_rg, k, active = c
+            r = _select_row(parent, k)
+            r_safe = jnp.maximum(r, 0)
+            prev = _select_row(match_wl, r_safe)
+            upd_wl = active[None, :] & (riota == r_safe[None, :])
+            match_wl = jnp.where(upd_wl, k[None, :], match_wl)
+            upd_rg = active[None, :] & (riota == k[None, :])
+            match_rg = jnp.where(upd_rg, r_safe[None, :], match_rg)
+            active = active & (r != i)
+            return match_wl, match_rg, jnp.where(active, jnp.maximum(prev, 0), k), active
+
+        match_wl, match_rg, _, _ = jax.lax.fori_loop(
+            0, n, walk, (match_wl, match_rg, k0, jnp.ones((tb,), bool))
+        )
+        return match_wl, match_rg, thr
+
+    _, _, thr = jax.lax.fori_loop(
+        0, n, per_vertex,
+        (
+            jnp.full((n, tb), -1, jnp.int32),
+            jnp.full((n, tb), -1, jnp.int32),
+            jnp.full((tb,), -jnp.inf, jnp.float32),
+        ),
+    )
+    thr_ref[0, :] = thr
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bottleneck_pallas(w, *, interpret=False):
+    """w: (N, N, T) f32 edge weights (ring x wl x trial), T % TRIAL_BLOCK == 0.
+
+    Returns (T,) f32 bottleneck matching thresholds.
+    """
+    n, _, t = w.shape
+    assert t % TRIAL_BLOCK == 0, t
+    grid = (t // TRIAL_BLOCK,)
+    thr = pl.pallas_call(
+        _bottleneck_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((n, n, TRIAL_BLOCK), lambda b: (0, 0, b))],
+        out_specs=pl.BlockSpec((1, TRIAL_BLOCK), lambda b: (0, b)),
+        out_shape=jax.ShapeDtypeStruct((1, t), jnp.float32),
+        interpret=interpret,
+    )(w)
+    return thr[0]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

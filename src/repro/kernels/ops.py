@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .bitmask_match import TRIAL_BLOCK, match_pallas
+from .bitmask_match import TRIAL_BLOCK, bottleneck_pallas, match_pallas
 from .feasibility import feasibility_pallas
 from .table_build import table_pallas
 
@@ -86,6 +86,24 @@ def perfect_matching(adj, *, backend="auto"):
     tp = _padded_t(t)
     mw, ok = match_pallas(_pad_cols(adj_c, tp), interpret=(backend == "interpret"))
     return jnp.swapaxes(mw, -1, -2)[:t], ok[:t]
+
+
+def bottleneck_threshold(weights, *, backend="auto"):
+    """weights: (T, N, N) scaled residuals -> (T,) bottleneck thresholds.
+
+    The LtA per-trial minimum mean TR (one single-pass bottleneck matching;
+    see ``repro.core.matching``).  Layout move is a last-three-axes
+    ``moveaxis`` so extra leading vmap axes pass through untouched.
+    """
+    backend = _resolve(backend)
+    w = jnp.moveaxis(jnp.asarray(weights, jnp.float32), -3, -1)  # (N, N, T)
+    if backend == "jnp":
+        return ref.bottleneck_ref(w)
+    t = w.shape[-1]
+    tp = _padded_t(t)
+    # Padded trials see all-zero weights: threshold 0, sliced off below.
+    thr = bottleneck_pallas(_pad_cols(w, tp), interpret=(backend == "interpret"))
+    return thr[:t]
 
 
 def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend="auto"):

@@ -5,7 +5,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import ideal
-from repro.core.matching import adjacency_bitmask, max_matching
+from repro.core.matching import (
+    adjacency_bitmask,
+    bottleneck_matching_threshold,
+    max_matching,
+)
 from repro.core.sampling import SystemBatch
 from repro.core.search_table import build_search_tables
 
@@ -26,6 +30,15 @@ def match_ref(adj):
     """Oracle for kernels.bitmask_match: adj (N, T) -> (match_wl, perfect)."""
     match_wl, _ = max_matching(adj.T)          # (T, N)
     return match_wl.T, jnp.all(match_wl >= 0, axis=1)
+
+
+def bottleneck_ref(w):
+    """Oracle for kernels.bottleneck_pallas: w (N, N, T) -> (T,) thresholds.
+
+    Delegates to the core dispatcher (Hall for small N, the single-pass
+    sweep otherwise) — all formulations are bit-identical.
+    """
+    return bottleneck_matching_threshold(jnp.moveaxis(w, -1, -3))
 
 
 def table_ref(laser, ring, fsr, tr, *, max_alias=8, max_entries=None):

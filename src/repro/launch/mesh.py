@@ -46,6 +46,28 @@ def make_host_mesh(model_parallel: int = 1):
     )
 
 
+def make_sweep_mesh(n_devices: int | None = None):
+    """1-D ``("sweep",)`` mesh for device-parallel ``sweep_grid(mesh=...)``.
+
+    Uses the leading ``n_devices`` of whatever exists (all of them by
+    default) — real TPUs, or placeholder CPU devices under dryrun.py's
+    ``--xla_force_host_platform_device_count=512``.  The sweep engine splits
+    its flat chunk axis over this mesh with ``shard_map``; results are
+    bit-identical for every mesh size, so the device count is purely a
+    throughput knob.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if n > len(devs):
+        raise RuntimeError(
+            f"need {n} devices for a sweep mesh, have {len(devs)} — run under "
+            "dryrun.py (sets --xla_force_host_platform_device_count=512)"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("sweep",))
+
+
 def data_axes(mesh) -> tuple:
     """Mesh axes that shard the batch (pod + data when present)."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,79 @@
+"""Tier-1-safe self-test for benchmarks.check_regression — synthetic BENCH
+payloads only, no jax, no benchmark execution."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import compare, main
+
+
+def _payload(full=False, **figure_times):
+    """figure_times: name -> (module_wall_ms, engine_ms | None)."""
+    records = []
+    for fig, (wall, engine) in figure_times.items():
+        derived = {} if engine is None else {"engine_ms": engine}
+        records.append(
+            {"figure": fig, "name": f"{fig}/row", "module_wall_ms": wall,
+             "derived": derived}
+        )
+    return {"schema": "bench.v1", "full": full, "records": records}
+
+
+def test_no_regression_within_threshold():
+    old = _payload(fig4=(1000.0, 100.0), fig5=(500.0, None))
+    new = _payload(fig4=(1150.0, 110.0), fig5=(550.0, None))  # <= +20%
+    regressions, _ = compare(old, new)
+    assert regressions == []
+
+
+def test_figure_and_record_regressions_flagged():
+    old = _payload(fig4=(1000.0, 100.0))
+    new = _payload(fig4=(1500.0, 200.0))
+    regressions, _ = compare(old, new)
+    kinds = {(r["kind"], r["name"]) for r in regressions}
+    assert ("figure", "fig4") in kinds
+    assert ("record", "fig4/row") in kinds
+    ratios = {r["name"]: r["ratio"] for r in regressions}
+    assert ratios["fig4"] == pytest.approx(1.5)
+
+
+def test_added_and_removed_figures_never_fail():
+    old = _payload(fig4=(1000.0, None), old_only=(100.0, None))
+    new = _payload(fig4=(1000.0, None), new_only=(99999.0, None))
+    regressions, notes = compare(old, new)
+    assert regressions == []
+    assert any("new_only" in n for n in notes)
+    assert any("old_only" in n for n in notes)
+
+
+def test_threshold_is_configurable():
+    old = _payload(fig4=(1000.0, None))
+    new = _payload(fig4=(1100.0, None))
+    assert compare(old, new, threshold=0.20)[0] == []
+    assert len(compare(old, new, threshold=0.05)[0]) == 1
+
+
+def test_main_exit_codes(tmp_path):
+    ok_old = tmp_path / "old.json"
+    ok_new = tmp_path / "new.json"
+    ok_old.write_text(json.dumps(_payload(fig4=(1000.0, 100.0))))
+    ok_new.write_text(json.dumps(_payload(fig4=(1010.0, 101.0))))
+    assert main([str(ok_old), str(ok_new)]) == 0
+
+    bad_new = tmp_path / "bad.json"
+    bad_new.write_text(json.dumps(_payload(fig4=(2000.0, 100.0))))
+    assert main([str(ok_old), str(bad_new)]) == 1
+
+    full_new = tmp_path / "full.json"
+    full_new.write_text(json.dumps(_payload(full=True, fig4=(1000.0, 100.0))))
+    assert main([str(ok_old), str(full_new)]) == 2
+
+
+def test_main_schema_mismatch_is_incomparable(tmp_path):
+    a = tmp_path / "a.json"
+    b = tmp_path / "b.json"
+    a.write_text(json.dumps(_payload(fig4=(1000.0, None))))
+    v2 = _payload(fig4=(1000.0, None))
+    v2["schema"] = "bench.v2"
+    b.write_text(json.dumps(v2))
+    assert main([str(a), str(b)]) == 2

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import ArbitrationConfig, DWDMGrid, make_units, permuted_order
 from repro.core.matching import adjacency_bitmask
-from repro.core.reach import reach_matrix
+from repro.core.reach import reach_matrix, scaled_residual
 from repro.core.sampling import instantiate
 from repro.kernels import ops
 
@@ -66,6 +66,17 @@ def test_match_kernel(n_ch, tr_mean):
         assert len(set(wl.tolist())) == n_ch          # all distinct lines
         for i in range(n_ch):
             assert (adj_np[t, i] >> wl[i]) & 1 == 1   # edges exist
+
+
+@pytest.mark.parametrize("n_ch", [8, 16])
+def test_bottleneck_kernel(n_ch):
+    """Bottleneck sweep kernel (interpret) vs the jnp dispatch — N=8 crosses
+    the Hall path, N=16 the core single-pass sweep; all bit-identical."""
+    _, sys = _sys(n_ch=n_ch, seed=3, n=6)        # 36 trials, one padded block
+    w = scaled_residual(sys)
+    thr_k = ops.bottleneck_threshold(w, backend="interpret")
+    thr_r = ops.bottleneck_threshold(w, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(thr_k), np.asarray(thr_r))
 
 
 @pytest.mark.parametrize("n_ch", [4, 8, pytest.param(16, marks=pytest.mark.slow)])

@@ -1,0 +1,115 @@
+"""N > _HALL_MAX_N matching fast path: the single-pass bottleneck sweep
+(threshold and existence forms) must match the Kuhn/binary-search oracle
+bit-for-bit — value-level pins at wdm16/wdm32, tie-heavy quantized weights,
+and hypothesis properties over random reach masks."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.wdm import WDM16_G200, WDM32_G200
+from repro.core import make_units
+from repro.core import matching
+from repro.core.reach import reach_matrix, scaled_residual
+from repro.core.sampling import instantiate
+
+
+def _weights(cfg, seed=7, n=5):
+    sys = instantiate(cfg, make_units(cfg, seed, n, n))
+    return sys, scaled_residual(sys)
+
+
+def _kuhn_exists(reach):
+    mw, _ = matching.max_matching(matching.adjacency_bitmask(reach))
+    return np.asarray(jnp.all(mw >= 0, axis=1))
+
+
+def test_sweep_bottleneck_bit_exact_vs_kuhn_wdm16():
+    """Value-level pin: the sweep threshold IS the binary-search result."""
+    sys, w = _weights(WDM16_G200)
+    assert w.shape[-1] > matching._HALL_MAX_N  # exercises the sweep path
+    got = np.asarray(matching.bottleneck_matching_threshold(w))
+    oracle = np.asarray(matching._bottleneck_threshold_kuhn(w))
+    assert np.array_equal(got, oracle)
+    # Existence form == Kuhn at spot TRs, and consistent with the threshold.
+    for tr in (3.0, 8.0, 14.0):
+        reach = reach_matrix(sys, tr)
+        ok = np.asarray(matching.has_perfect_matching(reach))
+        kuhn_ok = _kuhn_exists(reach)
+        assert np.array_equal(ok, kuhn_ok), tr
+        assert np.array_equal(got <= tr, kuhn_ok), tr
+
+
+@pytest.mark.slow
+def test_sweep_bottleneck_bit_exact_vs_kuhn_wdm32():
+    sys, w = _weights(WDM32_G200, n=4)
+    got = np.asarray(matching.bottleneck_matching_threshold(w))
+    assert np.array_equal(got, np.asarray(matching._bottleneck_threshold_kuhn(w)))
+    reach = reach_matrix(sys, 20.0)
+    assert np.array_equal(
+        np.asarray(matching.has_perfect_matching(reach)), _kuhn_exists(reach)
+    )
+
+
+def test_sweep_bottleneck_tie_heavy_weights():
+    """Quantized weights force massive rank ties: any augmenting-path choice
+    must still land on the same (unique) bottleneck value."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.integers(0, 4, (24, 12, 12)).astype(np.float32))
+    assert np.array_equal(
+        np.asarray(matching._bottleneck_threshold_sweep(w)),
+        np.asarray(matching._bottleneck_threshold_kuhn(w)),
+    )
+
+
+# ------------------------------------------------------ hypothesis props ---
+# Guarded per-test (not module-level importorskip) so the value pins above
+# always run even where hypothesis is absent.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - property tests become skips
+    given = None
+
+_N = 12  # > _HALL_MAX_N, small enough for the Kuhn oracle per example
+
+
+def _existence_case(seed, density):
+    rng = np.random.default_rng(seed)
+    reach = jnp.asarray(rng.random((8, _N, _N)) < density)
+    assert np.array_equal(
+        np.asarray(matching.has_perfect_matching(reach)), _kuhn_exists(reach)
+    )
+
+
+def _bottleneck_case(seed, levels):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.integers(0, levels, (6, _N, _N)).astype(np.float32))
+    assert np.array_equal(
+        np.asarray(matching._bottleneck_threshold_sweep(w)),
+        np.asarray(matching._bottleneck_threshold_kuhn(w)),
+    )
+
+
+if given is not None:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.05, 0.95))
+    def test_existence_matches_kuhn_on_random_reach_masks(seed, density):
+        _existence_case(seed, density)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 8))
+    def test_bottleneck_matches_kuhn_on_random_weights(seed, levels):
+        _bottleneck_case(seed, levels)
+
+else:
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+    def test_existence_matches_kuhn_on_random_reach_masks(seed):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _existence_case(seed, density=0.1 + 0.2 * seed)
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+    def test_bottleneck_matches_kuhn_on_random_weights(seed):
+        """Fixed-seed fallback when hypothesis is unavailable."""
+        _bottleneck_case(seed, levels=2 + seed)

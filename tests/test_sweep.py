@@ -136,6 +136,98 @@ def test_sweep_validation_errors():
         sweep_policy(cfg, units, "ltc", AXES, fixed={"sigma_rlv": 1.0})
 
 
+def test_sweep_reference_validates_like_engine():
+    """The oracle must reject exactly what the engine rejects (same shared
+    validation): bad fixed names, axes/fixed overlap, metric misuse."""
+    cfg = WDM8_G200
+    units = _units(cfg, n=2)
+    for call in (sweep_grid, sweep_grid_reference):
+        with pytest.raises(ValueError, match="exactly one"):
+            call(cfg, units, AXES)
+        with pytest.raises(ValueError, match="unknown sweep axis"):
+            call(cfg, units, {"tr_mean": TRS}, policy="ltc", fixed={"bogus": 1.0})
+        with pytest.raises(ValueError, match="overlap"):
+            call(cfg, units, AXES, policy="ltc", fixed={"sigma_rlv": 1.0})
+        with pytest.raises(ValueError, match="unknown metric"):
+            call(cfg, units, AXES, policy="ltc", metric="nope")
+        with pytest.raises(ValueError, match="cannot be an axis"):
+            call(cfg, units, AXES, policy="ltc", metric="min_tr")
+        with pytest.raises(ValueError, match="policy sweeps"):
+            call(cfg, units, {"sigma_rlv": RLVS}, scheme="seq", metric="min_tr")
+
+
+# ---------------------------------------------------------- sharded mesh ---
+
+def test_sweep_mesh_sharded_bit_exact_in_process():
+    """shard_map over a 1-device host mesh == unsharded engine, for both a
+    policy grid and a scheme EvalResult pytree."""
+    from repro.launch.mesh import make_sweep_mesh
+
+    cfg = WDM8_G200
+    units = _units(cfg)
+    mesh = make_sweep_mesh()
+    base = np.asarray(sweep_policy(cfg, units, "ltc", AXES))
+    got = np.asarray(sweep_policy(cfg, units, "ltc", AXES, mesh=mesh, chunk_size=2))
+    assert np.array_equal(got, base)
+    r0 = sweep_scheme(cfg, units, "seq", {"tr_mean": TRS})
+    r1 = sweep_scheme(cfg, units, "seq", {"tr_mean": TRS}, mesh=mesh, chunk_size=2)
+    for field in r0._fields:
+        assert np.array_equal(
+            np.asarray(getattr(r0, field)), np.asarray(getattr(r1, field))
+        ), field
+
+
+def test_sweep_mesh_must_be_1d():
+    cfg = WDM8_G200
+    units = _units(cfg, n=2)
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh2d = jax.sharding.Mesh(devs, ("a", "b"))
+    with pytest.raises(ValueError, match="1-D"):
+        sweep_policy(cfg, units, "ltc", AXES, mesh=mesh2d)
+
+
+def test_sweep_mesh_size_invariance_subprocess():
+    """Mesh size is a pure performance knob: 1-device and 8-placeholder-
+    device grids are bit-identical to the unsharded engine (wdm16, so the
+    N > 10 bottleneck sweep runs under shard_map too).  Subprocess because
+    jax locks the host device count at first init."""
+    import os
+    import subprocess
+    import sys as _sys
+    from pathlib import Path
+
+    script = """
+import numpy as np
+from repro.configs.wdm import WDM16_G200
+from repro.core import make_units, sweep_policy
+from repro.launch.mesh import make_sweep_mesh
+
+cfg = WDM16_G200
+units = make_units(cfg, seed=4, n_laser=5, n_ring=5)
+axes = {"sigma_rlv": np.array([0.28, 2.24], np.float32),
+        "tr_mean": np.array([4.0, 9.5], np.float32)}
+base = np.asarray(sweep_policy(cfg, units, "lta", axes))
+for nd in (1, 8):
+    got = np.asarray(
+        sweep_policy(cfg, units, "lta", axes, mesh=make_sweep_mesh(nd), chunk_size=1)
+    )
+    assert np.array_equal(got, base), nd
+print("MESH_INVARIANT_OK")
+"""
+    root = Path(__file__).resolve().parent.parent
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        PYTHONPATH=str(root / "src") + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    out = subprocess.run(
+        [_sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, cwd=root, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MESH_INVARIANT_OK" in out.stdout
+
+
 # ------------------------------------------------------- relation search ---
 
 @pytest.mark.parametrize("kind", ["natural", "permuted"])
