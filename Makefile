@@ -1,0 +1,21 @@
+# CI entry points (ROADMAP "wire into CI"): `make ci` is what the GitHub
+# workflow runs — the tier-1 suite plus the BENCH-gate self-test.
+PY ?= python
+
+.PHONY: ci tier1 bench-selftest bench bench-gate
+
+ci: tier1 bench-selftest
+
+tier1:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-selftest:
+	$(PY) benchmarks/check_regression.py --self-test
+
+# Regenerate the BENCH trajectory file and gate it against the committed
+# baseline (>20% per-figure / per-record slowdowns fail).
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run --json BENCH_new.json
+
+bench-gate: bench
+	$(PY) benchmarks/check_regression.py BENCH_sweep.json BENCH_new.json

@@ -6,14 +6,16 @@ Finding: retry+augment closes most of the naive-greedy gap at the extremes
 but mid-TR starvation needs multi-hop augmenting (an O(N^3)-probe
 protocol) — quantitative evidence for why the paper deferred LtA.
 
-The TR axis is one jitted sweep-engine call."""
+The TR axis is one declarative ``SweepRequest`` — one jitted sweep-engine
+call.  The retry-budget trade-off of the same arbiter family is studied in
+``fig17_retry_budget`` via the parametrized scheme registry."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_scheme
+from repro.core import SweepRequest, make_units, sweep
 
 from .common import n_samples, timed_steady, tr_sweep
 
@@ -22,9 +24,10 @@ def run(full: bool = False):
     n = n_samples(full)
     units = make_units(WDM8_G200, seed=21, n_laser=n, n_ring=n)
     trs = tr_sweep()
-    res, engine_ms = timed_steady(
-        sweep_scheme, WDM8_G200, units, "seq_retry", {"tr_mean": trs}
-    )
+    req = SweepRequest(cfg=WDM8_G200, units=units, scheme="seq_retry",
+                       axes={"tr_mean": trs})
+    r, engine_ms = timed_steady(sweep, req)
+    res = r.data
     afp = [round(float(v), 4) for v in np.asarray(res.afp)]
     cafp = [round(float(v), 4) for v in np.asarray(res.cafp)]
     return [

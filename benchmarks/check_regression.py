@@ -75,15 +75,65 @@ def compare(old: dict, new: dict, threshold: float = DEFAULT_THRESHOLD
     return regressions, notes
 
 
+def self_test() -> int:
+    """Dependency-free sanity check of the gate itself (the CI smoke step:
+    ``python benchmarks/check_regression.py --self-test``).
+
+    Exercises the compare() contract on synthetic payloads: within-threshold
+    changes pass, beyond-threshold figure and record slowdowns fail, and
+    added/removed figures never fail.  Returns 0 on success, 1 with a
+    diagnostic on any contract violation.
+    """
+    def payload(**figure_times):
+        records = []
+        for fig, (wall, engine) in figure_times.items():
+            derived = {} if engine is None else {"engine_ms": engine}
+            records.append({"figure": fig, "name": f"{fig}/row",
+                            "module_wall_ms": wall, "derived": derived})
+        return {"schema": "bench.v1", "full": False, "records": records}
+
+    checks = []
+    ok, _ = compare(payload(f=(1000.0, 100.0)), payload(f=(1150.0, 110.0)))
+    checks.append(("within-threshold passes", ok == []))
+    bad, _ = compare(payload(f=(1000.0, 100.0)), payload(f=(1500.0, 100.0)))
+    checks.append(("figure slowdown flagged",
+                   [(r["kind"], r["name"]) for r in bad] == [("figure", "f")]))
+    bad, _ = compare(payload(f=(1000.0, 100.0)), payload(f=(1000.0, 200.0)))
+    checks.append(("record slowdown flagged",
+                   [(r["kind"], r["name"]) for r in bad] == [("record", "f/row")]))
+    ok, notes = compare(payload(f=(1000.0, None), gone=(1.0, None)),
+                        payload(f=(1000.0, None), added=(9e9, None)))
+    checks.append(("added/removed figures never fail",
+                   ok == [] and len(notes) == 2))
+    tight, _ = compare(payload(f=(1000.0, None)), payload(f=(1100.0, None)),
+                       threshold=0.05)
+    checks.append(("threshold configurable", len(tight) == 1))
+
+    failed = [name for name, passed in checks if not passed]
+    for name, passed in checks:
+        print(f"self-test {'ok' if passed else 'FAIL'}: {name}")
+    if failed:
+        print(f"{len(failed)} self-test check(s) failed")
+        return 1
+    print("self-test OK")
+    return 0
+
+
 def main(argv: List[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         description="Fail on >threshold per-figure BENCH regressions."
     )
-    ap.add_argument("old", help="baseline BENCH_*.json")
-    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("old", nargs="?", help="baseline BENCH_*.json")
+    ap.add_argument("new", nargs="?", help="candidate BENCH_*.json")
     ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
                     help="max allowed fractional slowdown (default 0.20)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the gate's built-in contract checks and exit")
     args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    if args.old is None or args.new is None:
+        ap.error("old and new BENCH files are required (or use --self-test)")
 
     with open(args.old) as f:
         old = json.load(f)

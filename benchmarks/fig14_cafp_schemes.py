@@ -5,14 +5,15 @@ Paper claims: proposed schemes beat the baseline everywhere; VT-RS/SSM
 closely approximates ideal LtC (CAFP ~ 0); RS/SSM residual errors near
 TR ~ 8 nm from the 10% tuning-range variation.
 
-Each (order, scheme) shmoo is one jitted sweep-engine call."""
+Each (order, scheme) shmoo is one declarative ``SweepRequest`` — one
+jitted sweep-engine call."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_scheme
+from repro.core import SweepRequest, make_units, sweep
 
 from .common import n_samples, rlv_sweep, timed_steady, tr_sweep
 
@@ -27,14 +28,15 @@ def run(full: bool = False):
         cfg = WDM8_G200.with_orders(order)
         units = make_units(cfg, seed=9, n_laser=n, n_ring=n)
         for scheme in ("seq", "rs_ssm", "vtrs_ssm"):
-            res, engine_ms = timed_steady(sweep_scheme, cfg, units, scheme, axes)
-            grid = np.asarray(res.cafp, np.float32)
+            req = SweepRequest(cfg=cfg, units=units, scheme=scheme, axes=axes)
+            res, engine_ms = timed_steady(sweep, req)
+            grid = np.asarray(res.data.cafp, np.float32)
             rows.append(
                 (
                     f"fig14/{order}/{scheme}",
                     {
-                        "sigma_rlv": rlvs.tolist(),
-                        "tr": trs.tolist(),
+                        "sigma_rlv": res.axis("sigma_rlv").tolist(),
+                        "tr": res.axis("tr_mean").tolist(),
                         "cafp": np.round(grid, 4).tolist(),
                         "max_cafp": round(float(grid.max()), 4),
                         "mean_cafp": round(float(grid.mean()), 4),

@@ -4,15 +4,16 @@ lane-order errors, under (a,b) ideal laser/ring variations and (c,d) nominal.
 Paper claims: order errors dominate once TR exceeds ~FSR; significant
 zero/dup lock errors below the FSR even with ideal device variations.
 
-The TR axis is one jitted sweep-engine call; the "ideal" regime's sigma
-overrides ride along as traced ``fixed`` scalars (no recompilation)."""
+The TR axis is one declarative ``SweepRequest`` each; the "ideal" regime's
+overrides ride along as a traced ``fixed`` ``Variations`` (no
+recompilation)."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_scheme
+from repro.core import SweepRequest, Variations, make_units, sweep
 
 from .common import n_samples, timed_steady, tr_sweep
 
@@ -22,16 +23,17 @@ def run(full: bool = False):
     trs = tr_sweep()
     rows = []
     for regime, overrides in (
-        ("ideal", dict(sigma_go=0.0, sigma_llv_frac=0.001, sigma_fsr_frac=0.001,
-                       sigma_tr_frac=0.001)),
-        ("nominal", {}),
+        ("ideal", Variations(sigma_go=0.0, sigma_llv_frac=0.001,
+                             sigma_fsr_frac=0.001, sigma_tr_frac=0.001)),
+        ("nominal", Variations()),
     ):
         for order in ("natural", "permuted"):
             cfg = WDM8_G200.with_orders(order)
             units = make_units(cfg, seed=10, n_laser=n, n_ring=n)
-            res, engine_ms = timed_steady(
-                sweep_scheme, cfg, units, "seq", {"tr_mean": trs}, fixed=overrides
-            )
+            req = SweepRequest(cfg=cfg, units=units, scheme="seq",
+                               axes={"tr_mean": trs}, fixed=overrides)
+            r, engine_ms = timed_steady(sweep, req)
+            res = r.data
             lock = [round(float(v), 4) for v in np.asarray(res.lock_err)]
             ordr = [round(float(v), 4) for v in np.asarray(res.order_err)]
             fsr_idx = int(np.argmin(np.abs(trs - cfg.grid.fsr)))

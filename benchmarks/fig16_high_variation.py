@@ -4,15 +4,15 @@
 Paper claims: error regions near low TR (~3 nm, FSR variation) and high TR
 (~8 nm, TR+FSR variation); VT-RS/SSM still performs well.
 
-Each shmoo is one jitted sweep-engine call; the harsh sigmas are traced
-``fixed`` scalars shared by every grid point."""
+Each shmoo is one declarative ``SweepRequest``; the harsh sigmas are a
+traced ``fixed`` ``Variations`` shared by every grid point."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_scheme
+from repro.core import SweepRequest, Variations, make_units, sweep
 
 from .common import n_samples, rlv_sweep, timed_steady, tr_sweep
 
@@ -22,16 +22,16 @@ def run(full: bool = False):
     trs = tr_sweep()
     rlvs = rlv_sweep()[:5]
     axes = {"sigma_rlv": rlvs, "tr_mean": trs}
-    harsh = {"sigma_fsr_frac": 0.05, "sigma_tr_frac": 0.20}
+    harsh = Variations(sigma_fsr_frac=0.05, sigma_tr_frac=0.20)
     rows = []
     for order in ("natural", "permuted"):
         cfg = WDM8_G200.with_orders(order)
         units = make_units(cfg, seed=11, n_laser=n, n_ring=n)
         for scheme in ("rs_ssm", "vtrs_ssm"):
-            res, engine_ms = timed_steady(
-                sweep_scheme, cfg, units, scheme, axes, fixed=harsh
-            )
-            grid = np.asarray(res.cafp, np.float32)
+            req = SweepRequest(cfg=cfg, units=units, scheme=scheme,
+                               axes=axes, fixed=harsh)
+            res, engine_ms = timed_steady(sweep, req)
+            grid = np.asarray(res.data.cafp, np.float32)
             rows.append(
                 (
                     f"fig16/{order}/{scheme}",

@@ -1,12 +1,12 @@
 """Fig. 4 — AFP shmoo over (sigma_rLV x TR) for the four policy/ordering
 test cases of Table II (LtA-N/A, LtA-P/A, LtC-N/N, LtC-P/P) + LtD.
 
-Grids are filled by the batched sweep engine (one jitted call per case);
-the first case is also evaluated two more ways to record before/after
-wall-time and assert numerically identical grids (the engine's acceptance
-gate):
+Grids are filled by the batched sweep engine (one declarative
+``SweepRequest`` -> one jitted call per case); the first case is also
+evaluated two more ways to record before/after wall-time and assert
+numerically identical grids (the engine's acceptance gate):
 
-  * ``sweep_grid_reference`` — the retired per-point dispatch loop over the
+  * ``sweep_reference`` — the retired per-point dispatch loop over the
     *current* evaluators (isolates the batching win);
   * ``_seed_lta_loop`` — a faithful replica of the seed implementation
     (per-point dispatch + Kuhn augmenting-path matching, before the Hall
@@ -21,7 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_units, metrics, sweep_grid_reference, sweep_policy
+from repro.core import (
+    SweepRequest,
+    Variations,
+    make_units,
+    metrics,
+    sweep,
+    sweep_reference,
+)
 from repro.core.matching import (
     _bottleneck_threshold_kuhn,
     adjacency_bitmask,
@@ -46,7 +53,7 @@ CASES = (
 @partial(jax.jit, static_argnames=("cfg",))
 def _seed_lta_point(cfg, units, tr, sigma_rlv):
     """Seed-identical LtA AFP at one grid point (Kuhn matching)."""
-    sys = instantiate(cfg, units, sigma_rlv=sigma_rlv)
+    sys = instantiate(cfg, units, Variations(sigma_rlv=sigma_rlv))
     match_wl, _ = max_matching(adjacency_bitmask(reach_matrix(sys, tr)))
     return metrics.afp(jnp.all(match_wl >= 0, axis=1))
 
@@ -67,7 +74,7 @@ def _kuhn_engine_grid(cfg, units, rlvs, trs):
     for the wdm16 row — only the matching algorithm differs."""
 
     def one(srlv):
-        sys = instantiate(cfg, units, sigma_rlv=srlv)
+        sys = instantiate(cfg, units, Variations(sigma_rlv=srlv))
         return _bottleneck_threshold_kuhn(scaled_residual(sys))
 
     min_tr = jax.vmap(one)(rlvs)                            # (R, T)
@@ -94,28 +101,21 @@ def run(full: bool = False):
     for case_idx, (name, policy, order) in enumerate(CASES):
         cfg = WDM8_G200.with_orders(order)
         units = make_units(cfg, seed=4, n_laser=n, n_ring=n)
+        req = SweepRequest(cfg=cfg, units=units, policy=policy, axes=axes)
         t0 = time.time()
-        grid = np.asarray(
-            jax.block_until_ready(sweep_policy(cfg, units, policy, axes))
-        )
+        grid = np.asarray(jax.block_until_ready(sweep(req)).data)
         engine_first_ms = (time.time() - t0) * 1e3  # includes jit compile
-        engine_ms = _best_of(
-            lambda: jax.block_until_ready(sweep_policy(cfg, units, policy, axes))
-        )
+        engine_ms = _best_of(lambda: jax.block_until_ready(sweep(req)))
         derived = {}
         if case_idx == 0:
             # Before/after evidence: per-point loop and seed replica vs
             # engine, all timed warm (compile excluded) and best-of-N so a
             # loaded machine cannot skew the committed ratio.
             ref_grid = np.asarray(
-                jax.block_until_ready(
-                    sweep_grid_reference(cfg, units, axes, policy=policy)
-                )
+                jax.block_until_ready(sweep_reference(req)).data
             )
             loop_ms = _best_of(
-                lambda: jax.block_until_ready(
-                    sweep_grid_reference(cfg, units, axes, policy=policy)
-                ),
+                lambda: jax.block_until_ready(sweep_reference(req)),
                 reps=2,
             )
             seed_grid = _seed_lta_loop(cfg, units, rlvs, trs)
@@ -158,14 +158,11 @@ def run(full: bool = False):
     # to the per-point reference loop.
     cfg16 = WDM16_G200
     trs16 = tr_sweep(n_ch=16)
-    axes16 = {"sigma_rlv": rlvs, "tr_mean": trs16}
     units16 = make_units(cfg16, seed=4, n_laser=n, n_ring=n)
-    grid16 = np.asarray(
-        jax.block_until_ready(sweep_policy(cfg16, units16, "lta", axes16))
-    )
-    engine16_ms = _best_of(
-        lambda: jax.block_until_ready(sweep_policy(cfg16, units16, "lta", axes16))
-    )
+    req16 = SweepRequest(cfg=cfg16, units=units16, policy="lta",
+                         axes={"sigma_rlv": rlvs, "tr_mean": trs16})
+    grid16 = np.asarray(jax.block_until_ready(sweep(req16)).data)
+    engine16_ms = _best_of(lambda: jax.block_until_ready(sweep(req16)))
     jrlvs, jtrs = jnp.asarray(rlvs), jnp.asarray(trs16)
     kuhn_grid = np.asarray(
         jax.block_until_ready(_kuhn_engine_grid(cfg16, units16, jrlvs, jtrs))
@@ -174,7 +171,7 @@ def run(full: bool = False):
         lambda: jax.block_until_ready(_kuhn_engine_grid(cfg16, units16, jrlvs, jtrs)),
         reps=2,
     )
-    ref16 = np.asarray(sweep_grid_reference(cfg16, units16, axes16, policy="lta"))
+    ref16 = np.asarray(sweep_reference(req16).data)
     if not np.array_equal(grid16, ref16):
         raise AssertionError("fig4/LtA-16: engine grid != per-point loop grid")
     if not np.array_equal(grid16, kuhn_grid):

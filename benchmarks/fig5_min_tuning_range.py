@@ -5,14 +5,16 @@ Derived checks vs the paper: (a) near-linear ramp of slope ~2 before
 saturation; (b) LtC saturates at its FSR; (c) N/A vs P/A (and N/N vs P/P)
 indistinguishable for the ideal arbiter (§IV-A).
 
-The sigma_rLV axis is evaluated in one jitted call via the sweep engine."""
+The sigma_rLV axis is one declarative ``SweepRequest`` (metric="min_tr")
+per case — one jitted call via the sweep engine.  The config list includes
+the beyond-paper WDM32 systems (N > 10 single-pass bottleneck matching)."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM_CONFIGS
-from repro.core import make_units, sweep_min_tr
+from repro.core import SweepRequest, make_units, sweep
 
 from .common import n_samples, timed_steady
 
@@ -34,10 +36,10 @@ def run(full: bool = False):
         for case, policy, order in CASES:
             cfg = base.with_orders(order)
             units = make_units(cfg, seed=5, n_laser=n, n_ring=n)
-            mt_grid, engine_ms = timed_steady(
-                sweep_min_tr, cfg, units, policy, {"sigma_rlv": rlvs}
-            )
-            mt = [float(v) for v in np.asarray(mt_grid)]
+            req = SweepRequest(cfg=cfg, units=units, policy=policy,
+                               metric="min_tr", axes={"sigma_rlv": rlvs})
+            res, engine_ms = timed_steady(sweep, req)
+            mt = [float(v) for v in np.asarray(res.data)]
             # ramp slope over the pre-saturation region (first 4 points)
             slope = float(np.polyfit(rlvs[:4], mt[:4], 1)[0])
             rows.append(

@@ -3,14 +3,15 @@
 Paper claims: slope ~1 in sigma_rLV for small offsets; sigma_gO >= 4 nm
 drives the requirement beyond the FSR (impractical).
 
-The whole (sigma_gO x sigma_rLV) grid is one jitted sweep-engine call."""
+The whole (sigma_gO x sigma_rLV) grid is one declarative ``SweepRequest``
+(metric="min_tr") — one jitted sweep-engine call."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_min_tr
+from repro.core import SweepRequest, make_units, sweep
 
 from .common import n_samples, timed_steady
 
@@ -21,10 +22,10 @@ def run(full: bool = False):
     units = make_units(cfg, seed=6, n_laser=n, n_ring=n)
     rlvs = np.array([0.28, 0.56, 1.12, 2.24, 3.36], np.float32)
     sgos = np.array([0.0, 2.0, 4.0, 6.0], np.float32)
-    grid, engine_ms = timed_steady(
-        sweep_min_tr, cfg, units, "ltd", {"sigma_go": sgos, "sigma_rlv": rlvs}
-    )
-    grid = np.asarray(grid)
+    req = SweepRequest(cfg=cfg, units=units, policy="ltd", metric="min_tr",
+                       axes={"sigma_go": sgos, "sigma_rlv": rlvs})
+    res, engine_ms = timed_steady(sweep, req)
+    grid = np.asarray(res.data)
     rows = []
     for gi, sgo in enumerate(sgos):
         mt = [float(v) for v in grid[gi]]

@@ -6,14 +6,15 @@ Paper claims: flat beyond one grid spacing of offset (barrel-shift
 compensation); d(minTR)/d(sigma_lLV) ~ 0.56 nm per 25%; LtA 'absorbs'
 TR/FSR variations better than LtC.
 
-Each named-sigma axis is one jitted sweep-engine call."""
+Each named-sigma axis is one declarative ``SweepRequest`` (metric="min_tr")
+— one jitted sweep-engine call."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_min_tr
+from repro.core import SweepRequest, make_units, sweep
 
 from .common import n_samples, timed_steady
 
@@ -30,12 +31,12 @@ def run(full: bool = False):
     cfg = WDM8_G200
     units = make_units(cfg, seed=7, n_laser=n, n_ring=n)
     rows = []
-    for sweep_name, (kw, values) in SWEEPS.items():
+    for sweep_name, (axis, values) in SWEEPS.items():
         for policy in ("lta", "ltc"):
-            mt_grid, engine_ms = timed_steady(
-                sweep_min_tr, cfg, units, policy, {kw: np.asarray(values)}
-            )
-            mt = [float(v) for v in np.asarray(mt_grid)]
+            req = SweepRequest(cfg=cfg, units=units, policy=policy,
+                               metric="min_tr", axes={axis: np.asarray(values)})
+            res, engine_ms = timed_steady(sweep, req)
+            mt = [float(v) for v in np.asarray(res.data)]
             sens = (mt[-1] - mt[0]) / (values[-1] - values[0])
             rows.append(
                 (

@@ -4,14 +4,15 @@ Paper claims: ~±0.5 nm tolerance around the nominal N_ch*gS = 8.96 nm within
 which min-TR rises < 0.5 nm; sharp increase when under-designed (resonance
 aliasing), gradual when over-designed.
 
-The FSR axis is one jitted sweep-engine call per policy."""
+The FSR axis is one declarative ``SweepRequest`` (metric="min_tr") per
+policy — one jitted sweep-engine call each."""
 from __future__ import annotations
 
 
 import numpy as np
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import make_units, sweep_min_tr
+from repro.core import SweepRequest, make_units, sweep
 
 from .common import n_samples, timed_steady
 
@@ -23,10 +24,10 @@ def run(full: bool = False):
     fsrs = np.array([6.72, 7.84, 8.46, 8.96, 9.46, 10.08, 12.32, 15.68], np.float32)
     rows = []
     for policy in ("lta", "ltc"):
-        mt_grid, engine_ms = timed_steady(
-            sweep_min_tr, cfg, units, policy, {"fsr_mean": fsrs}
-        )
-        mt = [float(v) for v in np.asarray(mt_grid)]
+        req = SweepRequest(cfg=cfg, units=units, policy=policy,
+                           metric="min_tr", axes={"fsr_mean": fsrs})
+        res, engine_ms = timed_steady(sweep, req)
+        mt = [float(v) for v in np.asarray(res.data)]
         nominal = mt[list(fsrs).index(8.96)]
         within = [
             round(mt[i] - nominal, 3)

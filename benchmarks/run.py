@@ -30,6 +30,7 @@ def main() -> None:
         fig14_cafp_schemes,
         fig15_seq_breakdown,
         fig16_high_variation,
+        fig17_retry_budget,
         kernel_bench,
         roofline_report,
     )
@@ -43,6 +44,7 @@ def main() -> None:
         fig14_cafp_schemes,
         fig15_seq_breakdown,
         fig16_high_variation,
+        fig17_retry_budget,
         kernel_bench,
         roofline_report,
         beyond_lta,

@@ -1,27 +1,57 @@
 """Quickstart: wavelength arbitration in a few lines.
 
-Builds the paper's default 8-channel DWDM system (Table I), runs the
-wavelength-oblivious VT-RS/SSM arbiter against the ideal LtC model, and
-prints the robustness metrics (AFP / CAFP) across tuning ranges.
+Builds the paper's default 8-channel DWDM system (Table I), evaluates the
+wavelength-oblivious arbitration schemes against their ideal policies, and
+prints the robustness metrics (AFP / CAFP) across tuning ranges — the whole
+TR axis in ONE jitted call through the declarative sweep frontend:
+
+  * ``Variations``  — all device-variation / tuning-range overrides in one
+    frozen pytree (``Variations(tr_mean=5.0, sigma_rlv=2.24)``);
+  * ``SweepRequest`` — a declarative grid evaluation (cfg, units, axes,
+    fixed overrides, scheme/policy) consumed by ``sweep(request)``;
+  * results carry their axis metadata: ``res.axis("tr_mean")`` returns the
+    coordinates the grid was evaluated over.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import ArbitrationConfig, evaluate_scheme, make_units
+from repro.core import (
+    ArbitrationConfig,
+    SweepRequest,
+    Variations,
+    evaluate_scheme,
+    make_units,
+    sweep,
+)
 
 cfg = ArbitrationConfig()  # wdm8 @ 200 GHz, Table I defaults
 units = make_units(cfg, seed=0, n_laser=40, n_ring=40)  # 1600 MC trials
+trs = np.array([2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 8.96], np.float32)
+
+# One SweepRequest per scheme: the whole TR axis is a single jitted call.
+results = {
+    scheme: sweep(SweepRequest(cfg=cfg, units=units, scheme=scheme,
+                               axes={"tr_mean": trs}))
+    for scheme in ("seq", "rs_ssm", "vtrs_ssm")
+}
 
 print(f"{'TR[nm]':>7s} {'AFP':>8s} {'CAFP seq':>9s} {'CAFP RS':>9s} {'CAFP VT':>9s}")
-for tr in (2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 8.96):
-    r_seq = evaluate_scheme(cfg, units, "seq", tr)
-    r_rs = evaluate_scheme(cfg, units, "rs_ssm", tr)
-    r_vt = evaluate_scheme(cfg, units, "vtrs_ssm", tr)
+for i, tr in enumerate(results["seq"].axis("tr_mean")):
     print(
-        f"{tr:7.2f} {float(r_seq.afp):8.4f} {float(r_seq.cafp):9.4f} "
-        f"{float(r_rs.cafp):9.4f} {float(r_vt.cafp):9.4f}"
+        f"{tr:7.2f} {float(results['seq'].data.afp[i]):8.4f} "
+        f"{float(results['seq'].data.cafp[i]):9.4f} "
+        f"{float(results['rs_ssm'].data.cafp[i]):9.4f} "
+        f"{float(results['vtrs_ssm'].data.cafp[i]):9.4f}"
     )
+
+# Point evaluations take the same Variations pytree; any registered axis
+# (including post-paper ones like thermal_drift) is a valid override.
+r = evaluate_scheme(
+    cfg, units, "vtrs_ssm",
+    variations=Variations(tr_mean=5.0, sigma_rlv=2.24, thermal_drift=0.3),
+)
+print(f"\npoint eval @ TR=5nm, 0.3nm thermal drift: CAFP = {float(r.cafp):.4f}")
 
 print(
     "\nVT-RS/SSM tracks the ideal wavelength-aware LtC arbiter (CAFP ~ 0)\n"

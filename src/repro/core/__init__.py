@@ -11,6 +11,13 @@ from .grid import (  # noqa: F401
     permuted_order,
     wdm_config,
 )
+from .variations import (  # noqa: F401
+    AxisSpec,
+    Variations,
+    axis_names,
+    axis_spec,
+    register_axis,
+)
 from .sampling import (  # noqa: F401
     SystemBatch,
     UnitSamples,
@@ -20,24 +27,31 @@ from .sampling import (  # noqa: F401
 )
 from .reach import reach_matrix, scaled_residual, tuning_residual  # noqa: F401
 from .api import (  # noqa: F401
+    SCHEME_POLICY,
     SCHEMES,
     EvalResult,
     SchemeSpec,
     evaluate_policy,
     evaluate_scheme,
+    make_seq_retry,
     make_units,
     oblivious_arbitrate,
     policy_min_tr,
     register_scheme,
+    register_scheme_family,
     registered_schemes,
     scheme_spec,
     shmoo,
 )
 from .sweep import (  # noqa: F401
+    SweepRequest,
+    SweepResult,
+    sweep,
     sweep_grid,
     sweep_grid_reference,
     sweep_min_tr,
     sweep_policy,
+    sweep_reference,
     sweep_scheme,
 )
 from .outcomes import Outcome, classify  # noqa: F401

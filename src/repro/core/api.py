@@ -1,20 +1,40 @@
 """High-level arbitration API: the entry points used by benchmarks, the
 optics runtime and the examples.
 
-All heavy functions are jitted with the (hashable, frozen) ArbitrationConfig
-static; sigma values and tuning ranges are traced scalars so parameter sweeps
-reuse one compilation.  The un-jitted ``*_impl`` bodies are exported for the
-sweep engine (``repro.core.sweep``), which vmaps them over whole sigma x TR
-grids inside a single jit.
+Evaluation is declarative: all variation/TR overrides travel in a single
+``Variations`` pytree (``repro.core.variations``) instead of per-sigma
+keyword arguments —
 
-Schemes are pluggable: ``register_scheme`` adds a wavelength-oblivious
-arbiter to the dispatch registry used by ``oblivious_arbitrate`` and
-``evaluate_scheme`` — no core edits needed to experiment with a new scheme.
+    from repro.core import Variations, evaluate_scheme
+    r = evaluate_scheme(cfg, units, "vtrs_ssm",
+                        variations=Variations(tr_mean=5.0, sigma_rlv=2.24))
+
+``tr_mean`` may still be passed positionally as the operating point
+(``evaluate_scheme(cfg, units, "seq", 5.0)``); the old ``sigma_* =``
+keywords survive as deprecated shims with bit-identical numerics.  New
+variation axes registered with ``register_axis`` are picked up here and by
+the sweep engine with no signature changes.
+
+All heavy functions are jitted with the (hashable, frozen) ArbitrationConfig
+static; the ``Variations`` key set is part of the treedef (also static)
+while its values are traced, so parameter sweeps reuse one compilation.
+The un-jitted ``*_impl`` bodies are exported for the sweep engine
+(``repro.core.sweep``), which vmaps them over whole grids inside one jit.
+
+Schemes are pluggable and parametrizable: ``register_scheme`` adds a
+wavelength-oblivious arbiter to the dispatch registry, and
+``register_scheme_family`` stamps out parametrized variants (e.g. the
+retry-budgeted ``seq_retry_r{1,2,4}``) whose static parameters are baked
+into the registered name — names stay jit-static cache keys, so every
+variant compiles once and shmoo grids / CAFP scoring come for free.
+``SCHEMES`` and ``SCHEME_POLICY`` are live views of the registry: schemes
+registered after import are immediately visible.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, NamedTuple
+from collections.abc import Mapping as _MappingABC
+from collections.abc import Sequence as _SequenceABC
+from typing import Any, Callable, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +51,7 @@ from .lta_retry import sequential_retry
 from .search_table import SearchTables, build_search_tables
 from .sequential import sequential_tuning
 from .ssm import Assignment, single_step_matching
+from .variations import Variations, merge_legacy_overrides
 
 # An arbiter maps (cfg, tables, spec) -> Assignment using only oblivious
 # primitives (entry indices and masking events; never wavelength values).
@@ -38,33 +59,78 @@ Arbiter = Callable[[ArbitrationConfig, SearchTables, ChainSpec], Assignment]
 
 
 class SchemeSpec(NamedTuple):
-    """Registry record for a wavelength-oblivious arbitration scheme."""
+    """Registry record for a wavelength-oblivious arbitration scheme.
+
+    ``params`` carries the static parameters a parametrized variant was
+    built with (introspection only — the values are already baked into the
+    arbiter closure, which is what keeps them jit-static).
+    """
 
     name: str
     arbiter: Arbiter
     policy: str  # conditioning ideal policy for CAFP: "ltc" | "lta" | "ltd"
+    params: tuple = ()
 
 
 _SCHEME_REGISTRY: dict[str, SchemeSpec] = {}
 
 
-def register_scheme(name: str, arbiter: Arbiter, *, policy: str = "ltc") -> SchemeSpec:
+def register_scheme(
+    name: str,
+    arbiter: Arbiter,
+    *,
+    policy: str = "ltc",
+    params: Mapping[str, Any] | None = None,
+) -> SchemeSpec:
     """Register an oblivious arbitration scheme under ``name``.
 
     ``policy`` selects the ideal arbiter the scheme is scored against (CAFP
-    conditioning event).  Registered names are accepted everywhere a scheme
-    string is: ``oblivious_arbitrate``, ``evaluate_scheme`` and the sweep
-    engine.  Names are jit-static cache keys, so re-binding a name after it
-    has been evaluated would silently serve stale compiled code — duplicate
-    registration is therefore an error; pick a fresh name to iterate.
+    conditioning event).  ``params`` records the static parameters of a
+    parametrized variant (see ``register_scheme_family``).  Registered names
+    are accepted everywhere a scheme string is: ``oblivious_arbitrate``,
+    ``evaluate_scheme`` and the sweep engine.  Names are jit-static cache
+    keys, so re-binding a name after it has been evaluated would silently
+    serve stale compiled code — duplicate registration is therefore an
+    error; pick a fresh name to iterate.
     """
     if name in _SCHEME_REGISTRY:
         raise ValueError(f"scheme {name!r} already registered")
     if policy not in ("ltd", "ltc", "lta"):
         raise ValueError(f"unknown conditioning policy {policy!r}")
-    spec = SchemeSpec(name=name, arbiter=arbiter, policy=policy)
+    frozen = tuple(sorted(dict(params or {}).items()))
+    spec = SchemeSpec(name=name, arbiter=arbiter, policy=policy, params=frozen)
     _SCHEME_REGISTRY[name] = spec
     return spec
+
+
+def register_scheme_family(
+    base: str,
+    factory: Callable[..., Arbiter],
+    variants: Mapping[str, Mapping[str, Any]],
+    *,
+    policy: str = "ltc",
+) -> tuple[SchemeSpec, ...]:
+    """Register a family of parametrized schemes in one call.
+
+    ``factory(**params) -> Arbiter`` builds one concrete arbiter per
+    variant; ``variants`` maps a name suffix to its static params, and each
+    variant is registered as ``f"{base}_{suffix}"``.  Because the params are
+    closed over before registration, every variant is an ordinary scheme —
+    a distinct jit-static name with its own compilation cache entry — and
+    gets shmoo grids and CAFP scoring through the sweep engine for free::
+
+        register_scheme_family(
+            "seq_retry", make_seq_retry,
+            {"r1": {"n_rounds": 1}, "r2": {"n_rounds": 2}}, policy="lta")
+
+    Any duplicate variant name fails the whole call (schemes registered
+    before the clash stay registered; re-running with a fresh base fixes it).
+    """
+    return tuple(
+        register_scheme(f"{base}_{suffix}", factory(**dict(params)),
+                        policy=policy, params=params)
+        for suffix, params in variants.items()
+    )
 
 
 def scheme_spec(name: str) -> SchemeSpec:
@@ -93,15 +159,88 @@ register_scheme(
         tables, relation_search(tables, spec, variation_tolerant=True), spec
     ),
 )
-# beyond-paper oblivious LtA (§V-E future work)
-register_scheme(
-    "seq_retry", lambda cfg, tables, spec: sequential_retry(tables), policy="lta"
+
+
+def make_seq_retry(n_rounds: int | None = None,
+                   constrained_first: bool = True) -> Arbiter:
+    """Factory for retry-budgeted oblivious LtA arbiters (§V-E future work).
+
+    ``n_rounds`` caps the conflict-retry sweeps (None = N_ch, enough for
+    convergence); ``constrained_first`` picks the lock order.  Both are
+    static — bake them here and register the result under its own name.
+    """
+    def arbiter(cfg, tables, spec):
+        return sequential_retry(
+            tables, n_rounds=n_rounds, constrained_first=constrained_first
+        )
+    return arbiter
+
+
+# beyond-paper oblivious LtA (§V-E future work): the full-budget arbiter
+# plus a retry-budget family for the budget/CAFP trade-off study
+# (benchmarks/fig17_retry_budget.py).
+register_scheme("seq_retry", make_seq_retry(), policy="lta")
+register_scheme_family(
+    "seq_retry",
+    make_seq_retry,
+    {
+        "r1": {"n_rounds": 1},
+        "r2": {"n_rounds": 2},
+        "r4": {"n_rounds": 4},
+        "phys": {"n_rounds": None, "constrained_first": False},
+    },
+    policy="lta",
 )
 
-# Back-compat module-level views (the built-in schemes; later registrations
-# are visible through registered_schemes()/scheme_spec()).
-SCHEMES = registered_schemes()
-SCHEME_POLICY = {n: s.policy for n, s in _SCHEME_REGISTRY.items()}
+
+class _SchemeNamesView(_SequenceABC):
+    """Live, read-only, tuple-like view of the registered scheme names.
+
+    Replaces the old module-level snapshot that was frozen at import time
+    (schemes registered later were invisible through it)."""
+
+    def __getitem__(self, i):
+        return tuple(_SCHEME_REGISTRY)[i]
+
+    def __len__(self) -> int:
+        return len(_SCHEME_REGISTRY)
+
+    def __contains__(self, name) -> bool:
+        return name in _SCHEME_REGISTRY
+
+    def __iter__(self):
+        return iter(tuple(_SCHEME_REGISTRY))
+
+    def __eq__(self, other):
+        try:
+            return tuple(self) == tuple(other)
+        except TypeError:
+            return NotImplemented
+
+    __hash__ = None
+
+    def __repr__(self) -> str:
+        return f"SCHEMES{tuple(_SCHEME_REGISTRY)}"
+
+
+class _SchemePolicyView(_MappingABC):
+    """Live, read-only mapping view: scheme name -> conditioning policy."""
+
+    def __getitem__(self, name: str) -> str:
+        return _SCHEME_REGISTRY[name].policy
+
+    def __len__(self) -> int:
+        return len(_SCHEME_REGISTRY)
+
+    def __iter__(self):
+        return iter(tuple(_SCHEME_REGISTRY))
+
+    def __repr__(self) -> str:
+        return f"SCHEME_POLICY({dict(self)})"
+
+
+SCHEMES = _SchemeNamesView()
+SCHEME_POLICY = _SchemePolicyView()
 
 
 def _build_tables(cfg, sys: SystemBatch, tr_mean, backend: str | None):
@@ -145,6 +284,27 @@ def _ideal_success(cfg, sys: SystemBatch, policy: str, tr_mean, backend: str | N
     return _ideal_min_tr(cfg, sys, policy, backend) <= tr_mean
 
 
+def _eval_variations(
+    variations, tr_mean, legacy: dict, *, caller: str, allow_tr: bool = True
+) -> Variations:
+    """Normalize an evaluator's (tr_mean, variations, legacy-kwarg) inputs."""
+    # stacklevel 4: this helper adds a frame between the user and the warn
+    over = merge_legacy_overrides(variations, legacy, caller=caller,
+                                  stacklevel=4)
+    if tr_mean is not None:
+        if "tr_mean" in over:
+            raise ValueError(
+                f"{caller}: tr_mean passed both positionally and in variations"
+            )
+        over = over.replace(tr_mean=tr_mean)
+    if not allow_tr and "tr_mean" in over:
+        raise ValueError(
+            f"{caller}: min-TR evaluation solves for the tuning range; "
+            "'tr_mean' cannot be overridden"
+        )
+    return over
+
+
 def oblivious_arbitrate(
     cfg: ArbitrationConfig,
     sys: SystemBatch,
@@ -172,7 +332,8 @@ def evaluate_scheme_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     scheme: str,
-    tr_mean,
+    tr_mean=None,
+    variations: Variations | None = None,
     sigma_rlv=None,
     sigma_fsr_frac=None,
     sigma_tr_frac=None,
@@ -184,21 +345,22 @@ def evaluate_scheme_impl(
     """Instantiate systems, run the scheme, and score CAFP vs ideal LtC.
 
     Un-jitted body; vmap-safe (the sweep engine maps it over grid points).
+    Overrides come from ``variations``; ``tr_mean`` may also be given
+    positionally; the ``sigma_* =`` kwargs are deprecated shims.
     """
-    sys = instantiate(
-        cfg,
-        units,
-        sigma_rlv=sigma_rlv,
-        sigma_fsr_frac=sigma_fsr_frac,
-        sigma_tr_frac=sigma_tr_frac,
-        sigma_go=sigma_go,
-        sigma_llv_frac=sigma_llv_frac,
-        fsr_mean=fsr_mean,
+    over = _eval_variations(
+        variations, tr_mean,
+        dict(sigma_rlv=sigma_rlv, sigma_fsr_frac=sigma_fsr_frac,
+             sigma_tr_frac=sigma_tr_frac, sigma_go=sigma_go,
+             sigma_llv_frac=sigma_llv_frac, fsr_mean=fsr_mean),
+        caller="evaluate_scheme",
     )
+    tr = over.resolve("tr_mean", cfg)
+    sys = instantiate(cfg, units, over)
     s = jnp.asarray(cfg.s)
     policy = scheme_spec(scheme).policy
-    ideal_ok = _ideal_success(cfg, sys, policy, tr_mean, backend)
-    assign = oblivious_arbitrate(cfg, sys, tr_mean, scheme, backend=backend)
+    ideal_ok = _ideal_success(cfg, sys, policy, tr, backend)
+    assign = oblivious_arbitrate(cfg, sys, tr, scheme, backend=backend)
     out = classify(assign, s, policy=policy)
     lock = (out.zero_lock | out.dup_lock) & ideal_ok
     order = out.order_err & ideal_ok
@@ -221,7 +383,8 @@ def evaluate_policy_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     policy: str,
-    tr_mean,
+    tr_mean=None,
+    variations: Variations | None = None,
     sigma_rlv=None,
     sigma_go=None,
     sigma_llv_frac=None,
@@ -231,17 +394,16 @@ def evaluate_policy_impl(
     backend: str | None = None,
 ):
     """Ideal-model policy evaluation: AFP at a given mean tuning range."""
-    sys = instantiate(
-        cfg,
-        units,
-        sigma_rlv=sigma_rlv,
-        sigma_go=sigma_go,
-        sigma_llv_frac=sigma_llv_frac,
-        sigma_fsr_frac=sigma_fsr_frac,
-        sigma_tr_frac=sigma_tr_frac,
-        fsr_mean=fsr_mean,
+    over = _eval_variations(
+        variations, tr_mean,
+        dict(sigma_rlv=sigma_rlv, sigma_go=sigma_go,
+             sigma_llv_frac=sigma_llv_frac, sigma_fsr_frac=sigma_fsr_frac,
+             sigma_tr_frac=sigma_tr_frac, fsr_mean=fsr_mean),
+        caller="evaluate_policy",
     )
-    ok = _ideal_success(cfg, sys, policy, tr_mean, backend)
+    tr = over.resolve("tr_mean", cfg)
+    sys = instantiate(cfg, units, over)
+    ok = _ideal_success(cfg, sys, policy, tr, backend)
     return metrics.afp(ok)
 
 
@@ -254,6 +416,7 @@ def policy_trial_min_tr_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     policy: str,
+    variations: Variations | None = None,
     sigma_rlv=None,
     sigma_go=None,
     sigma_llv_frac=None,
@@ -262,22 +425,20 @@ def policy_trial_min_tr_impl(
     fsr_mean=None,
     backend: str | None = None,
 ):
-    """(T,) per-trial ideal minimum mean TR at the given sigma overrides.
+    """(T,) per-trial ideal minimum mean TR at the given variation overrides.
 
     The sweep engine's TR-axis fast path: ideal success at mean TR t is
     exactly ``trial_min_tr <= t`` for every policy, so one min-TR evaluation
     prices the entire TR axis.
     """
-    sys = instantiate(
-        cfg,
-        units,
-        sigma_rlv=sigma_rlv,
-        sigma_go=sigma_go,
-        sigma_llv_frac=sigma_llv_frac,
-        sigma_fsr_frac=sigma_fsr_frac,
-        sigma_tr_frac=sigma_tr_frac,
-        fsr_mean=fsr_mean,
+    over = _eval_variations(
+        variations, None,
+        dict(sigma_rlv=sigma_rlv, sigma_go=sigma_go,
+             sigma_llv_frac=sigma_llv_frac, sigma_fsr_frac=sigma_fsr_frac,
+             sigma_tr_frac=sigma_tr_frac, fsr_mean=fsr_mean),
+        caller="policy_min_tr", allow_tr=False,
     )
+    sys = instantiate(cfg, units, over)
     return _ideal_min_tr(cfg, sys, policy, backend)
 
 
@@ -285,6 +446,7 @@ def policy_min_tr_impl(
     cfg: ArbitrationConfig,
     units: UnitSamples,
     policy: str,
+    variations: Variations | None = None,
     sigma_rlv=None,
     sigma_go=None,
     sigma_llv_frac=None,
@@ -295,7 +457,7 @@ def policy_min_tr_impl(
 ):
     """Minimum mean TR for complete arbitration success over the batch."""
     per_trial = policy_trial_min_tr_impl(
-        cfg, units, policy,
+        cfg, units, policy, variations,
         sigma_rlv=sigma_rlv, sigma_go=sigma_go, sigma_llv_frac=sigma_llv_frac,
         sigma_fsr_frac=sigma_fsr_frac, sigma_tr_frac=sigma_tr_frac,
         fsr_mean=fsr_mean, backend=backend,
@@ -325,10 +487,12 @@ def shmoo(
 
     One jitted call via the sweep engine (see ``repro.core.sweep``).
     """
-    from .sweep import sweep_policy, sweep_scheme  # avoid import cycle
+    from .sweep import SweepRequest, sweep  # avoid import cycle
 
     assert (policy is None) != (scheme is None)
-    axes = {"sigma_rlv": sigma_rlv_values, "tr_mean": tr_values}
-    if policy is not None:
-        return np.asarray(sweep_policy(cfg, units, policy, axes))
-    return np.asarray(sweep_scheme(cfg, units, scheme, axes).cafp)
+    req = SweepRequest(
+        cfg=cfg, units=units, policy=policy, scheme=scheme,
+        axes={"sigma_rlv": sigma_rlv_values, "tr_mean": tr_values},
+    )
+    res = sweep(req)
+    return np.asarray(res.data if policy is not None else res.data.cafp)

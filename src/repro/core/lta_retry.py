@@ -19,6 +19,12 @@ peak is gone for it), so the process is monotone; R = N_ch rounds suffice.
 No spectral-ordering is enforced — exactly the LtA policy.  Evaluated as
 CAFP against the ideal LtA arbiter (perfect matching), the same way the
 paper scores its LtC algorithms.
+
+``n_rounds`` and ``constrained_first`` are static controller knobs; the
+scheme registry exposes them as parametrized variants
+(``seq_retry_r{1,2,4}``, ``seq_retry_phys`` via ``api.make_seq_retry`` /
+``register_scheme_family``), and ``benchmarks/fig17_retry_budget.py``
+sweeps the retry-budget/CAFP trade-off.
 """
 from __future__ import annotations
 

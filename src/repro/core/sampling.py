@@ -6,6 +6,10 @@ variation half-ranges (sigma_*) without re-sampling, we draw *unit* uniform
 deviates in [-1, 1] once and scale them by the sigma values at
 instantiation — sample-efficient exploration exactly as the paper's
 uniform-distribution rationale intends (§II-C).
+
+Overrides are carried by the ``Variations`` pytree (``repro.core.variations``):
+``instantiate(cfg, units, Variations(sigma_rlv=2.24))``.  The old per-sigma
+keyword arguments remain as deprecated shims with identical numerics.
 """
 from __future__ import annotations
 
@@ -16,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .grid import ArbitrationConfig, DWDMGrid, VariationModel
+from .variations import Variations, apply_axis_transforms, merge_legacy_overrides
 
 
 class UnitSamples(NamedTuple):
@@ -64,6 +69,7 @@ def draw_unit_samples(key: jax.Array, n_ch: int, n_laser: int, n_ring: int) -> U
 def instantiate(
     cfg: ArbitrationConfig,
     units: UnitSamples,
+    variations: Variations | None = None,
     *,
     sigma_rlv: float | None = None,
     sigma_go: float | None = None,
@@ -72,14 +78,30 @@ def instantiate(
     sigma_tr_frac: float | None = None,
     fsr_mean: float | None = None,
 ) -> SystemBatch:
-    """Apply sigma scales to unit samples and cross lasers x rings (Eq. 3-4)."""
-    grid, var = cfg.grid, cfg.var
-    s_go = var.sigma_go if sigma_go is None else sigma_go
-    s_llv = (var.sigma_llv_frac if sigma_llv_frac is None else sigma_llv_frac) * grid.grid_spacing
-    s_rlv = var.sigma_rlv if sigma_rlv is None else sigma_rlv
-    s_fsr = var.sigma_fsr_frac if sigma_fsr_frac is None else sigma_fsr_frac
-    s_tr = var.sigma_tr_frac if sigma_tr_frac is None else sigma_tr_frac
-    fsr0 = grid.fsr if fsr_mean is None else fsr_mean
+    """Apply sigma scales to unit samples and cross lasers x rings (Eq. 3-4).
+
+    ``variations`` (a ``Variations`` pytree or plain mapping) carries the
+    overrides; unset axes fall back to the config via the axis registry.
+    The ``sigma_* =`` keywords are the deprecated pre-pytree shims — bit-
+    identical, but they warn.  Registered extension axes (e.g.
+    ``thermal_drift``) are applied through their ``transform`` hooks after
+    the core sampling math; ``tr_mean`` overrides are ignored here (the
+    tuning range is an evaluation-time quantity, not a sampling one).
+    """
+    over = merge_legacy_overrides(
+        variations,
+        dict(sigma_rlv=sigma_rlv, sigma_go=sigma_go,
+             sigma_llv_frac=sigma_llv_frac, sigma_fsr_frac=sigma_fsr_frac,
+             sigma_tr_frac=sigma_tr_frac, fsr_mean=fsr_mean),
+        caller="instantiate",
+    )
+    grid = cfg.grid
+    s_go = over.resolve("sigma_go", cfg)
+    s_llv = over.resolve("sigma_llv_frac", cfg) * grid.grid_spacing
+    s_rlv = over.resolve("sigma_rlv", cfg)
+    s_fsr = over.resolve("sigma_fsr_frac", cfg)
+    s_tr = over.resolve("sigma_tr_frac", cfg)
+    fsr0 = over.resolve("fsr_mean", cfg)
 
     # Lasers: lambda_i = grid_i + Delta_gO + Delta_lLV,i           (Eq. 3)
     laser = (
@@ -99,7 +121,8 @@ def instantiate(
     ring_t = jnp.broadcast_to(ring[None, :, :], (L, R, N)).reshape(T, N)
     fsr_t = jnp.broadcast_to(fsr[None, :, :], (L, R, N)).reshape(T, N)
     tr_t = jnp.broadcast_to(tr_unit[None, :, :], (L, R, N)).reshape(T, N)
-    return SystemBatch(laser=laser_t, ring=ring_t, fsr=fsr_t, tr_unit=tr_t)
+    sys = SystemBatch(laser=laser_t, ring=ring_t, fsr=fsr_t, tr_unit=tr_t)
+    return apply_axis_transforms(sys, over, cfg)
 
 
 def sample_systems(
@@ -107,8 +130,9 @@ def sample_systems(
     cfg: ArbitrationConfig,
     n_laser: int = 100,
     n_ring: int = 100,
+    variations: Variations | None = None,
     **sigma_overrides,
 ) -> SystemBatch:
     """Convenience: draw units and instantiate in one go."""
     units = draw_unit_samples(key, cfg.grid.n_ch, n_laser, n_ring)
-    return instantiate(cfg, units, **sigma_overrides)
+    return instantiate(cfg, units, variations, **sigma_overrides)

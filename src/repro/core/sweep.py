@@ -1,64 +1,66 @@
-"""Batched sweep engine: whole sigma x TR grids in a single jitted call.
+"""Declarative batched sweep engine: whole variation grids in one jitted call.
 
 The paper's headline results (Figs. 4-8, 14-16) are shmoo grids: every point
-is one ``evaluate_policy`` / ``evaluate_scheme`` / ``policy_min_tr`` call at
-a different (sigma_*, TR) combination.  Filling those grids with nested
-Python loops costs one host->device dispatch per point and dominates
-wall-time long before the arithmetic does.  This module evaluates the entire
-grid device-resident:
+is one policy/scheme evaluation at a different combination of variation-axis
+values.  The frontend is a single declarative request object::
 
-  * named axes (``tr_mean``, ``sigma_rlv``, ``sigma_go``, ``sigma_llv_frac``,
-    ``sigma_fsr_frac``, ``sigma_tr_frac``, ``fsr_mean``) are crossed into a
-    flat (P, K) point list on the host;
-  * the un-jitted evaluation body is ``vmap``-ped over points within a
-    chunk, and ``lax.map`` iterates the chunks — so peak memory is bounded
-    by ``chunk_size`` times the per-point T x N x N x J table footprint while
-    the whole grid remains ONE jit compilation and ONE dispatch;
-  * results come back as grid-shaped arrays (leading dims = axis lengths,
-    in the order the ``axes`` mapping lists them).
-
-Usage::
-
-    from repro.core import make_units, sweep_policy, sweep_scheme, sweep_min_tr
+    from repro.core import SweepRequest, make_units, sweep
     from repro.configs.wdm import WDM8_G200
 
     cfg = WDM8_G200
     units = make_units(cfg, seed=4, n_laser=100, n_ring=100)
 
     # Fig. 4: AFP over a sigma_rLV x TR shmoo, one dispatch.
-    afp = sweep_policy(cfg, units, "ltc",
-                       {"sigma_rlv": rlvs, "tr_mean": trs})   # (len(rlvs), len(trs))
+    res = sweep(SweepRequest(cfg=cfg, units=units, policy="ltc",
+                             axes={"sigma_rlv": rlvs, "tr_mean": trs}))
+    res.data                 # (len(rlvs), len(trs)) AFP grid
+    res.axis_names           # ("sigma_rlv", "tr_mean")
+    res.axis("tr_mean")      # the coordinate values, carried with the result
 
-    # Fig. 16: CAFP grid with fixed harsh variations.
-    res = sweep_scheme(cfg, units, "vtrs_ssm",
-                       {"sigma_rlv": rlvs, "tr_mean": trs},
-                       fixed={"sigma_fsr_frac": 0.05, "sigma_tr_frac": 0.20})
-    cafp = res.cafp                                           # grid-shaped
+    # Fig. 16: CAFP grid with fixed harsh variations (traced: changing them
+    # never recompiles).
+    res = sweep(SweepRequest(
+        cfg=cfg, units=units, scheme="vtrs_ssm",
+        axes={"sigma_rlv": rlvs, "tr_mean": trs},
+        fixed={"sigma_fsr_frac": 0.05, "sigma_tr_frac": 0.20}))
+    res.data.cafp            # EvalResult of grid-shaped fields
 
-    # Fig. 5/7/8: minimum tuning range along any named axis.
-    mt = sweep_min_tr(cfg, units, "lta", {"fsr_mean": fsrs})  # (len(fsrs),)
+    # Fig. 5/7/8: minimum tuning range along any registered axis.
+    res = sweep(SweepRequest(cfg=cfg, units=units, policy="lta",
+                             metric="min_tr", axes={"fsr_mean": fsrs}))
 
-    # Device-parallel grids: shard the chunk axis over a 1-D mesh.  Works
-    # with real TPUs and with placeholder CPU devices (dryrun.py's
-    # --xla_force_host_platform_device_count); results are bit-identical
-    # to the unsharded engine and invariant to the mesh size.
-    from repro.launch.mesh import make_sweep_mesh
+Valid axis/fixed names are whatever the ``Variations`` axis registry knows
+(``repro.core.variations.axis_names()``) — an axis registered with
+``register_axis`` is immediately sweepable here, with no engine edits.
+``sweep_policy`` / ``sweep_scheme`` / ``sweep_min_tr`` / ``sweep_grid`` are
+thin wrappers that build a request and return the bare grid(s).
 
-    mesh = make_sweep_mesh()           # ("sweep",) over all visible devices
-    afp = sweep_policy(cfg, units, "ltc",
-                       {"sigma_rlv": rlvs, "tr_mean": trs}, mesh=mesh)
+Engine mechanics (unchanged by the declarative frontend):
 
-``backend`` threads through to the kernel wrappers in ``repro.kernels.ops``
-(``"jnp"``, ``"interpret"``, ``"pallas"``); the default ``None`` uses the
-pure-jnp core path.  ``sweep_grid_reference`` keeps the pre-engine per-point
-loop as the golden oracle — the engine is bit-for-bit equal to it (asserted
-in tests/test_sweep.py), and it validates requests identically so it rejects
-exactly what the engine rejects.
+  * named axes are crossed into a flat (P, K) point list on the host;
+  * the un-jitted evaluation body is ``vmap``-ped over points within a
+    chunk, and ``lax.map`` iterates the chunks — so peak memory is bounded
+    by ``chunk_size`` times the per-point T x N x N x J table footprint while
+    the whole grid remains ONE jit compilation and ONE dispatch;
+  * results come back as grid-shaped arrays (leading dims = axis lengths,
+    in the order the ``axes`` mapping lists them);
+  * with ``mesh`` (1-D, e.g. from ``repro.launch.mesh.make_sweep_mesh``)
+    the chunk axis is split over devices with ``shard_map`` — bit-identical
+    to the unsharded engine and invariant to the mesh size;
+  * ``backend`` threads through to the kernel wrappers in
+    ``repro.kernels.ops`` (``"jnp"``, ``"interpret"``, ``"pallas"``); the
+    default ``None`` uses the pure-jnp core path.
+
+``sweep_reference`` keeps the pre-engine per-point loop as the golden
+oracle — the engine is bit-for-bit equal to it (asserted in
+tests/test_sweep.py), and both consume the same validated ``SweepRequest``
+so they reject exactly the same inputs.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import Mapping
+from typing import Any, Mapping, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -78,21 +80,19 @@ from .grid import ArbitrationConfig
 from .matching import _HALL_MAX_N
 from .sampling import UnitSamples
 from .search_table import max_entries_for
-
-#: Axis/fixed names accepted by the engine (keyword names of the eval impls;
-#: ``tr_mean`` is positional there but a named axis here).
-AXIS_NAMES = (
-    "tr_mean",
-    "sigma_rlv",
-    "sigma_go",
-    "sigma_llv_frac",
-    "sigma_fsr_frac",
-    "sigma_tr_frac",
-    "fsr_mean",
-)
+from .variations import Variations, axis_names, axis_spec, _maybe_validate
 
 #: Per-chunk device memory budget for auto chunk sizing [bytes].
 _CHUNK_BUDGET = 256 * 1024 * 1024
+
+
+def __getattr__(name: str):
+    # Back-compat: the pre-registry engine exposed its axis names as a
+    # module-level tuple frozen at import time.  Serve it live instead so
+    # axes registered later are visible through the old spelling too.
+    if name == "AXIS_NAMES":
+        return axis_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
@@ -107,17 +107,18 @@ def _shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
 
 
 def _check_names(names, *, metric: str) -> None:
+    valid = axis_names()
     for name in names:
-        if name not in AXIS_NAMES:
-            raise ValueError(f"unknown sweep axis {name!r}; valid: {AXIS_NAMES}")
+        if name not in valid:
+            raise ValueError(f"unknown sweep axis {name!r}; valid: {valid}")
     if metric == "min_tr" and "tr_mean" in names:
         raise ValueError("min_tr sweeps solve for TR; 'tr_mean' cannot be an axis")
 
 
 def _validate_request(names, fixed, *, metric: str, policy, scheme) -> None:
-    """Shared request validation: the engine and the reference loop must
-    accept/reject identically (the oracle is only an oracle on the domain
-    the engine serves)."""
+    """Shared request validation: the engine and the reference loop consume
+    the same validated ``SweepRequest``, so they accept/reject identically
+    (the oracle is only an oracle on the domain the engine serves)."""
     if (policy is None) == (scheme is None):
         raise ValueError("exactly one of policy/scheme required")
     if metric not in ("eval", "min_tr"):
@@ -131,10 +132,102 @@ def _validate_request(names, fixed, *, metric: str, policy, scheme) -> None:
         raise ValueError(f"axes and fixed overlap: {sorted(overlap)}")
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepRequest:
+    """A complete, validated description of one grid evaluation.
+
+    axes:   ordered mapping axis name -> 1-D coordinate values; the result's
+            leading dims follow this order.  Names come from the
+            ``Variations`` axis registry.
+    policy/scheme: exactly one; the evaluation target.
+    metric: "eval" (AFP for a policy / EvalResult for a scheme) or
+            "min_tr" (policy only; minimum mean TR for complete success).
+    fixed:  scalar overrides applied at every point (a mapping or a
+            ``Variations``; traced, so changing values never recompiles).
+    chunk_size: points per vmap chunk (None = auto from the memory budget).
+    backend: kernel backend threaded to ``repro.kernels.ops`` (None = jnp
+            core path).
+    tr_fast: policy-eval sweeps with a ``tr_mean`` axis collapse that axis
+            to a free threshold comparison against one per-trial min-TR
+            evaluation per remaining point (bit-exact; see
+            ``_afp_from_trial_min_tr``).  Disable to force the direct path.
+    mesh:   optional 1-D ``jax.sharding.Mesh``; the chunk axis is split
+            over its devices with ``shard_map``.  A pure performance knob.
+
+    Validation happens at construction, so an invalid request never reaches
+    the engine (or the reference loop).
+    """
+
+    cfg: ArbitrationConfig
+    units: UnitSamples
+    axes: Mapping[str, np.ndarray]
+    policy: str | None = None
+    scheme: str | None = None
+    metric: str = "eval"
+    fixed: Mapping[str, float] | Variations | None = None
+    chunk_size: int | None = None
+    backend: str | None = None
+    tr_fast: bool = True
+    mesh: Any = None
+
+    def __post_init__(self):
+        axes = {
+            str(k): np.asarray(v, np.float32).reshape(-1)
+            for k, v in dict(self.axes).items()
+        }
+        fixed = self.fixed
+        if isinstance(fixed, Variations):
+            fixed = dict(fixed.items())
+        fixed = {str(k): v for k, v in dict(fixed or {}).items()}
+        object.__setattr__(self, "axes", axes)
+        object.__setattr__(self, "fixed", fixed)
+        _validate_request(
+            tuple(axes), tuple(fixed),
+            metric=self.metric, policy=self.policy, scheme=self.scheme,
+        )
+        if not axes:
+            raise ValueError("at least one sweep axis required")
+        for name, values in axes.items():
+            spec = axis_spec(name)
+            for v in values:
+                _maybe_validate(spec, v)
+        for name, v in fixed.items():
+            _maybe_validate(axis_spec(name), v)
+        if self.mesh is not None and len(self.mesh.axis_names) != 1:
+            raise ValueError(
+                f"sweep meshes are 1-D (the chunk axis); got axes "
+                f"{self.mesh.axis_names}"
+            )
+
+    def replace(self, **kw) -> "SweepRequest":
+        return dataclasses.replace(self, **kw)
+
+
+class SweepResult(NamedTuple):
+    """Grid(s) plus the axis metadata they were evaluated over.
+
+    ``data`` is the grid array (policy/min_tr requests) or an ``EvalResult``
+    whose fields are grids (scheme requests); leading dims follow
+    ``axis_names``, with ``coords[i]`` holding axis i's coordinate values.
+    A NamedTuple, hence a pytree: ``jax.block_until_ready`` etc. work.
+    """
+
+    data: Any
+    axis_names: tuple
+    coords: tuple
+
+    def axis(self, name: str) -> np.ndarray:
+        """Coordinate values of the named axis."""
+        try:
+            return self.coords[self.axis_names.index(name)]
+        except ValueError:
+            raise ValueError(
+                f"result has no axis {name!r}; axes: {self.axis_names}"
+            ) from None
+
+
 def _grid_points(axes: Mapping[str, np.ndarray]):
     """Cross the named axes into a flat (P, K) float32 point array."""
-    if not axes:
-        raise ValueError("at least one sweep axis required")
     names = tuple(axes)
     values = [np.asarray(v, np.float32).reshape(-1) for v in axes.values()]
     shape = tuple(len(v) for v in values)
@@ -143,21 +236,36 @@ def _grid_points(axes: Mapping[str, np.ndarray]):
     return names, points, shape
 
 
+def scheme_point_bytes(cfg: ArbitrationConfig, n_trials: int) -> int:
+    """Per-grid-point working-set estimate [bytes] for a *scheme* sweep —
+    the quantity ``_auto_chunk`` budgets against.  Exposed for capacity
+    audits (e.g. the WDM32 table-footprint test).
+
+    Dominant: the (T, N, N, J) candidate-peak tensor of the table build
+    plus the (T, N, 3N) sorted tables; ~3 live f32 copies through sort.
+    """
+    n = cfg.grid.n_ch
+    j = 2 * cfg.max_fsr_alias + 1
+    return n_trials * n * (n * j + max_entries_for(n)) * 4 * 3
+
+
+def policy_point_bytes(cfg: ArbitrationConfig, n_trials: int) -> int:
+    """Per-grid-point working-set estimate [bytes] for a *policy* sweep.
+
+    Dominant: the (T, 2^N, N) Hall subset table (small N) or the (T, N, N)
+    residual tensor; a few live f32 copies either way.
+    """
+    n = cfg.grid.n_ch
+    width = max(n, (1 << n) if n <= _HALL_MAX_N else 0)
+    return n_trials * n * width * 4 * 3
+
+
 def _auto_chunk(cfg: ArbitrationConfig, units: UnitSamples, n_points: int,
                 scheme: str | None) -> int:
     """Largest chunk whose per-point working set fits the memory budget."""
-    n = cfg.grid.n_ch
     trials = units.u_rlv.shape[0] * units.u_go.shape[0]
-    if scheme is not None:
-        # dominant: the (T, N, N, J) candidate-peak tensor of the table build
-        # plus the (T, N, 3N) sorted tables; ~3 live f32 copies through sort.
-        j = 2 * cfg.max_fsr_alias + 1
-        per_point = trials * n * (n * j + max_entries_for(n)) * 4 * 3
-    else:
-        # dominant: the (T, 2^N, N) Hall subset table (small N) or the
-        # (T, N, N) residual tensor; a few live f32 copies either way.
-        width = max(n, (1 << n) if n <= _HALL_MAX_N else 0)
-        per_point = trials * n * width * 4 * 3
+    per_point = (scheme_point_bytes(cfg, trials) if scheme is not None
+                 else policy_point_bytes(cfg, trials))
     return int(np.clip(_CHUNK_BUDGET // max(per_point, 1), 1, n_points))
 
 
@@ -191,19 +299,19 @@ def _sweep_flat(
     """
 
     def eval_point(units, fixed_values, vals):
-        kw = {fn: fixed_values[i] for i, fn in enumerate(fixed_names)}
-        kw.update({name: vals[i] for i, name in enumerate(names)})
+        over = {fn: fixed_values[i] for i, fn in enumerate(fixed_names)}
+        over.update({name: vals[i] for i, name in enumerate(names)})
+        var = Variations(**over)
         if metric == "min_tr":
-            return policy_min_tr_impl(cfg, units, policy, backend=backend, **kw)
+            return policy_min_tr_impl(cfg, units, policy, var, backend=backend)
         if metric == "trial_min_tr":
-            return policy_trial_min_tr_impl(cfg, units, policy, backend=backend, **kw)
-        tr_mean = kw.pop("tr_mean", cfg.grid.tr_mean)
+            return policy_trial_min_tr_impl(cfg, units, policy, var, backend=backend)
         if policy is not None:
             return evaluate_policy_impl(
-                cfg, units, policy, tr_mean, backend=backend, **kw
+                cfg, units, policy, variations=var, backend=backend
             )
         return evaluate_scheme_impl(
-            cfg, units, scheme, tr_mean, backend=backend, **kw
+            cfg, units, scheme, variations=var, backend=backend
         )
 
     def run_chunks(units, fixed_values, chunks):  # (C, chunk, K) -> C-leading tree
@@ -247,6 +355,58 @@ def _afp_from_trial_min_tr(trial_min_tr, tr_values):
     return 1.0 - jnp.mean(ok.astype(jnp.float32), axis=-1)
 
 
+def sweep(request: SweepRequest) -> SweepResult:
+    """Evaluate a ``SweepRequest`` in one jitted call.
+
+    The single entry point of the engine; ``sweep_policy`` /
+    ``sweep_scheme`` / ``sweep_min_tr`` / ``sweep_grid`` are wrappers over
+    it.  Returns a ``SweepResult`` carrying the grid(s) and the axis
+    metadata (names + coordinate values).
+    """
+    cfg, units = request.cfg, request.units
+    policy, scheme, metric = request.policy, request.scheme, request.metric
+    names, points, shape = _grid_points(request.axes)
+    coords = tuple(request.axes[n] for n in names)
+
+    if (policy is not None and metric == "eval" and request.tr_fast
+            and "tr_mean" in names):
+        # TR fast path: one per-trial min-TR evaluation per non-TR point,
+        # then the whole TR axis is a broadcast threshold comparison.
+        metric = "trial_min_tr"
+        tr_idx = names.index("tr_mean")
+        tr_values = jnp.asarray(request.axes["tr_mean"])
+        sub_names = tuple(n for n in names if n != "tr_mean")
+        shape = shape[:tr_idx] + shape[tr_idx + 1:]
+        if sub_names:
+            points = _grid_points({n: request.axes[n] for n in sub_names})[1]
+        else:
+            points = np.zeros((1, 0), np.float32)  # single all-defaults point
+        run_names = sub_names
+    else:
+        tr_idx = None
+        run_names = names
+
+    chunk = request.chunk_size or _auto_chunk(cfg, units, points.shape[0], scheme)
+    fixed_names = tuple(request.fixed)
+    fixed_values = jnp.asarray(
+        [float(request.fixed[k]) for k in fixed_names], jnp.float32
+    )
+    out = _sweep_flat(
+        cfg, units, jnp.asarray(points), fixed_values,
+        policy=policy, scheme=scheme, metric=metric, names=run_names,
+        fixed_names=fixed_names, chunk=chunk, backend=request.backend,
+        mesh=request.mesh,
+    )
+    if tr_idx is not None:
+        afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
+        data = jnp.moveaxis(afp, -1, tr_idx)
+    else:
+        data = jax.tree_util.tree_map(
+            lambda a: a.reshape(shape + a.shape[1:]), out
+        )
+    return SweepResult(data=data, axis_names=names, coords=coords)
+
+
 def sweep_grid(
     cfg: ArbitrationConfig,
     units: UnitSamples,
@@ -261,67 +421,18 @@ def sweep_grid(
     tr_fast: bool = True,
     mesh=None,
 ):
-    """Evaluate a full named-axis grid in one jitted call.
-
-    axes:   ordered mapping axis name -> 1-D values; output leading dims
-            follow this order.
-    metric: "eval" (AFP for a policy / EvalResult for a scheme) or
-            "min_tr" (policy only; minimum mean TR for complete success).
-    fixed:  scalar overrides applied at every point (traced, so changing
-            them does not recompile).
-    tr_fast: policy-eval sweeps with a ``tr_mean`` axis collapse that axis
-            to a free threshold comparison against one per-trial min-TR
-            evaluation per remaining point (bit-exact; see
-            ``_afp_from_trial_min_tr``).  Disable to force the direct path.
-    mesh:   optional 1-D ``jax.sharding.Mesh`` (e.g. from
-            ``repro.launch.mesh.make_sweep_mesh``); the chunk axis is split
-            over its devices with ``shard_map``.  A pure performance knob:
-            results are bit-identical to the unsharded engine and invariant
-            to the mesh size.
-    Returns grid-shaped array(s): EvalResult of grids for a scheme,
-    a single grid otherwise.
-    """
-    fixed = dict(fixed or {})
-    names, points, shape = _grid_points(axes)
-    _validate_request(names, fixed, metric=metric, policy=policy, scheme=scheme)
-    if mesh is not None and len(mesh.axis_names) != 1:
-        raise ValueError(
-            f"sweep meshes are 1-D (the chunk axis); got axes {mesh.axis_names}"
-        )
-
-    if policy is not None and metric == "eval" and tr_fast and "tr_mean" in names:
-        # TR fast path: one per-trial min-TR evaluation per non-TR point,
-        # then the whole TR axis is a broadcast threshold comparison.
-        metric = "trial_min_tr"
-        tr_idx = names.index("tr_mean")
-        tr_values = jnp.asarray(np.asarray(axes["tr_mean"], np.float32).reshape(-1))
-        names = tuple(n for n in names if n != "tr_mean")
-        shape = shape[:tr_idx] + shape[tr_idx + 1:]
-        if names:
-            points = _grid_points({n: axes[n] for n in names})[1]
-        else:
-            points = np.zeros((1, 0), np.float32)  # single all-defaults point
-    else:
-        tr_idx = None
-
-    chunk = chunk_size or _auto_chunk(cfg, units, points.shape[0], scheme)
-    fixed_names = tuple(fixed)
-    fixed_values = jnp.asarray([float(fixed[k]) for k in fixed_names], jnp.float32)
-    out = _sweep_flat(
-        cfg, units, jnp.asarray(points), fixed_values,
-        policy=policy, scheme=scheme, metric=metric, names=names,
-        fixed_names=fixed_names, chunk=chunk, backend=backend, mesh=mesh,
-    )
-    if tr_idx is not None:
-        afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
-        return jnp.moveaxis(afp, -1, tr_idx)
-    return jax.tree_util.tree_map(
-        lambda a: a.reshape(shape + a.shape[1:]), out
-    )
+    """Bare-grid wrapper over ``sweep``: builds the ``SweepRequest`` and
+    returns ``SweepResult.data`` only (EvalResult of grids for a scheme, a
+    single grid otherwise)."""
+    return sweep(SweepRequest(
+        cfg=cfg, units=units, axes=axes, policy=policy, scheme=scheme,
+        metric=metric, fixed=fixed, chunk_size=chunk_size, backend=backend,
+        tr_fast=tr_fast, mesh=mesh,
+    )).data
 
 
 def sweep_policy(cfg, units, policy, axes, **kw):
-    """Grid of AFP values for an ideal policy.  See ``sweep_grid``."""
+    """Grid of AFP values for an ideal policy.  See ``SweepRequest``."""
     return sweep_grid(cfg, units, axes, policy=policy, **kw)
 
 
@@ -335,6 +446,41 @@ def sweep_min_tr(cfg, units, policy, axes, **kw):
     return sweep_grid(cfg, units, axes, policy=policy, metric="min_tr", **kw)
 
 
+def sweep_reference(request: SweepRequest) -> SweepResult:
+    """Pre-engine per-point Python loop: one jitted call per grid point.
+
+    The golden oracle for ``sweep`` (bit-for-bit equal on CPU); also a
+    readable spec of what the engine computes.  Consumes the same validated
+    ``SweepRequest`` as the engine, so it rejects exactly what the engine
+    rejects.  Never use on a hot path.
+    """
+    cfg, units = request.cfg, request.units
+    policy, scheme = request.policy, request.scheme
+    names, points, shape = _grid_points(request.axes)
+    outs = []
+    for vals in points:
+        over = dict(request.fixed)
+        over.update({name: float(v) for name, v in zip(names, vals)})
+        var = Variations(**over)
+        if request.metric == "min_tr":
+            outs.append(policy_min_tr(cfg, units, policy, var,
+                                      backend=request.backend))
+        elif policy is not None:
+            outs.append(evaluate_policy(cfg, units, policy, variations=var,
+                                        backend=request.backend))
+        else:
+            outs.append(evaluate_scheme(cfg, units, scheme, variations=var,
+                                        backend=request.backend))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    data = jax.tree_util.tree_map(
+        lambda a: a.reshape(shape + a.shape[1:]), stacked
+    )
+    return SweepResult(
+        data=data, axis_names=names,
+        coords=tuple(request.axes[n] for n in names),
+    )
+
+
 def sweep_grid_reference(
     cfg: ArbitrationConfig,
     units: UnitSamples,
@@ -346,29 +492,8 @@ def sweep_grid_reference(
     fixed: Mapping[str, float] | None = None,
     backend: str | None = None,
 ):
-    """Pre-engine per-point Python loop: one jitted call per grid point.
-
-    The golden oracle for ``sweep_grid`` (bit-for-bit equal on CPU); also a
-    readable spec of what the engine computes.  Validates requests with the
-    same ``_validate_request`` as the engine, so it rejects exactly what the
-    engine rejects.  Never use on a hot path.
-    """
-    fixed = dict(fixed or {})
-    names, points, shape = _grid_points(axes)
-    _validate_request(names, fixed, metric=metric, policy=policy, scheme=scheme)
-    outs = []
-    for vals in points:
-        kw = dict(fixed, backend=backend)
-        kw.update({name: float(v) for name, v in zip(names, vals)})
-        if metric == "min_tr":
-            outs.append(policy_min_tr(cfg, units, policy, **kw))
-        else:
-            tr_mean = kw.pop("tr_mean", cfg.grid.tr_mean)
-            if policy is not None:
-                outs.append(evaluate_policy(cfg, units, policy, tr_mean, **kw))
-            else:
-                outs.append(evaluate_scheme(cfg, units, scheme, tr_mean, **kw))
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
-    return jax.tree_util.tree_map(
-        lambda a: a.reshape(shape + a.shape[1:]), stacked
-    )
+    """Bare-grid wrapper over ``sweep_reference`` (see there)."""
+    return sweep_reference(SweepRequest(
+        cfg=cfg, units=units, axes=axes, policy=policy, scheme=scheme,
+        metric=metric, fixed=fixed, backend=backend,
+    )).data

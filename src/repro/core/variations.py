@@ -1,0 +1,339 @@
+"""Declarative device-variation overrides: the ``Variations`` pytree and the
+axis registry that makes new variation sources first-class sweep axes.
+
+The paper evaluates every policy/scheme across device-variability axes
+(sigma_rLV, sigma_FSR, sigma_TR, grid offset, laser local variation — §II-C,
+Figs. 4-16).  Pre-redesign, those axes were seven positional/keyword scalars
+copy-pasted through every evaluation signature; adding one variation source
+meant editing ~6 signatures and every benchmark.  This module replaces the
+kwarg zoo with two objects:
+
+``register_axis(name, default, ...)``
+    One registration makes a variation axis known everywhere at once: it is
+    a valid ``Variations`` key, a valid ``SweepRequest`` axis/fixed name, and
+    (via an optional ``transform`` hook) applied during ``instantiate`` —
+    no signature edits anywhere.  ``thermal_drift`` below is the in-tree
+    demonstration: a post-paper axis added with a single call.
+
+``Variations(**overrides)``
+    A frozen name -> value mapping registered as a jax pytree.  The key set
+    is part of the treedef (jit-static), the values are leaves (traced), so
+    sweeping a value never recompiles while adding/removing an override
+    recompiles exactly once — the same caching contract the old per-kwarg
+    API had.  ``None`` means "use the config default" and is normalized
+    away at construction: ``Variations(sigma_rlv=None)`` carries no
+    overrides, indistinguishable from ``Variations()`` (same treedef).
+
+Resolution order for an axis value: explicit override in the ``Variations``
+instance, else the registry default evaluated against the
+``ArbitrationConfig`` (e.g. ``sigma_rlv`` falls back to ``cfg.var.sigma_rlv``,
+``tr_mean`` to ``cfg.grid.tr_mean``).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Any, Callable, Iterable, Mapping, NamedTuple
+
+import jax
+
+
+class AxisSpec(NamedTuple):
+    """Registry record for one variation/TR axis.
+
+    ``default``   cfg -> default value used when no override is present.
+    ``validate``  optional check run on *concrete* values only (sweep axis
+                  coordinates, fixed scalars, plain-float overrides); traced
+                  values inside jit are never validated.
+    ``transform`` optional ``(sys, value, cfg) -> sys`` hook applied by
+                  ``instantiate`` after the core sampling math whenever the
+                  axis is overridden — how post-paper axes (thermal drift,
+                  per-channel effects, ...) plug in without touching
+                  ``sampling.py``.
+    """
+
+    name: str
+    default: Callable[[Any], Any]
+    doc: str = ""
+    validate: Callable[[float], None] | None = None
+    transform: Callable[[Any, Any, Any], Any] | None = None
+
+
+_AXIS_REGISTRY: dict[str, AxisSpec] = {}
+
+
+def register_axis(
+    name: str,
+    default: Callable[[Any], Any],
+    *,
+    doc: str = "",
+    validate: Callable[[float], None] | None = None,
+    transform: Callable[[Any, Any, Any], Any] | None = None,
+) -> AxisSpec:
+    """Register a variation axis; see the module docstring for what that buys.
+
+    Axis names are jit-static (they live in ``Variations`` treedefs and the
+    sweep engine's static argument tuples), so re-binding a name would
+    silently serve stale compiled code — duplicate registration is an error.
+    """
+    if not isinstance(name, str) or not name.isidentifier():
+        raise ValueError(f"axis name must be an identifier, got {name!r}")
+    if name in _AXIS_REGISTRY:
+        raise ValueError(f"variation axis {name!r} already registered")
+    spec = AxisSpec(name=name, default=default, doc=doc, validate=validate,
+                    transform=transform)
+    _AXIS_REGISTRY[name] = spec
+    return spec
+
+
+def axis_names() -> tuple[str, ...]:
+    """Registered axis names, in registration order (live, never stale)."""
+    return tuple(_AXIS_REGISTRY)
+
+
+def axis_spec(name: str) -> AxisSpec:
+    try:
+        return _AXIS_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown variation axis {name!r}; registered: {axis_names()}"
+        ) from None
+
+
+def _maybe_validate(spec: AxisSpec, value) -> None:
+    if spec.validate is None or isinstance(value, jax.core.Tracer):
+        return
+    try:
+        concrete = float(value)
+    except (TypeError, ValueError):
+        return  # non-scalar/abstract value; nothing to check host-side
+    spec.validate(concrete)
+
+
+class Variations:
+    """Frozen axis-name -> override mapping; a jax pytree (see module doc)."""
+
+    __slots__ = ("_overrides",)
+
+    def __init__(self, **overrides):
+        clean = {}
+        for name in sorted(overrides):  # canonical key order -> one treedef
+            value = overrides[name]
+            if value is None:
+                continue
+            spec = axis_spec(name)
+            _maybe_validate(spec, value)
+            clean[name] = value
+        object.__setattr__(self, "_overrides", clean)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("Variations is immutable; use .replace(...)")
+
+    # -- mapping-ish accessors ------------------------------------------
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._overrides)
+
+    def get(self, name: str, default=None):
+        axis_spec(name)  # typo guard
+        return self._overrides.get(name, default)
+
+    def items(self) -> tuple:
+        return tuple(self._overrides.items())
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._overrides
+
+    def __len__(self) -> int:
+        return len(self._overrides)
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v!r}" for k, v in self._overrides.items())
+        return f"Variations({body})"
+
+    # -- functional updates ---------------------------------------------
+    def replace(self, **overrides) -> "Variations":
+        """New instance with overrides added/updated (``None`` removes)."""
+        merged = dict(self._overrides)
+        for name, value in overrides.items():
+            if value is None:
+                merged.pop(name, None)
+            else:
+                merged[name] = value
+        return Variations(**merged)
+
+    def merge(self, other) -> "Variations":
+        """Union with a mapping/``Variations``; duplicate axes are an error
+        (a silent precedence rule would hide caller bugs)."""
+        items = dict(other.items()) if isinstance(other, Variations) else dict(other)
+        items = {k: v for k, v in items.items() if v is not None}
+        dup = sorted(set(items) & set(self._overrides))
+        if dup:
+            raise ValueError(f"variation axes specified twice: {dup}")
+        return self.replace(**items)
+
+    # -- resolution ------------------------------------------------------
+    def resolve(self, name: str, cfg):
+        """Override if present, else the registry default under ``cfg``."""
+        spec = axis_spec(name)
+        value = self._overrides.get(name)
+        return spec.default(cfg) if value is None else value
+
+
+def _variations_flatten(v: Variations):
+    names = tuple(v._overrides)
+    return tuple(v._overrides[n] for n in names), names
+
+
+def _variations_unflatten(names, children) -> Variations:
+    # Bypass __init__: unflatten must round-trip tracers and jax-internal
+    # sentinel objects without validation.
+    out = object.__new__(Variations)
+    object.__setattr__(out, "_overrides", dict(zip(names, children)))
+    return out
+
+
+jax.tree_util.register_pytree_node(
+    Variations, _variations_flatten, _variations_unflatten
+)
+
+
+def as_variations(value) -> Variations:
+    """Coerce ``None`` / mapping / ``Variations`` to a ``Variations``."""
+    if value is None:
+        return Variations()
+    if isinstance(value, Variations):
+        return value
+    if isinstance(value, Mapping):
+        return Variations(**dict(value))
+    raise TypeError(
+        f"expected a Variations, mapping, or None, got {type(value).__name__}: "
+        f"{value!r} — pass overrides as Variations(sigma_rlv=...) (the old "
+        "positional-scalar convention was removed; the sigma_*= keywords "
+        "remain as deprecated shims)"
+    )
+
+
+#: Keyword names of the pre-``Variations`` sampling/evaluation API, kept as
+#: deprecated shims (signature order matches the old ``instantiate``).
+LEGACY_SIGMA_KWARGS = (
+    "sigma_rlv",
+    "sigma_go",
+    "sigma_llv_frac",
+    "sigma_fsr_frac",
+    "sigma_tr_frac",
+    "fsr_mean",
+)
+
+
+def merge_legacy_overrides(variations, legacy: Mapping[str, Any], *,
+                           caller: str, stacklevel: int = 3) -> Variations:
+    """Fold deprecated ``sigma_* =`` keyword overrides into a ``Variations``.
+
+    Emits ``DeprecationWarning`` when any legacy kwarg is actually given;
+    results are bit-identical to passing the same values via the pytree
+    (asserted in tests/test_variations.py).  Specifying an axis both ways
+    is an error.  ``stacklevel`` is the warning's attribution depth: 3
+    points at the caller of a function that calls this directly
+    (``instantiate``); evaluators with an intermediate frame pass 4 so the
+    warning names the user's call site, not library internals.
+    """
+    base = as_variations(variations)
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if not given:
+        return base
+    warnings.warn(
+        f"{caller}: the {sorted(given)} keyword overrides are deprecated; "
+        "pass variations=Variations(...) instead",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    return base.merge(given)
+
+
+def apply_axis_transforms(sys, variations: Variations, cfg):
+    """Run the ``transform`` hook of every overridden axis that has one.
+
+    Called by ``instantiate`` after the core sampling math; axes without an
+    override are skipped entirely, so the default path is bit-identical to
+    the pre-registry implementation.  Hooks run in axis *registration*
+    order (the engine-facing axis order), not override spelling order, so
+    composing non-commuting transforms is deterministic and documented.
+    """
+    for name, spec in _AXIS_REGISTRY.items():
+        if spec.transform is not None and name in variations:
+            sys = spec.transform(sys, variations.get(name), cfg)
+    return sys
+
+
+# --------------------------------------------------------------------------
+# Built-in axes (paper §II-C, Table I).  Registration order is the
+# engine-facing axis order; the first seven match the pre-registry
+# ``AXIS_NAMES`` tuple exactly.
+# --------------------------------------------------------------------------
+
+def _nonneg(name: str) -> Callable[[float], None]:
+    def check(v: float) -> None:
+        if v < 0.0:
+            raise ValueError(f"axis {name!r} must be >= 0, got {v}")
+    return check
+
+
+def _positive(name: str) -> Callable[[float], None]:
+    def check(v: float) -> None:
+        if v <= 0.0:
+            raise ValueError(f"axis {name!r} must be > 0, got {v}")
+    return check
+
+
+def _llv_frac_check(v: float) -> None:
+    if not 0.0 <= v < 0.5:
+        raise ValueError(
+            "axis 'sigma_llv_frac' must be in [0, 0.5) to keep the laser "
+            f"grid monotone (paper §II-C), got {v}"
+        )
+
+
+register_axis(
+    "tr_mean", lambda cfg: cfg.grid.tr_mean,
+    doc="mean tuning range lambda_TR [nm] (the shmoo x-axis of Figs. 4/14-16)",
+    validate=_positive("tr_mean"),
+)
+register_axis(
+    "sigma_rlv", lambda cfg: cfg.var.sigma_rlv,
+    doc="ring local resonance variation half-range [nm] (Table I)",
+    validate=_nonneg("sigma_rlv"),
+)
+register_axis(
+    "sigma_go", lambda cfg: cfg.var.sigma_go,
+    doc="grid offset half-range sigma_lGV + sigma_rGV [nm] (Table I)",
+    validate=_nonneg("sigma_go"),
+)
+register_axis(
+    "sigma_llv_frac", lambda cfg: cfg.var.sigma_llv_frac,
+    doc="laser local variation half-range, fraction of grid spacing",
+    validate=_llv_frac_check,
+)
+register_axis(
+    "sigma_fsr_frac", lambda cfg: cfg.var.sigma_fsr_frac,
+    doc="FSR variation half-range, fraction of the FSR mean",
+    validate=_nonneg("sigma_fsr_frac"),
+)
+register_axis(
+    "sigma_tr_frac", lambda cfg: cfg.var.sigma_tr_frac,
+    doc="tuning-range variation half-range, fraction of the TR mean",
+    validate=_nonneg("sigma_tr_frac"),
+)
+register_axis(
+    "fsr_mean", lambda cfg: cfg.grid.fsr,
+    doc="mean free spectral range lambda_FSR [nm] (Fig. 8 design axis)",
+    validate=_positive("fsr_mean"),
+)
+# Post-paper axis, added entirely through the registry: a uniform thermal
+# red-shift of every ring resonance (substrate heating moves the whole row
+# together; lasers are assumed independently stabilized).  Exists to prove
+# the extension contract — registered once, immediately sweepable.
+register_axis(
+    "thermal_drift", lambda cfg: 0.0,
+    doc="uniform thermal red-shift of every ring resonance [nm]",
+    transform=lambda sys, value, cfg: sys._replace(ring=sys.ring + value),
+)

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.configs.wdm import WDM8_G200
-from repro.core import evaluate_scheme, make_units, policy_min_tr
+from repro.core import Variations, evaluate_scheme, make_units, policy_min_tr
 
 
 @pytest.fixture(scope="module")
@@ -42,7 +42,8 @@ def test_rs_ssm_errors_at_large_tr(units):
 def test_ltc_ramp_slope_two(units):
     """§IV-A: min tuning range ramps at slope ~2 in sigma_rLV for LtC."""
     rlvs = np.array([0.28, 0.56, 1.12, 1.68])
-    mt = [float(policy_min_tr(WDM8_G200, units, "ltc", sigma_rlv=float(s)))
+    mt = [float(policy_min_tr(WDM8_G200, units, "ltc",
+                              Variations(sigma_rlv=float(s))))
           for s in rlvs]
     slope = np.polyfit(rlvs, mt, 1)[0]
     assert 1.5 <= slope <= 2.5, slope
@@ -53,11 +54,11 @@ def test_ltd_slope_one_and_impractical(units):
     requirement beyond the FSR."""
     rlvs = np.array([0.28, 0.56, 1.12, 2.24])
     mt = [float(policy_min_tr(WDM8_G200, units, "ltd",
-                              sigma_rlv=float(s), sigma_go=0.0))
+                              Variations(sigma_rlv=float(s), sigma_go=0.0)))
           for s in rlvs]
     slope = np.polyfit(rlvs, mt, 1)[0]
     assert 0.7 <= slope <= 1.4, slope
-    mt4 = float(policy_min_tr(WDM8_G200, units, "ltd", sigma_go=4.0))
+    mt4 = float(policy_min_tr(WDM8_G200, units, "ltd", Variations(sigma_go=4.0)))
     assert mt4 > WDM8_G200.grid.fsr
 
 
@@ -82,9 +83,9 @@ def test_ordering_invariance_of_ideal_min_tr(units):
 def test_fsr_design_guideline(units):
     """§IV-D: the nominal FSR (N_ch * gS) is near-optimal; under-design
     degrades sharply, over-design gradually."""
-    mt_nom = float(policy_min_tr(WDM8_G200, units, "ltc", fsr_mean=8.96))
-    mt_under = float(policy_min_tr(WDM8_G200, units, "ltc", fsr_mean=6.72))
-    mt_over = float(policy_min_tr(WDM8_G200, units, "ltc", fsr_mean=15.68))
+    mt_nom = float(policy_min_tr(WDM8_G200, units, "ltc", Variations(fsr_mean=8.96)))
+    mt_under = float(policy_min_tr(WDM8_G200, units, "ltc", Variations(fsr_mean=6.72)))
+    mt_over = float(policy_min_tr(WDM8_G200, units, "ltc", Variations(fsr_mean=15.68)))
     assert mt_under > mt_nom + 0.5
     assert mt_over > mt_nom + 0.5
 

@@ -1,0 +1,399 @@
+"""Declarative evaluation API tests: the ``Variations`` pytree + axis
+registry, the ``SweepRequest`` frontend, the parametrized scheme registry,
+and the deprecated-kwarg shims (which must stay bit-identical to the pytree
+path)."""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.wdm import WDM8_G200, WDM32_G200, WDM32_G400, WDM_CONFIGS
+from repro.core import (
+    ArbitrationConfig,
+    DWDMGrid,
+    SCHEME_POLICY,
+    SCHEMES,
+    SweepRequest,
+    Variations,
+    axis_names,
+    axis_spec,
+    evaluate_policy,
+    evaluate_scheme,
+    instantiate,
+    make_seq_retry,
+    make_units,
+    policy_min_tr,
+    register_axis,
+    register_scheme,
+    register_scheme_family,
+    registered_schemes,
+    scheme_spec,
+    sweep,
+    sweep_min_tr,
+    sweep_policy,
+    sweep_reference,
+    sweep_scheme,
+)
+from repro.core import variations as variations_mod
+from repro.core.api import evaluate_scheme_impl
+from repro.core.sweep import (
+    _CHUNK_BUDGET,
+    _auto_chunk,
+    policy_point_bytes,
+    scheme_point_bytes,
+)
+from repro.core.search_table import max_entries_for
+
+RLVS = np.array([0.28, 2.24], np.float32)
+TRS = np.array([2.0, 5.0, 9.5], np.float32)
+
+
+def _units(cfg, seed=4, n=5):
+    return make_units(cfg, seed=seed, n_laser=n, n_ring=n)
+
+
+# ------------------------------------------------------- Variations pytree ---
+
+def test_variations_construction_and_accessors():
+    v = Variations(sigma_rlv=2.0, tr_mean=5.0, sigma_go=None)
+    assert v.names == ("sigma_rlv", "tr_mean")  # None dropped, keys sorted
+    assert "sigma_rlv" in v and "sigma_go" not in v
+    assert v.get("sigma_rlv") == 2.0
+    assert v.get("sigma_go") is None
+    assert len(Variations()) == 0
+    # resolve: override wins, else registry default under the config
+    cfg = WDM8_G200
+    assert v.resolve("sigma_rlv", cfg) == 2.0
+    assert v.resolve("sigma_go", cfg) == cfg.var.sigma_go
+    assert Variations().resolve("tr_mean", cfg) == cfg.grid.tr_mean
+    assert Variations().resolve("fsr_mean", cfg) == cfg.grid.fsr
+
+
+def test_variations_replace_and_merge():
+    v = Variations(sigma_rlv=2.0)
+    assert v.replace(tr_mean=5.0).names == ("sigma_rlv", "tr_mean")
+    assert v.replace(sigma_rlv=None).names == ()
+    assert v.replace(sigma_rlv=3.0).get("sigma_rlv") == 3.0
+    assert v.get("sigma_rlv") == 2.0  # original untouched
+    merged = v.merge({"sigma_go": 1.0})
+    assert merged.names == ("sigma_go", "sigma_rlv")
+    with pytest.raises(ValueError, match="specified twice"):
+        v.merge({"sigma_rlv": 9.0})
+    with pytest.raises(AttributeError, match="immutable"):
+        v.sigma_rlv = 1.0
+
+
+def test_variations_unknown_axis_and_validation():
+    with pytest.raises(ValueError, match="unknown variation axis"):
+        Variations(bogus=1.0)
+    with pytest.raises(ValueError, match="unknown variation axis"):
+        Variations().get("bogus")
+    with pytest.raises(ValueError, match="must be >= 0"):
+        Variations(sigma_rlv=-1.0)
+    with pytest.raises(ValueError, match="monotone"):
+        Variations(sigma_llv_frac=0.7)
+
+
+def test_variations_is_a_pytree_and_jit_static_by_key_set():
+    v = Variations(sigma_rlv=2.0, tr_mean=5.0)
+    leaves, treedef = jax.tree_util.tree_flatten(v)
+    assert leaves == [2.0, 5.0]
+    v2 = jax.tree_util.tree_unflatten(treedef, [3.0, 6.0])
+    assert v2.names == v.names and v2.get("sigma_rlv") == 3.0
+
+    calls = []
+
+    @jax.jit
+    def f(var):
+        calls.append(1)
+        return var.get("sigma_rlv") * 2.0
+
+    assert float(f(Variations(sigma_rlv=1.0))) == 2.0
+    assert float(f(Variations(sigma_rlv=4.0))) == 8.0
+    assert len(calls) == 1  # same key set -> same treedef -> no retrace
+
+
+def test_axis_registry_introspection():
+    names = axis_names()
+    # the original seven engine axes, in their historical order, plus the
+    # registry-added thermal_drift extension
+    assert names[:7] == ("tr_mean", "sigma_rlv", "sigma_go",
+                         "sigma_llv_frac", "sigma_fsr_frac", "sigma_tr_frac",
+                         "fsr_mean")
+    assert "thermal_drift" in names
+    assert axis_spec("sigma_rlv").doc
+    with pytest.raises(ValueError, match="already registered"):
+        register_axis("sigma_rlv", lambda cfg: 0.0)
+
+
+# ------------------------------------------------- deprecated kwarg shims ---
+
+def test_instantiate_legacy_kwargs_warn_and_match_pytree():
+    cfg = WDM8_G200
+    units = _units(cfg)
+    with pytest.warns(DeprecationWarning, match="Variations"):
+        legacy = instantiate(cfg, units, sigma_rlv=2.0, sigma_go=1.0)
+    new = instantiate(cfg, units, Variations(sigma_rlv=2.0, sigma_go=1.0))
+    for a, b in zip(legacy, new):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError, match="specified twice"):
+        with pytest.warns(DeprecationWarning):
+            instantiate(cfg, units, Variations(sigma_rlv=2.0), sigma_rlv=3.0)
+
+
+def test_evaluator_legacy_kwargs_bit_identical():
+    cfg = WDM8_G200
+    units = _units(cfg)
+    with pytest.warns(DeprecationWarning, match="Variations"):
+        legacy = evaluate_scheme_impl(cfg, units, "seq", 5.0, sigma_rlv=2.0)
+    new = evaluate_scheme_impl(cfg, units, "seq",
+                               variations=Variations(tr_mean=5.0, sigma_rlv=2.0))
+    for field in legacy._fields:
+        assert np.array_equal(
+            np.asarray(getattr(legacy, field)), np.asarray(getattr(new, field))
+        ), field
+    # jitted frontends: legacy kwargs == pytree, bit for bit (same traced
+    # graph, only the input treedef differs)
+    j_legacy = evaluate_scheme(cfg, units, "seq", 5.0, sigma_rlv=2.0)
+    j_new = evaluate_scheme(cfg, units, "seq",
+                            variations=Variations(tr_mean=5.0, sigma_rlv=2.0))
+    assert np.array_equal(np.asarray(j_legacy.cafp), np.asarray(j_new.cafp))
+    m_legacy = policy_min_tr(cfg, units, "ltc", sigma_rlv=2.0, fsr_mean=8.0)
+    m_new = policy_min_tr(cfg, units, "ltc",
+                          Variations(sigma_rlv=2.0, fsr_mean=8.0))
+    assert float(m_legacy) == float(m_new)
+
+
+def test_evaluator_tr_mean_conflicts_rejected():
+    cfg = WDM8_G200
+    units = _units(cfg, n=2)
+    with pytest.raises(ValueError, match="both positionally"):
+        evaluate_scheme(cfg, units, "seq", 5.0,
+                        variations=Variations(tr_mean=6.0))
+    with pytest.raises(ValueError, match="solves for the tuning range"):
+        policy_min_tr(cfg, units, "ltc", Variations(tr_mean=5.0))
+
+
+# ------------------------------------------------------ SweepRequest path ---
+
+def test_sweep_request_matches_legacy_wrappers_and_reference():
+    """Golden parity: the declarative path == the bare-grid wrappers == the
+    per-point reference loop, for each figure family's request shape."""
+    cfg = WDM8_G200
+    units = _units(cfg)
+    axes = {"sigma_rlv": RLVS, "tr_mean": TRS}
+
+    # fig4 family: policy shmoo
+    req = SweepRequest(cfg=cfg, units=units, policy="lta", axes=axes)
+    res = sweep(req)
+    assert np.array_equal(np.asarray(res.data),
+                          np.asarray(sweep_policy(cfg, units, "lta", axes)))
+    assert np.array_equal(np.asarray(res.data),
+                          np.asarray(sweep_reference(req).data))
+
+    # fig5/7/8 family: min-TR along a named axis
+    mt_axes = {"fsr_mean": np.array([6.72, 8.96], np.float32)}
+    req = SweepRequest(cfg=cfg, units=units, policy="ltc", metric="min_tr",
+                       axes=mt_axes)
+    res = sweep(req)
+    assert np.array_equal(np.asarray(res.data),
+                          np.asarray(sweep_min_tr(cfg, units, "ltc", mt_axes)))
+    assert np.array_equal(np.asarray(res.data),
+                          np.asarray(sweep_reference(req).data))
+
+    # fig15/16 family: scheme sweep with fixed overrides, Variations-typed
+    fixed = Variations(sigma_fsr_frac=0.05, sigma_tr_frac=0.20)
+    req = SweepRequest(cfg=cfg, units=units, scheme="rs_ssm",
+                       axes={"tr_mean": TRS}, fixed=fixed)
+    res = sweep(req)
+    legacy = sweep_scheme(cfg, units, "rs_ssm", {"tr_mean": TRS},
+                          fixed={"sigma_fsr_frac": 0.05, "sigma_tr_frac": 0.20})
+    ref = sweep_reference(req).data
+    for field in res.data._fields:
+        a = np.asarray(getattr(res.data, field))
+        assert np.array_equal(a, np.asarray(getattr(legacy, field))), field
+        assert np.array_equal(a, np.asarray(getattr(ref, field))), field
+
+
+def test_sweep_result_carries_axis_metadata():
+    cfg = WDM8_G200
+    units = _units(cfg)
+    req = SweepRequest(cfg=cfg, units=units, policy="ltd",
+                       axes={"sigma_rlv": RLVS, "tr_mean": TRS})
+    res = sweep(req)
+    assert res.axis_names == ("sigma_rlv", "tr_mean")
+    assert np.asarray(res.data).shape == (len(RLVS), len(TRS))
+    assert np.array_equal(res.axis("sigma_rlv"), RLVS)
+    assert np.array_equal(res.axis("tr_mean"), TRS)
+    assert res.coords[1].dtype == np.float32
+    with pytest.raises(ValueError, match="no axis"):
+        res.axis("fsr_mean")
+
+
+def test_sweep_request_error_paths():
+    cfg = WDM8_G200
+    units = _units(cfg, n=2)
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        SweepRequest(cfg=cfg, units=units, policy="ltc", axes={"bogus": RLVS})
+    with pytest.raises(ValueError, match="unknown sweep axis"):
+        SweepRequest(cfg=cfg, units=units, policy="ltc",
+                     axes={"tr_mean": TRS}, fixed={"bogus": 1.0})
+    with pytest.raises(ValueError, match="exactly one"):
+        SweepRequest(cfg=cfg, units=units, axes={"tr_mean": TRS})
+    with pytest.raises(ValueError, match="at least one sweep axis"):
+        SweepRequest(cfg=cfg, units=units, policy="ltc", axes={})
+    with pytest.raises(ValueError, match="must be >= 0"):
+        SweepRequest(cfg=cfg, units=units, policy="ltc",
+                     axes={"sigma_rlv": np.array([-1.0])})
+    # request validation == engine validation == reference validation (the
+    # wrappers construct the same SweepRequest)
+    with pytest.raises(ValueError, match="cannot be an axis"):
+        sweep_min_tr(cfg, units, "ltc", {"tr_mean": TRS})
+
+
+# --------------------------------------------------- axis extensibility ---
+
+def test_register_axis_is_immediately_sweepable():
+    """The extension contract: one register_axis call makes a new variation
+    source a valid Variations key, SweepRequest axis, and instantiate-time
+    transform — no signature edits anywhere."""
+    name = "tv_laser_heater"
+    register_axis(
+        name, lambda cfg: 0.0,
+        doc="test axis: uniform laser red-shift [nm]",
+        transform=lambda sys, value, cfg: sys._replace(laser=sys.laser + value),
+    )
+    try:
+        cfg = WDM8_G200
+        units = _units(cfg)
+        # consumed by instantiate through the transform hook
+        shifted = instantiate(cfg, units, Variations(**{name: 0.5}))
+        base = instantiate(cfg, units)
+        assert np.allclose(np.asarray(shifted.laser),
+                           np.asarray(base.laser) + 0.5)
+        assert np.array_equal(np.asarray(shifted.ring), np.asarray(base.ring))
+        # immediately a valid sweep axis, bit-identical to the ref loop
+        req = SweepRequest(cfg=cfg, units=units, policy="ltc",
+                           axes={name: np.array([0.0, 0.5], np.float32),
+                                 "tr_mean": TRS})
+        got = np.asarray(sweep(req).data)
+        assert np.array_equal(got, np.asarray(sweep_reference(req).data))
+        # zero shift reproduces the baseline column exactly
+        base_req = SweepRequest(cfg=cfg, units=units, policy="ltc",
+                                axes={"tr_mean": TRS})
+        assert np.array_equal(got[0], np.asarray(sweep(base_req).data))
+    finally:
+        variations_mod._AXIS_REGISTRY.pop(name, None)
+
+
+def test_thermal_drift_axis():
+    cfg = WDM8_G200
+    units = _units(cfg)
+    base = instantiate(cfg, units)
+    drifted = instantiate(cfg, units, Variations(thermal_drift=0.3))
+    assert np.allclose(np.asarray(drifted.ring), np.asarray(base.ring) + 0.3)
+    # zero drift is bit-identical to not passing the axis at all
+    zero = instantiate(cfg, units, Variations(thermal_drift=0.0))
+    assert np.array_equal(np.asarray(zero.ring), np.asarray(base.ring))
+    # sweepable like any paper axis
+    res = sweep(SweepRequest(
+        cfg=cfg, units=units, policy="ltd", metric="min_tr",
+        axes={"thermal_drift": np.array([0.0, 0.5, 1.0], np.float32)},
+    ))
+    mt = np.asarray(res.data)
+    assert mt.shape == (3,) and np.all(np.isfinite(mt))
+
+
+# ------------------------------------------------- parametrized schemes ---
+
+def test_seq_retry_family_registered_with_params():
+    for name, budget in (("seq_retry_r1", 1), ("seq_retry_r2", 2),
+                         ("seq_retry_r4", 4)):
+        spec = scheme_spec(name)
+        assert spec.policy == "lta"
+        assert dict(spec.params)["n_rounds"] == budget
+    assert dict(scheme_spec("seq_retry_phys").params)["constrained_first"] is False
+
+
+def test_scheme_family_duplicate_registration_rejected():
+    base = "tv_dup_family"
+    register_scheme_family(
+        base, make_seq_retry, {"a": {"n_rounds": 1}}, policy="lta"
+    )
+    with pytest.raises(ValueError, match="already registered"):
+        register_scheme_family(
+            base, make_seq_retry, {"a": {"n_rounds": 2}}, policy="lta"
+        )
+
+
+def test_parametrized_full_budget_matches_unbudgeted():
+    """A family variant with budget == N_ch is the same arbiter as the
+    unparametrized seq_retry (whose default budget is N_ch) — evaluated
+    through the registry, bit for bit.  A 4-channel config keeps the
+    unrolled-retry compilation cheap."""
+    name = "tv_seq_retry_r4ch"
+    if name not in registered_schemes():
+        register_scheme(name, make_seq_retry(n_rounds=4), policy="lta",
+                        params={"n_rounds": 4})
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=4))
+    units = _units(cfg)
+    a = evaluate_scheme(cfg, units, name, 3.0)
+    b = evaluate_scheme(cfg, units, "seq_retry", 3.0)
+    for field in a._fields:
+        assert np.array_equal(np.asarray(getattr(a, field)),
+                              np.asarray(getattr(b, field))), field
+
+
+def test_retry_budget_monotone_through_engine():
+    """More retry budget never hurts CAFP (the fig17 claim, at test scale —
+    a 4-channel config so three registry variants compile quickly)."""
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=4))
+    units = _units(cfg, seed=17, n=6)
+    trs = {"tr_mean": np.array([2.0, 3.0, 4.4], np.float32)}
+    means = []
+    for scheme in ("seq_retry_r1", "seq_retry_r2", "seq_retry_r4"):
+        res = sweep(SweepRequest(cfg=cfg, units=units, scheme=scheme, axes=trs))
+        means.append(float(np.mean(np.asarray(res.data.cafp))))
+    assert means[0] >= means[1] - 1e-6
+    assert means[1] >= means[2] - 1e-6
+
+
+# ------------------------------------------------------- live registry ---
+
+def test_schemes_views_are_live():
+    """Satellite fix: SCHEMES/SCHEME_POLICY used to be import-time
+    snapshots; schemes registered afterwards must now be visible."""
+    name = "tv_live_view_scheme"
+    assert name not in SCHEMES
+    before = len(SCHEMES)
+    register_scheme(name, make_seq_retry(n_rounds=1), policy="lta")
+    assert name in SCHEMES
+    assert name in tuple(SCHEMES)
+    assert len(SCHEMES) == before + 1
+    assert SCHEME_POLICY[name] == "lta"
+    assert dict(SCHEME_POLICY)[name] == "lta"
+    assert tuple(SCHEMES) == registered_schemes()
+
+
+# ------------------------------------------------------- wdm32 capacity ---
+
+def test_wdm32_table_footprint_fits_engine_budget():
+    """ROADMAP wdm32 audit: the fixed-size search tables (MAX_E = 3N) keep
+    WDM32 grid points inside the engine's per-chunk memory budget — at
+    paper scale (100x100 trials) for the policy/min-TR path that fig5 runs,
+    and at the default benchmark scale (24x24) for the scheme/table path."""
+    full_trials, fast_trials = 100 * 100, 24 * 24
+    for cfg in (WDM32_G200, WDM32_G400):
+        assert max_entries_for(cfg.grid.n_ch) == 3 * 32
+        assert policy_point_bytes(cfg, full_trials) <= _CHUNK_BUDGET
+        assert scheme_point_bytes(cfg, fast_trials) <= _CHUNK_BUDGET
+        units = make_units(cfg, seed=0, n_laser=24, n_ring=24)
+        assert _auto_chunk(cfg, units, 16, None) >= 1
+        assert _auto_chunk(cfg, units, 16, "seq") >= 1
+    # and the fig5 min-TR benchmark actually covers the wdm32 configs
+    import benchmarks.fig5_min_tuning_range as fig5
+
+    assert {"wdm32-g200", "wdm32-g400"} <= set(WDM_CONFIGS)
+    assert fig5.WDM_CONFIGS is WDM_CONFIGS
