@@ -1,16 +1,22 @@
 # CI entry points (ROADMAP "wire into CI"): `make ci` is what the GitHub
-# workflow runs — the tier-1 suite plus the BENCH-gate self-test.
+# workflow runs — the tier-1 suite, the BENCH-gate self-test, and the
+# kernel microbenches (table-build + matching only; no figure sweeps), so
+# the bench entry points stay importable and green without the full
+# bench-gate cost.
 PY ?= python
 
-.PHONY: ci tier1 bench-selftest bench bench-gate
+.PHONY: ci tier1 bench-selftest bench-kernel bench bench-gate
 
-ci: tier1 bench-selftest
+ci: tier1 bench-selftest bench-kernel
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 bench-selftest:
 	$(PY) benchmarks/check_regression.py --self-test
+
+bench-kernel:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel
 
 # Regenerate the BENCH trajectory file and gate it against the committed
 # baseline (>20% per-figure / per-record slowdowns fail).

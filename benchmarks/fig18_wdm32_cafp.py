@@ -1,0 +1,72 @@
+"""Fig. 18 (beyond paper) — paper-scale WDM32 CAFP grid.
+
+The ROADMAP's open wdm32 study: a CAFP shmoo of the paper's best oblivious
+scheme (VT-RS/SSM) on the 32-channel configs at the paper's full Monte
+Carlo size (100x100 = 10,000 trials per point).  This workload was
+impossible before the streaming top-E table build: one scheme point's
+dense (T, N, N*J) candidate tensor was ~2.5 GB against the sweep engine's
+256 MB chunk budget, while the streaming build keeps the whole point
+(persistent (T, N, E) tables + bounded merge transient) inside it — the
+audit fields below record the estimate the engine actually budgets with.
+
+Trials are paper-scale in *both* modes (that is the figure's point);
+``--full`` only widens the sigma_rLV x TR grid.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.wdm import WDM32_G200
+from repro.core import SweepRequest, make_units, sweep
+from repro.core.sweep import _CHUNK_BUDGET, _auto_chunk, scheme_point_bytes
+
+from .common import timed_steady
+
+TRIALS = 100  # paper-scale Monte Carlo (100x100) in every mode
+SCHEME = "vtrs_ssm"
+
+
+def run(full: bool = False):
+    cfg = WDM32_G200
+    units = make_units(cfg, seed=21, n_laser=TRIALS, n_ring=TRIALS)
+    spacing = cfg.grid.grid_spacing
+    # TR around the interesting shoulder (fractions of the 32-ch FSR), a
+    # small grid by default — every point is a 10,000-trial evaluation
+    # whose table build alone streams ~5.4M candidate peaks.
+    trs = (np.array([0.25, 0.28], np.float32) if not full else
+           np.array([0.22, 0.25, 0.28, 0.31], np.float32)) * cfg.grid.fsr
+    rlvs = (np.array([2.0], np.float32) if not full else
+            np.array([1.0, 2.0], np.float32)) * spacing
+    axes = {"sigma_rlv": rlvs, "tr_mean": trs}
+
+    n_trials = TRIALS * TRIALS
+    per_point = scheme_point_bytes(cfg, n_trials)
+    n_points = len(rlvs) * len(trs)
+    chunk = _auto_chunk(cfg, units, n_points, SCHEME)
+    assert per_point <= _CHUNK_BUDGET, (
+        f"WDM32 scheme point {per_point} B exceeds the chunk budget"
+    )
+
+    req = SweepRequest(cfg=cfg, units=units, scheme=SCHEME, axes=axes)
+    res, engine_ms = timed_steady(sweep, req)
+    cafp = np.asarray(res.data.cafp, np.float32)
+    afp = np.asarray(res.data.afp, np.float32)
+    return [
+        (
+            f"fig18/wdm32-g200/{SCHEME}",
+            {
+                "trials_per_point": n_trials,
+                "point_bytes": int(per_point),
+                "chunk_budget": int(_CHUNK_BUDGET),
+                "fits_budget": bool(per_point <= _CHUNK_BUDGET),
+                "auto_chunk": int(chunk),
+                "sigma_rlv": res.axis("sigma_rlv").tolist(),
+                "tr": res.axis("tr_mean").tolist(),
+                "cafp": np.round(cafp, 4).tolist(),
+                "afp": np.round(afp, 4).tolist(),
+                "max_cafp": round(float(cafp.max()), 4),
+                "mean_cafp": round(float(cafp.mean()), 4),
+                "engine_ms": round(engine_ms, 1),
+            },
+        )
+    ]

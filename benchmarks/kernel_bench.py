@@ -66,6 +66,47 @@ def run(full: bool = False):
          {"trials": sys.n_trials, "us_per_call": round(us)})
     )
 
+    # Streaming top-E table build across channel counts: jnp (the engine's
+    # scheme-path hot spot) at bench trials and the Pallas kernel in
+    # interpret mode on one 128-trial lane block (correctness-path cost;
+    # max_alias=2 there because interpret wall time is trace-dominated —
+    # note that at that alias count the kernel's alias-group merge
+    # degenerates to a single sort, so the multi-group path is guarded by
+    # tests/test_kernels.py::test_table_kernel_multi_group_merge, not this
+    # timing row).  The jnp legs DO run the multi-step streaming merge at
+    # N=32, so a regression back to the dense build shows up in us_jnp and
+    # in the memory pins before it OOMs a WDM32 sweep.
+    for n_ch in (8, 16, 32):
+        cfg_n = wdm_config(n_ch=n_ch)
+        units_n = make_units(cfg_n, seed=7, n_laser=n, n_ring=n)
+        sys_n = instantiate(cfg_n, units_n)
+        tr_n = 5.0 * sys_n.tr_unit
+        _, us_jnp = _time(ops.build_tables, sys_n.laser, sys_n.ring,
+                          sys_n.fsr, tr_n, max_alias=4, backend="jnp")
+        blk = type(sys_n)(*[a[:128] for a in sys_n])
+        (d_i, w_i, nv_i), us_int = _time(
+            ops.build_tables, blk.laser, blk.ring, blk.fsr, tr_n[:128],
+            max_alias=2, backend="interpret", reps=1,
+        )
+        d_j, w_j, nv_j = ops.build_tables(
+            blk.laser, blk.ring, blk.fsr, tr_n[:128],
+            max_alias=2, backend="jnp",
+        )
+        fin = np.isfinite(np.asarray(d_j))
+        parity = bool(
+            np.array_equal(np.asarray(w_i), np.asarray(w_j))
+            and np.array_equal(np.asarray(nv_i), np.asarray(nv_j))
+            and np.allclose(np.asarray(d_i)[fin], np.asarray(d_j)[fin], atol=1e-5)
+        )
+        if not parity:
+            raise AssertionError(f"table build n={n_ch}: interpret != jnp")
+        rows.append(
+            (f"kernel/table_build_n{n_ch}",
+             {"trials": sys_n.n_trials, "us_jnp": round(us_jnp),
+              "interpret_trials": 128, "us_interpret": round(us_int),
+              "identical_wl": parity})
+        )
+
     # Bottleneck matching across channel counts: the retired Kuhn binary
     # search vs the current dispatch (Hall subsets at N=8, the single-pass
     # bottleneck sweep at N=16/32).  Thresholds must stay bit-identical —

@@ -31,6 +31,7 @@ def main() -> None:
         fig15_seq_breakdown,
         fig16_high_variation,
         fig17_retry_budget,
+        fig18_wdm32_cafp,
         kernel_bench,
         roofline_report,
     )
@@ -45,6 +46,7 @@ def main() -> None:
         fig15_seq_breakdown,
         fig16_high_variation,
         fig17_retry_budget,
+        fig18_wdm32_cafp,
         kernel_bench,
         roofline_report,
         beyond_lta,

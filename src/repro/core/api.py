@@ -243,15 +243,24 @@ SCHEMES = _SchemeNamesView()
 SCHEME_POLICY = _SchemePolicyView()
 
 
-def _build_tables(cfg, sys: SystemBatch, tr_mean, backend: str | None):
-    """Search tables via core jnp (backend=None) or the kernel wrappers."""
+def _build_tables(cfg, sys: SystemBatch, tr_mean, backend: str | None,
+                  visible=None):
+    """Search tables via core jnp (backend=None) or the kernel wrappers.
+
+    ``visible`` ((T, N_wl) or (T, N_ring, N_wl) bool) restricts the search
+    to lines still on the bus — the masked re-search a ring runs while
+    other rings hold locks.  Every backend threads it to the same
+    streaming top-E builder semantics (parity-tested).
+    """
     if backend is None:
-        return build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+        return build_search_tables(
+            sys, tr_mean, visible=visible, max_alias=cfg.max_fsr_alias
+        )
     from repro.kernels import ops  # local import: kernels layer is optional
 
     delta, wl, nv = ops.build_tables(
         sys.laser, sys.ring, sys.fsr, tr_mean * sys.tr_unit,
-        max_alias=cfg.max_fsr_alias, backend=backend,
+        visible=visible, max_alias=cfg.max_fsr_alias, backend=backend,
     )
     return SearchTables(delta=delta, wl=wl, n_valid=nv)
 
@@ -311,10 +320,16 @@ def oblivious_arbitrate(
     tr_mean,
     scheme: str,
     *,
+    visible=None,
     backend: str | None = None,
 ) -> Assignment:
-    """Run a wavelength-oblivious arbitration scheme on a system batch."""
-    tables = _build_tables(cfg, sys, tr_mean, backend)
+    """Run a wavelength-oblivious arbitration scheme on a system batch.
+
+    ``visible`` ((T, N_wl) or (T, N_ring, N_wl) bool) runs the scheme on
+    masked re-search tables — the arbitration a late-joining ring performs
+    while earlier locks have already captured lines.
+    """
+    tables = _build_tables(cfg, sys, tr_mean, backend, visible=visible)
     spec = chain_spec(cfg.s)
     return scheme_spec(scheme).arbiter(cfg, tables, spec)
 

@@ -14,6 +14,32 @@ Tables are fixed-size (MAX_E entries) with sentinel padding for batching:
 delta = +inf, wl = -1.  If TR > FSR a laser line aliases into multiple
 entries (multi-FSR, paper §V-B); MAX_E = 3*N covers TR up to ~2.5 FSR,
 beyond every sweep in the paper.
+
+Memory model
+------------
+
+A ring sees K = N * J candidate peaks (J = 2*max_alias + 1 FSR aliases per
+line) of which only E = 3*N survive, so materializing the full (T, N, K)
+candidate tensor plus an argsort — the pre-streaming implementation, kept
+below as ``build_search_tables_dense`` — costs O(T*N*(N*J + E)) while the
+answer only needs O(T*N*E).  ``build_search_tables`` instead *streams* the
+candidate axis: a ``lax.fori_loop`` walks (line-block, ring-block) tiles,
+materializes one small (T, R, L*J) candidate block at a time, and merges it
+into the persistent sorted (T, N, E) table with one stable top-E sort of
+width E + L*J.  Peak working set is the persistent table (8 bytes/entry:
+f32 delta + i32 wl) plus a bounded merge transient chosen by ``merge_plan``
+— O(T*N*E + T*R*(E + L*J)) — which is what lets a paper-scale (100x100
+trial) WDM32 point fit the sweep engine's 256 MB chunk budget (~6x below
+the dense build; see ``repro.core.sweep.scheme_point_bytes``).
+
+Bit-exactness: the dense path's stable argsort orders candidates by
+(delta, flat candidate index) with flat index = line*J + alias.  The
+streaming merge preserves exactly that order: blocks are consumed in
+ascending line-major/alias-minor order, each block's internal layout is the
+same sub-order, and the merge sort is *stable* with the existing buffer
+(all earlier flat indices) concatenated first — so ties resolve identically
+and the two builders agree bit-for-bit (guarded by a hypothesis property
+test and the kernel parity suite).
 """
 from __future__ import annotations
 
@@ -25,6 +51,13 @@ import jax.numpy as jnp
 from .sampling import SystemBatch
 
 SENTINEL = jnp.float32(jnp.inf)
+
+#: Merge-transient sizing for the streaming builder: the per-step sort
+#: scratch is kept under min(max(table bytes, FLOOR), CAP).  The 20 MiB cap
+#: is what leaves a paper-scale WDM32 point inside the sweep engine's
+#: 256 MiB chunk budget next to its 245.8 MB persistent tables.
+_MERGE_FLOOR_BYTES = 4 * 1024 * 1024
+_MERGE_CAP_BYTES = 20 * 1024 * 1024
 
 
 class SearchTables(NamedTuple):
@@ -41,6 +74,85 @@ def max_entries_for(n_ch: int) -> int:
     return 3 * n_ch
 
 
+class MergePlan(NamedTuple):
+    """Static tiling of the streaming builder at one (T, N, J, E) shape.
+
+    line_block (L) and ring_block (R) divide N; each fori_loop step merges
+    the (T, R, L*J) candidate tile of one (line-block, ring-block) pair into
+    the table with a stable sort of width E + L*J.  ``table_bytes`` is the
+    persistent output footprint (f32 delta + i32 wl + i32 n_valid);
+    ``transient_bytes`` bounds the per-step scratch (sort in + out + block).
+    """
+
+    line_block: int
+    ring_block: int
+    table_bytes: int
+    transient_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return self.table_bytes + self.transient_bytes
+
+
+def _divisors_desc(n: int) -> list[int]:
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def merge_plan(
+    n_trials: int, n_ch: int, *, max_alias: int = 8, max_entries: int | None = None
+) -> MergePlan:
+    """Choose the streaming tile sizes for a (T, N) system batch.
+
+    Work (total sorted elements ~ T * N^2/L * (E + L*J)) is minimized by the
+    largest line block, so L is the largest divisor of N whose transient
+    fits the cap; R then grows to cut the step count (N^2 / (L*R)) while
+    still fitting.  The same plan drives the builder and the sweep engine's
+    ``scheme_point_bytes`` accounting, so the two cannot drift.
+    """
+    n_j = 2 * max_alias + 1
+    e_req = max_entries_for(n_ch) if max_entries is None else max_entries
+    e = min(e_req, n_ch * n_j)
+    table = n_trials * n_ch * (e * 8 + 4)  # f32 delta + i32 wl + i32 n_valid
+
+    def transient(l: int, r: int) -> int:
+        # stable sort in + out ((E + L*J) wide, f32 key + i32 payload) plus
+        # the candidate block itself (L*J wide, f32 + i32)
+        return n_trials * r * 8 * (2 * (e + l * n_j) + l * n_j)
+
+    cap = min(max(table, _MERGE_FLOOR_BYTES), _MERGE_CAP_BYTES)
+    line = 1
+    for l in _divisors_desc(n_ch):
+        if transient(l, 1) <= cap:
+            line = l
+            break
+    ring = 1
+    for r in _divisors_desc(n_ch):
+        if transient(line, r) <= cap:
+            ring = r
+            break
+    return MergePlan(
+        line_block=line,
+        ring_block=ring,
+        table_bytes=table,
+        transient_bytes=transient(line, ring),
+    )
+
+
+def _candidate_block(laser_b, ring_b, fsr_b, tr_b, j):
+    """Masked candidate deltas of one (line-block, ring-block) tile.
+
+    laser_b: (T, L) lines; ring_b/fsr_b/tr_b: (T, R) rings; j: (J,) aliases.
+    Returns (delta (T, R, L, J) with +inf where unreachable, ok (T, R, L, J)).
+    Arithmetic matches the dense build term-for-term ((laser - ring) -
+    j*FSR, then the [0, TR] window) so values are bit-identical.
+    """
+    d = (laser_b[:, None, :, None] - ring_b[:, :, None, None]) - (
+        j[None, None, None, :] * fsr_b[:, :, None, None]
+    )
+    ok = (d >= 0.0) & (d <= tr_b[:, :, None, None])
+    return d, ok
+
+
 def build_search_tables(
     sys: SystemBatch,
     tr_mean: float,
@@ -49,12 +161,91 @@ def build_search_tables(
     max_alias: int = 8,
     max_entries: int | None = None,
 ) -> SearchTables:
-    """Construct per-ring search tables for a batch of trials.
+    """Construct per-ring search tables for a batch of trials (streaming).
 
     visible: optional bool array of lines present on the bus — (T, N_wl)
       (same for every ring) or (T, N_ring, N_wl) (per searching ring, for
       position-dependent capture).  None = all lines visible.  Used for
       re-searches while other rings hold locks.
+
+    Bit-identical to ``build_search_tables_dense`` (the retired full-tensor
+    implementation, kept as the oracle) with ~6x less peak memory; see the
+    module docstring for the merge scheme and the tie-order argument.
+    """
+    T, N = sys.laser.shape
+    n_j = 2 * max_alias + 1
+    e_req = max_entries_for(N) if max_entries is None else max_entries
+    e = min(e_req, N * n_j)  # dense argsort also yields min(E, K) columns
+    plan = merge_plan(T, N, max_alias=max_alias, max_entries=max_entries)
+    lb, rb = plan.line_block, plan.ring_block
+    n_lb, n_rb = N // lb, N // rb
+
+    j = jnp.arange(-max_alias, max_alias + 1, dtype=jnp.float32)  # (J,)
+    tr = tr_mean * sys.tr_unit                                    # (T, N)
+    laser, ring, fsr = sys.laser, sys.ring, sys.fsr
+
+    def body(step, carry):
+        delta, wl = carry
+        # Line blocks ascend for each ring block: the stable merge then sees
+        # candidates in dense flat order (line-major, alias-minor).
+        l0 = (step // n_rb) * lb
+        r0 = (step % n_rb) * rb
+        laser_b = jax.lax.dynamic_slice_in_dim(laser, l0, lb, axis=1)
+        ring_b = jax.lax.dynamic_slice_in_dim(ring, r0, rb, axis=1)
+        fsr_b = jax.lax.dynamic_slice_in_dim(fsr, r0, rb, axis=1)
+        tr_b = jax.lax.dynamic_slice_in_dim(tr, r0, rb, axis=1)
+        d, ok = _candidate_block(laser_b, ring_b, fsr_b, tr_b, j)
+        if visible is not None:
+            if visible.ndim == 2:
+                vis = jax.lax.dynamic_slice_in_dim(visible, l0, lb, axis=1)
+                ok = ok & vis[:, None, :, None]
+            else:
+                vis = jax.lax.dynamic_slice_in_dim(visible, r0, rb, axis=1)
+                vis = jax.lax.dynamic_slice_in_dim(vis, l0, lb, axis=2)
+                ok = ok & vis[:, :, :, None]
+        blk_d = jnp.where(ok, d, SENTINEL).reshape(d.shape[0], rb, lb * n_j)
+        blk_w = jnp.broadcast_to(
+            l0 + jnp.arange(lb, dtype=jnp.int32)[None, None, :, None], d.shape
+        ).reshape(d.shape[0], rb, lb * n_j)
+
+        buf_d = jax.lax.dynamic_slice_in_dim(delta, r0, rb, axis=1)
+        buf_w = jax.lax.dynamic_slice_in_dim(wl, r0, rb, axis=1)
+        cat_d = jnp.concatenate([buf_d, blk_d], axis=-1)
+        cat_w = jnp.concatenate([buf_w, blk_w], axis=-1)
+        # Stable: buffer entries (all earlier flat candidate indices) win
+        # delta ties, exactly like the dense stable argsort.
+        srt_d, srt_w = jax.lax.sort(
+            (cat_d, cat_w), dimension=-1, is_stable=True, num_keys=1
+        )
+        delta = jax.lax.dynamic_update_slice_in_dim(
+            delta, srt_d[..., :e], r0, axis=1
+        )
+        wl = jax.lax.dynamic_update_slice_in_dim(wl, srt_w[..., :e], r0, axis=1)
+        return delta, wl
+
+    delta0 = jnp.full((T, N, e), SENTINEL, jnp.float32)
+    wl0 = jnp.full((T, N, e), -1, jnp.int32)
+    delta, wl = jax.lax.fori_loop(0, n_lb * n_rb, body, (delta0, wl0))
+    finite = jnp.isfinite(delta)
+    wl = jnp.where(finite, wl, -1)
+    n_valid = jnp.sum(finite, axis=-1).astype(jnp.int32)
+    return SearchTables(delta=delta, wl=wl, n_valid=n_valid)
+
+
+def build_search_tables_dense(
+    sys: SystemBatch,
+    tr_mean: float,
+    *,
+    visible: jax.Array | None = None,
+    max_alias: int = 8,
+    max_entries: int | None = None,
+) -> SearchTables:
+    """Full-tensor reference builder (the pre-streaming implementation).
+
+    Materializes the (T, N, N, J) candidate tensor and argsorts the whole
+    candidate axis to keep the first E entries — O(T*N*(N*J + E)) peak
+    memory.  Kept as the golden oracle for ``build_search_tables``; never
+    use on a hot path at paper scale.
     """
     T, N = sys.laser.shape
     E = max_entries_for(N) if max_entries is None else max_entries

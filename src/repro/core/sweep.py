@@ -40,8 +40,9 @@ Engine mechanics (unchanged by the declarative frontend):
   * named axes are crossed into a flat (P, K) point list on the host;
   * the un-jitted evaluation body is ``vmap``-ped over points within a
     chunk, and ``lax.map`` iterates the chunks — so peak memory is bounded
-    by ``chunk_size`` times the per-point T x N x N x J table footprint while
-    the whole grid remains ONE jit compilation and ONE dispatch;
+    by ``chunk_size`` times the per-point footprint (for scheme sweeps the
+    streaming T x N x E table build; see ``scheme_point_bytes``) while the
+    whole grid remains ONE jit compilation and ONE dispatch;
   * results come back as grid-shaped arrays (leading dims = axis lengths,
     in the order the ``axes`` mapping lists them);
   * with ``mesh`` (1-D, e.g. from ``repro.launch.mesh.make_sweep_mesh``)
@@ -79,7 +80,7 @@ from .api import (
 from .grid import ArbitrationConfig
 from .matching import _HALL_MAX_N
 from .sampling import UnitSamples
-from .search_table import max_entries_for
+from .search_table import max_entries_for, merge_plan
 from .variations import Variations, axis_names, axis_spec, _maybe_validate
 
 #: Per-chunk device memory budget for auto chunk sizing [bytes].
@@ -144,7 +145,10 @@ class SweepRequest:
             "min_tr" (policy only; minimum mean TR for complete success).
     fixed:  scalar overrides applied at every point (a mapping or a
             ``Variations``; traced, so changing values never recompiles).
-    chunk_size: points per vmap chunk (None = auto from the memory budget).
+    chunk_size: points per vmap chunk (None = auto from the memory budget;
+            since the streaming top-E table build the per-point scheme
+            footprint is ~6x smaller, so scheme sweeps auto-size
+            correspondingly larger chunks — fewer ``lax.map`` iterations).
     backend: kernel backend threaded to ``repro.kernels.ops`` (None = jnp
             core path).
     tr_fast: policy-eval sweeps with a ``tr_mean`` axis collapse that axis
@@ -241,19 +245,28 @@ def scheme_point_bytes(cfg: ArbitrationConfig, n_trials: int) -> int:
     the quantity ``_auto_chunk`` budgets against.  Exposed for capacity
     audits (e.g. the WDM32 table-footprint test).
 
-    Dominant: the (T, N, N, J) candidate-peak tensor of the table build
-    plus the (T, N, 3N) sorted tables; ~3 live f32 copies through sort.
+    Dominant: the persistent (T, N, E) search tables (f32 delta + i32 wl)
+    plus the bounded transient of the streaming top-E merge — the tiling
+    and its scratch come from the same ``merge_plan`` the builder uses, so
+    the accounting cannot drift from the implementation.  The dense
+    (T, N, N*J) candidate tensor of the retired full-sort build no longer
+    exists: at N=32, J=17 this is ~6x smaller, which is what lets
+    ``chunk_size=None`` auto-size scheme chunks ~6x larger (fewer
+    ``lax.map`` iterations per grid) and a paper-scale (100x100-trial)
+    WDM32 scheme point fit the 256 MB chunk budget.
     """
-    n = cfg.grid.n_ch
-    j = 2 * cfg.max_fsr_alias + 1
-    return n_trials * n * (n * j + max_entries_for(n)) * 4 * 3
+    return merge_plan(
+        n_trials, cfg.grid.n_ch, max_alias=cfg.max_fsr_alias
+    ).total_bytes
 
 
 def policy_point_bytes(cfg: ArbitrationConfig, n_trials: int) -> int:
     """Per-grid-point working-set estimate [bytes] for a *policy* sweep.
 
-    Dominant: the (T, 2^N, N) Hall subset table (small N) or the (T, N, N)
-    residual tensor; a few live f32 copies either way.
+    Policy sweeps never build search tables (the streaming-merge budget is
+    scheme-path only); the dominant term is the (T, 2^N, N) Hall subset
+    table (small N) or the (T, N, N) residual tensor of the bottleneck
+    sweep — a few live f32 copies either way.
     """
     n = cfg.grid.n_ch
     width = max(n, (1 << n) if n <= _HALL_MAX_N else 0)

@@ -106,15 +106,25 @@ def bottleneck_threshold(weights, *, backend="auto"):
     return thr[:t]
 
 
-def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend="auto"):
+def build_tables(laser, ring, fsr, tr, *, visible=None, max_alias=8,
+                 max_entries=None, backend="auto"):
     """(T, N) inputs (tr = actual per-ring TR) -> core-layout tables.
 
+    visible: optional core-layout bool mask of lines on the bus — (T, N_wl)
+    or (T, N_ring, N_wl) — for the masked re-search path (None = all lines).
     Returns (delta (T, N, E), wl (T, N, E), n_valid (T, N)).
     """
     backend = _resolve(backend)
     cols = [_to_cols(a) for a in (laser, ring, fsr, tr)]
+    # Core (T, ...) -> kernel trials-last layouts, last-axes moves only.
+    vis_cols = None
+    if visible is not None:
+        vis_cols = (jnp.swapaxes(visible, -1, -2) if visible.ndim == 2
+                    else jnp.moveaxis(visible, -3, -1))
     if backend == "jnp":
-        d, w, nv = ref.table_ref(*cols, max_alias=max_alias, max_entries=max_entries)
+        d, w, nv = ref.table_ref(
+            *cols, visible=vis_cols, max_alias=max_alias, max_entries=max_entries
+        )
         to_core = lambda a: jnp.moveaxis(a, -1, -3)  # (N, E, T) -> (T, N, E)
         return to_core(d), to_core(w), jnp.swapaxes(nv, -1, -2)
     t = cols[0].shape[1]
@@ -123,8 +133,16 @@ def build_tables(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, backend
     if tp != t:
         pad_fix = jnp.zeros((cols[2].shape[0], tp), jnp.float32).at[:, t:].set(1.0)
         cols[2] = cols[2] + pad_fix
+    if vis_cols is not None:
+        if vis_cols.ndim == 2:  # (N_wl, T) -> per-ring (N_ring, N_wl, T)
+            vis_cols = jnp.broadcast_to(
+                vis_cols[None], (cols[0].shape[0],) + vis_cols.shape
+            )
+        # Padded trials see an all-zero mask: empty tables, sliced off below.
+        vis_cols = _pad_cols(vis_cols.astype(jnp.int32), tp)
     d, w, nv = table_pallas(
         *cols,
+        vis_cols,
         max_alias=max_alias,
         max_entries=max_entries,
         interpret=(backend == "interpret"),

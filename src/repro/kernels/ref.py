@@ -41,14 +41,20 @@ def bottleneck_ref(w):
     return bottleneck_matching_threshold(jnp.moveaxis(w, -1, -3))
 
 
-def table_ref(laser, ring, fsr, tr, *, max_alias=8, max_entries=None):
+def table_ref(laser, ring, fsr, tr, *, visible=None, max_alias=8, max_entries=None):
     """Oracle for kernels.table_build: (N, T) inputs, actual TR in ``tr``.
 
+    visible: optional kernel-layout bool mask — (N_wl, T) or
+    (N_ring, N_wl, T) — for the masked re-search path.
     Returns (delta (N, E, T), wl (N, E, T), n_valid (N, T)).
     """
     # build_search_tables consumes tr_mean * tr_unit; pass unit=tr, mean=1.
     sys = _sys_from_cols(laser, ring, fsr, tr)
-    tables = build_search_tables(sys, 1.0, max_alias=max_alias, max_entries=max_entries)
+    if visible is not None:
+        visible = jnp.moveaxis(visible != 0, -1, 0)  # trials back to axis 0
+    tables = build_search_tables(
+        sys, 1.0, visible=visible, max_alias=max_alias, max_entries=max_entries
+    )
     return (
         jnp.transpose(tables.delta, (1, 2, 0)),
         jnp.transpose(tables.wl, (1, 2, 0)),

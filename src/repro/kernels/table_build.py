@@ -2,16 +2,29 @@
 
 For every (trial, ring) the wavelength sweep yields up to K = N*(2J+1)
 candidate peaks  delta = laser_k - ring_i - j*FSR_i  with 0 <= delta <= TR_i.
-The kernel masks invalid candidates to a big sentinel and bitonic-sorts
-(key = delta, payload = line id) on the sublane axis, emitting the first E
-entries — identical semantics to ``repro.core.search_table``.
+The kernel streams the candidate axis in FSR-alias groups: each group
+contributes N*G candidates which are merged into a persistent sorted
+top-E buffer with one bitonic sort of M = pow2(E + N*G) rows — the same
+streaming top-E merge as ``repro.core.search_table.build_search_tables``.
+The group size G is the largest that keeps M at or under ``_VMEM_ROWS``
+(256), so VMEM per ring is bounded by 256 rows instead of the dense
+K_pad = pow2(N*J) (1024 rows at N=32, J=17: a 4x working-set cut); when
+the whole candidate set fits the bound (e.g. N <= 16 at the test alias
+counts) one group covers every alias and the merge degenerates to the
+retired single-sort kernel — same stage count, no interpret-mode cost.
 
-Layout: trials on lanes.  Per ring the candidate tile is (K_pad, TB) f32 —
-for N=16, J=4, TB=128 that is 256x128x4 = 128 KiB key + 128 KiB payload in
-VMEM, processed ring-at-a-time inside the kernel to bound the working set.
-The bitonic network is static (log^2 K stages); each compare-exchange is a
-reshape into (blocks, 2, stride, TB) so partners are adjacent — no gathers,
-no captured constants, no data-dependent control flow.
+Sort keys are (delta, flat candidate index = line*J + alias) compared
+lexicographically, so the (unstable) bitonic network still reproduces the
+dense stable-argsort tie order exactly — merge order cannot perturb the
+emitted (delta, wl) entries.
+
+Layout: trials on lanes.  Per merge step the tile is (M, TB) f32 key +
+(M, TB) i32 index — at the 256-row bound and TB=128 that is 256 KiB in
+VMEM, processed ring-at-a-time inside the kernel.  The bitonic network is
+static (log^2 M stages); each compare-exchange is a reshape into
+(blocks, 2, stride, TB) so partners are adjacent — no gathers, no captured
+constants, no data-dependent control flow.  An optional ``vis`` input
+((N_ring, N_wl, T) 0/1 mask) supports the visible-masked re-search path.
 """
 from __future__ import annotations
 
@@ -24,10 +37,15 @@ from jax.experimental import pallas as pl
 
 TRIAL_BLOCK = 128
 BIG = 3.0e38  # python literal: Pallas kernels must not capture array consts
+_VMEM_ROWS = 256  # per-merge sort-tile row bound (key + index pair in VMEM)
 
 
-def _bitonic_sort(key, payload):
-    """Ascending bitonic sort along axis 0 (static power-of-two length)."""
+def _bitonic_sort(key, idx):
+    """Ascending bitonic sort along axis 0 by (key, idx) lexicographically.
+
+    The compound key makes the order total on distinct candidates, so the
+    non-stable network still matches the core builder's stable argsort.
+    """
     k_len, tb = key.shape
     size = 2
     while size <= k_len:
@@ -35,75 +53,111 @@ def _bitonic_sort(key, payload):
         while stride >= 1:
             blocks = k_len // (2 * stride)
             kr = key.reshape(blocks, 2, stride, tb)
-            pr = payload.reshape(blocks, 2, stride, tb)
+            ir = idx.reshape(blocks, 2, stride, tb)
             a_k, b_k = kr[:, 0], kr[:, 1]
-            a_p, b_p = pr[:, 0], pr[:, 1]
+            a_i, b_i = ir[:, 0], ir[:, 1]
             # Ascending iff bit `size` of the element index is 0; within one
             # 2*stride block that bit is constant = f(block index).
             blk = jax.lax.broadcasted_iota(jnp.int32, (blocks, stride, tb), 0)
             asc = (blk * (2 * stride)) & size == 0
-            swap = jnp.where(asc, a_k > b_k, a_k < b_k)
+            gt = (a_k > b_k) | ((a_k == b_k) & (a_i > b_i))
+            lt = (a_k < b_k) | ((a_k == b_k) & (a_i < b_i))
+            swap = jnp.where(asc, gt, lt)
             new_a_k = jnp.where(swap, b_k, a_k)
             new_b_k = jnp.where(swap, a_k, b_k)
-            new_a_p = jnp.where(swap, b_p, a_p)
-            new_b_p = jnp.where(swap, a_p, b_p)
+            new_a_i = jnp.where(swap, b_i, a_i)
+            new_b_i = jnp.where(swap, a_i, b_i)
             key = jnp.stack([new_a_k, new_b_k], axis=1).reshape(k_len, tb)
-            payload = jnp.stack([new_a_p, new_b_p], axis=1).reshape(k_len, tb)
+            idx = jnp.stack([new_a_i, new_b_i], axis=1).reshape(k_len, tb)
             stride //= 2
         size *= 2
-    return key, payload
+    return key, idx
 
 
-def _table_kernel(
-    laser_ref, ring_ref, fsr_ref, tr_ref, delta_ref, wl_ref, nv_ref, *, max_alias, k_pad
-):
+def _table_kernel(*refs, max_alias, m_pad, alias_group, has_vis):
+    if has_vis:
+        laser_ref, ring_ref, fsr_ref, tr_ref, vis_ref = refs[:5]
+        delta_ref, wl_ref, nv_ref = refs[5:]
+    else:
+        laser_ref, ring_ref, fsr_ref, tr_ref = refs[:4]
+        vis_ref = None
+        delta_ref, wl_ref, nv_ref = refs[4:]
     n, tb = laser_ref.shape
     laser = laser_ref[...]
     j_vals = np.arange(-max_alias, max_alias + 1)
     n_j = len(j_vals)
+    e = delta_ref.shape[1]
+    groups = [j_vals[g : g + alias_group] for g in range(0, n_j, alias_group)]
+    idx_big = n * n_j  # > every real flat index; pads sort last among BIG ties
 
-    for i in range(n):  # static unroll over rings; working set stays (K, TB)
+    for i in range(n):  # static unroll over rings; working set stays (M, TB)
         ring_i = ring_ref[i, :][None, :]
         fsr_i = fsr_ref[i, :][None, :]
         tr_i = tr_ref[i, :][None, :]
-        keys, pays = [], []
-        for j in j_vals:  # candidate deltas for each FSR alias
-            d = laser - ring_i - float(j) * fsr_i               # (N, TB)
-            ok = (d >= 0.0) & (d <= tr_i)
-            keys.append(jnp.where(ok, d, BIG))
-            pays.append(jax.lax.broadcasted_iota(jnp.int32, (n, tb), 0))
-        key = jnp.concatenate(keys, axis=0)                      # (N*J, TB)
-        pay = jnp.concatenate(pays, axis=0)
-        pad = k_pad - n * n_j
-        if pad:
-            key = jnp.concatenate([key, jnp.full((pad, tb), BIG, jnp.float32)], axis=0)
-            pay = jnp.concatenate([pay, jnp.full((pad, tb), -1, jnp.int32)], axis=0)
-        key, pay = _bitonic_sort(key, pay)
+        vis_i = (vis_ref[i, :, :] != 0) if has_vis else None
+        key = jnp.full((e, tb), BIG, jnp.float32)
+        idx = jnp.full((e, tb), idx_big, jnp.int32)
+        for g, group in enumerate(groups):  # streaming merge over alias groups
+            parts_k, parts_i = [key], [idx]
+            for jj, j in enumerate(group):
+                d = laser - ring_i - float(j) * fsr_i           # (N, TB)
+                ok = (d >= 0.0) & (d <= tr_i)
+                if has_vis:
+                    ok = ok & vis_i
+                parts_k.append(jnp.where(ok, d, BIG))
+                parts_i.append(
+                    jax.lax.broadcasted_iota(jnp.int32, (n, tb), 0) * n_j
+                    + (g * alias_group + jj)
+                )
+            pad = m_pad - e - n * len(group)
+            if pad:
+                parts_k.append(jnp.full((pad, tb), BIG, jnp.float32))
+                parts_i.append(jnp.full((pad, tb), idx_big, jnp.int32))
+            key, idx = _bitonic_sort(
+                jnp.concatenate(parts_k, axis=0), jnp.concatenate(parts_i, axis=0)
+            )
+            key, idx = key[:e], idx[:e]
 
-        e = delta_ref.shape[1]
-        valid = key[:e] < BIG
-        delta_ref[i, :, :] = jnp.where(valid, key[:e], float("inf"))
-        wl_ref[i, :, :] = jnp.where(valid, pay[:e], -1)
+        valid = key < BIG
+        delta_ref[i, :, :] = jnp.where(valid, key, float("inf"))
+        wl_ref[i, :, :] = jnp.where(valid, idx // n_j, -1)
         nv_ref[i, :] = jnp.sum(valid.astype(jnp.int32), axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("max_alias", "max_entries", "interpret"))
-def table_pallas(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, interpret=False):
-    """laser/ring/fsr/tr: (N, T) f32 (tr = actual per-ring tuning ranges).
+def table_pallas(laser, ring, fsr, tr, vis=None, *, max_alias=8, max_entries=None,
+                 interpret=False):
+    """laser/ring/fsr/tr: (N, T) f32 (tr = actual per-ring tuning ranges);
+    vis: optional (N_ring, N_wl, T) 0/1 visibility mask.
 
     Returns (delta (N, E, T) f32, wl (N, E, T) int32, n_valid (N, T) int32).
     """
     n, t = laser.shape
     assert t % TRIAL_BLOCK == 0, t
+    n_j = 2 * max_alias + 1
+    k = n * n_j
     e = 3 * n if max_entries is None else max_entries
-    k = n * (2 * max_alias + 1)
-    k_pad = 1 << int(np.ceil(np.log2(k)))
+    e = min(e, k)  # like the dense argsort, at most K entries exist
+    # Alias group: as many aliases per merge as fit the VMEM row bound
+    # (one group when K fits — the merge then degenerates to one sort).
+    rows = max(_VMEM_ROWS, 1 << int(np.ceil(np.log2(e + n))))
+    alias_group = min(n_j, max(1, (rows - e) // n))
+    m_pad = 1 << int(np.ceil(np.log2(e + n * alias_group)))
     grid = (t // TRIAL_BLOCK,)
     in_spec = pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b))
+    has_vis = vis is not None
+    in_specs = [in_spec] * 4
+    args = [laser, ring, fsr, tr]
+    if has_vis:
+        in_specs.append(pl.BlockSpec((n, n, TRIAL_BLOCK), lambda b: (0, 0, b)))
+        args.append(vis)
     delta, wl, nv = pl.pallas_call(
-        functools.partial(_table_kernel, max_alias=max_alias, k_pad=k_pad),
+        functools.partial(
+            _table_kernel, max_alias=max_alias, m_pad=m_pad,
+            alias_group=alias_group, has_vis=has_vis,
+        ),
         grid=grid,
-        in_specs=[in_spec] * 4,
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((n, e, TRIAL_BLOCK), lambda b: (0, 0, b)),
             pl.BlockSpec((n, e, TRIAL_BLOCK), lambda b: (0, 0, b)),
@@ -115,5 +169,5 @@ def table_pallas(laser, ring, fsr, tr, *, max_alias=8, max_entries=None, interpr
             jax.ShapeDtypeStruct((n, t), jnp.int32),
         ],
         interpret=interpret,
-    )(laser, ring, fsr, tr)
+    )(*args)
     return delta, wl, nv

@@ -92,3 +92,55 @@ def test_table_kernel(n_ch, tr_mean, max_alias):
     np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
     fin = np.isfinite(np.asarray(d_r))
     np.testing.assert_allclose(np.asarray(d_k)[fin], np.asarray(d_r)[fin], atol=1e-5)
+
+
+def test_table_kernel_multi_group_merge(monkeypatch):
+    """Force a multi-group alias merge at CI-affordable size: with the VMEM
+    row bound shrunk to 64, n_ch=8 / max_alias=8 splits into 4 merge steps
+    per ring (alias_group=5), exercising the cross-group top-E buffer logic
+    that the default test shapes collapse to a single sort."""
+    from repro.kernels import table_build
+
+    monkeypatch.setattr(table_build, "_VMEM_ROWS", 64)
+    table_build.table_pallas.clear_cache()  # drop single-sort compilations
+    try:
+        _, sys = _sys(n_ch=8, seed=6, n=8)  # 64 trials, padded to one block
+        tr = 9.5 * sys.tr_unit              # TR ~ FSR: multi-alias entries
+        args = (sys.laser, sys.ring, sys.fsr, tr)
+        d_k, w_k, nv_k = ops.build_tables(*args, max_alias=8, backend="interpret")
+        d_r, w_r, nv_r = ops.build_tables(*args, max_alias=8, backend="jnp")
+        np.testing.assert_array_equal(np.asarray(nv_k), np.asarray(nv_r))
+        np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+        fin = np.isfinite(np.asarray(d_r))
+        np.testing.assert_allclose(
+            np.asarray(d_k)[fin], np.asarray(d_r)[fin], atol=1e-5
+        )
+    finally:
+        table_build.table_pallas.clear_cache()
+
+
+@pytest.mark.parametrize("vis_ndim", [2, 3])
+def test_table_kernel_visible_masks(vis_ndim):
+    """Visible-masked re-search through the kernel wrappers: interpret-mode
+    streaming merge vs the jnp streaming builder, with bus-wide (2-D) and
+    per-ring (3-D) masks including fully-masked rings (n_valid == 0)."""
+    import jax
+
+    _, sys = _sys(n_ch=8, seed=5)
+    T, N = sys.laser.shape
+    shape = (T, N) if vis_ndim == 2 else (T, N, N)
+    vis = jax.random.bernoulli(jax.random.key(0), 0.5, shape)
+    if vis_ndim == 3:
+        vis = vis.at[: T // 2].set(False)
+    tr = 5.0 * sys.tr_unit
+    args = (sys.laser, sys.ring, sys.fsr, tr)
+    d_k, w_k, nv_k = ops.build_tables(
+        *args, visible=vis, max_alias=2, backend="interpret"
+    )
+    d_r, w_r, nv_r = ops.build_tables(*args, visible=vis, max_alias=2, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(nv_k), np.asarray(nv_r))
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    fin = np.isfinite(np.asarray(d_r))
+    np.testing.assert_allclose(np.asarray(d_k)[fin], np.asarray(d_r)[fin], atol=1e-5)
+    if vis_ndim == 3:
+        assert int(np.asarray(nv_r)[: T // 2].max()) == 0

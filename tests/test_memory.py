@@ -1,0 +1,51 @@
+"""Compiled-memory smoke tests (XLA ``memory_analysis`` pins).
+
+The streaming top-E table build keeps the scheme path's compiled temp
+footprint at O(T*N*E) + a bounded merge transient.  A regression back to
+the dense (T, N, N*J) candidate tensor multiplies the WDM32 bench-scale
+temps ~8x (measured: ~21 MB streaming vs ~160 MB for the dense builder
+alone), so it fails these bounds in CI long before it OOMs a paper-scale
+sweep on a user's machine.
+"""
+import jax
+import pytest
+
+from repro.configs.wdm import WDM32_G200
+from repro.core import evaluate_scheme, make_units
+from repro.core.sampling import instantiate
+from repro.core.search_table import build_search_tables, merge_plan
+from repro.core.sweep import scheme_point_bytes
+
+
+def _temp_bytes(lowered):
+    stats = lowered.compile().memory_analysis()
+    if stats is None or not hasattr(stats, "temp_size_in_bytes"):
+        pytest.skip("backend does not report compiled memory statistics")
+    return stats.temp_size_in_bytes
+
+
+def test_streaming_builder_compiled_temps_match_plan():
+    """The builder's compiled scratch stays within its own ``merge_plan``
+    accounting (tables + transient) at WDM32 bench scale."""
+    cfg = WDM32_G200
+    units = make_units(cfg, seed=0, n_laser=24, n_ring=24)
+    sys = instantiate(cfg, units)
+    T, N = sys.laser.shape
+    lowered = jax.jit(
+        lambda s: build_search_tables(s, 9.0, max_alias=cfg.max_fsr_alias)
+    ).lower(sys)
+    plan = merge_plan(T, N, max_alias=cfg.max_fsr_alias)
+    assert _temp_bytes(lowered) <= plan.total_bytes
+
+
+def test_scheme_path_compiled_temps_wdm32():
+    """End-to-end scheme evaluation (tables + record phase + SSM + scoring)
+    at WDM32 bench scale: compiled temps stay within 1.5x of the engine's
+    per-point estimate.  The dense candidate tensor alone would be ~7x over
+    this bound (measured ~160 MB vs the ~34 MB allowance)."""
+    cfg = WDM32_G200
+    units = make_units(cfg, seed=0, n_laser=24, n_ring=24)
+    trials = units.u_rlv.shape[0] * units.u_go.shape[0]
+    lowered = evaluate_scheme.lower(cfg, units, "vtrs_ssm", 9.0)
+    bound = int(1.5 * scheme_point_bytes(cfg, trials))
+    assert _temp_bytes(lowered) <= bound

@@ -1,5 +1,8 @@
 """Hypothesis property tests on system-level arbitration invariants."""
+from functools import partial
+
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -8,9 +11,9 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ArbitrationConfig, DWDMGrid, VariationModel, make_units
 from repro.core import ideal
-from repro.core.sampling import instantiate
+from repro.core.sampling import SystemBatch, instantiate
 from repro.core.reach import tuning_residual
-from repro.core.search_table import build_search_tables
+from repro.core.search_table import build_search_tables, build_search_tables_dense
 from repro.core.relation import chain_spec, relation_search
 from repro.core.ssm import single_step_matching
 from repro.core.outcomes import classify
@@ -110,6 +113,78 @@ def test_ssm_assignment_physical(seed, tr_mean, order_kind):
     locked = wl >= 0
     assert np.all(delta[locked] <= tr[locked] + 1e-5)
     assert np.all(wl[locked] < cfg.grid.n_ch)
+
+
+# --------------------------------------------- streaming table builder ---
+
+@partial(jax.jit, static_argnames=("max_alias", "has_vis"))
+def _both_builders(sys, tr_mean, vis, max_alias, has_vis):
+    # Jitted together: the engine always runs the builder under jit, and
+    # XLA's fusion (FMA formation) differs between eager and compiled —
+    # bit-identity is contracted where production runs.
+    v = vis if has_vis else None
+    return (
+        build_search_tables(sys, tr_mean, visible=v, max_alias=max_alias),
+        build_search_tables_dense(sys, tr_mean, visible=v, max_alias=max_alias),
+    )
+
+
+def _assert_tables_identical(sys, tr_mean, vis=None, max_alias=8):
+    stream, dense = _both_builders(
+        sys, tr_mean, vis if vis is not None else jnp.zeros(()),
+        max_alias, vis is not None,
+    )
+    assert stream.delta.shape == dense.delta.shape
+    np.testing.assert_array_equal(np.asarray(stream.wl), np.asarray(dense.wl))
+    np.testing.assert_array_equal(
+        np.asarray(stream.n_valid), np.asarray(dense.n_valid)
+    )
+    assert np.array_equal(
+        np.asarray(stream.delta), np.asarray(dense.delta), equal_nan=True
+    )
+
+
+@given(
+    n_ch=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**16),
+    tr_mean=st.floats(0.5, 30.0),     # up to TR >> FSR: multi-alias tables
+    max_alias=st.sampled_from([0, 1, 2, 8]),
+    vis_kind=st.sampled_from(["none", "2d", "3d", "dead_rings"]),
+)
+@settings(**SETTINGS)
+def test_streaming_tables_match_dense_oracle(n_ch, seed, tr_mean, max_alias, vis_kind):
+    """The streaming top-E builder is bit-identical to the dense full-sort
+    oracle — entries, tie order, sentinels and n_valid — on random systems,
+    with 2-D/3-D visibility masks and with fully-masked rings (n_valid=0)."""
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=n_ch))
+    sys = instantiate(cfg, make_units(cfg, seed, 4, 4))
+    T, N = sys.laser.shape
+    vis = None
+    if vis_kind == "2d":
+        vis = jax.random.bernoulli(jax.random.key(seed), 0.6, (T, N))
+    elif vis_kind == "3d":
+        vis = jax.random.bernoulli(jax.random.key(seed), 0.5, (T, N, N))
+    elif vis_kind == "dead_rings":
+        vis = jax.random.bernoulli(jax.random.key(seed), 0.5, (T, N, N))
+        vis = vis.at[: T // 2].set(False)  # whole rings with n_valid == 0
+    _assert_tables_identical(sys, tr_mean, vis, max_alias)
+
+
+@given(seed=st.integers(0, 2**16), max_alias=st.sampled_from([1, 3]))
+@settings(**SETTINGS)
+def test_streaming_tables_match_dense_oracle_on_ties(seed, max_alias):
+    """Grid-quantized systems make many candidate deltas *exactly* equal
+    across (line, alias) pairs; the merge must reproduce the dense stable
+    argsort's tie order (flat candidate index) bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    T, N = 12, 8
+    sys = SystemBatch(
+        laser=jnp.asarray(rng.integers(0, 8, (T, N)).astype(np.float32) * 0.25),
+        ring=jnp.asarray(rng.integers(-4, 4, (T, N)).astype(np.float32) * 0.25),
+        fsr=jnp.asarray(rng.integers(1, 4, (T, N)).astype(np.float32) * 0.25),
+        tr_unit=jnp.ones((T, N), jnp.float32),
+    )
+    _assert_tables_identical(sys, 3.0, None, max_alias)
 
 
 @given(seed=st.integers(0, 2**16), tr_mean=st.floats(2.0, 9.0))

@@ -228,6 +228,48 @@ print("MESH_INVARIANT_OK")
     assert "MESH_INVARIANT_OK" in out.stdout
 
 
+# ---------------------------------------------------- streaming tables ---
+
+def test_streaming_tables_multi_block_merge_matches_dense():
+    """Non-degenerate streaming: at this shape ``merge_plan`` splits the
+    build into 32 fori_loop steps (line_block=8, ring_block=1), so the
+    cross-block stable-merge/tie-order logic itself runs — not the
+    single-sort degenerate case that small test shapes collapse to.
+    (Lives here rather than test_property.py so it runs even where
+    hypothesis is unavailable.)"""
+    from functools import partial
+
+    from repro.core import DWDMGrid
+    from repro.core.search_table import (
+        build_search_tables,
+        build_search_tables_dense,
+        merge_plan,
+    )
+
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=16))
+    sys = instantiate(cfg, make_units(cfg, 13, 32, 32))  # T = 1024
+    T, N = sys.laser.shape
+    plan = merge_plan(T, N, max_alias=8)
+    steps = (N // plan.line_block) * (N // plan.ring_block)
+    assert steps > 1, plan  # the point of this test: a real multi-step merge
+
+    @partial(jax.jit, static_argnames=("has_vis",))
+    def both(s, vis, has_vis):
+        v = vis if has_vis else None
+        return (build_search_tables(s, 9.5, visible=v, max_alias=8),
+                build_search_tables_dense(s, 9.5, visible=v, max_alias=8))
+
+    for vis in (None, jax.random.bernoulli(jax.random.key(3), 0.6, (T, N, N))):
+        stream, dense = both(
+            sys, vis if vis is not None else jnp.zeros(()), vis is not None
+        )
+        assert np.array_equal(np.asarray(stream.wl), np.asarray(dense.wl))
+        assert np.array_equal(np.asarray(stream.n_valid), np.asarray(dense.n_valid))
+        assert np.array_equal(
+            np.asarray(stream.delta), np.asarray(dense.delta), equal_nan=True
+        )
+
+
 # ------------------------------------------------------- relation search ---
 
 @pytest.mark.parametrize("kind", ["natural", "permuted"])
