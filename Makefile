@@ -19,7 +19,10 @@ bench-kernel:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel
 
 # Regenerate the BENCH trajectory file and gate it against the committed
-# baseline (>20% per-figure / per-record slowdowns fail).
+# baseline (>20% per-figure / per-record slowdowns fail).  On noisy shared
+# machines add `--runs 3` to benchmarks.run (median wall/engine times) or
+# export BENCH_GATE_THRESHOLD to widen the gate — identical code drifts
+# >20% between single runs on a loaded 2-core container.
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run --json BENCH_new.json
 

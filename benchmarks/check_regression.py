@@ -18,15 +18,42 @@ Comparison happens at two granularities, both against the same threshold
 Figures/records present in only one file are reported but never fail the
 gate (benchmarks come and go); a ``full`` flag mismatch is a hard error
 (exit 2) since fast and paper-scale runs are not comparable.
+
+Noisy-container hardening: generate candidates with
+``python -m benchmarks.run --runs 3 --json ...`` so both sides of the diff
+carry *median* timings, and/or widen the gate via the
+``BENCH_GATE_THRESHOLD`` environment variable (the ``--threshold`` default)
+— PR 3 measured 23/51 records of identical code drifting >20% between
+single runs on a 2-core container, so a single-run 20% gate is only
+meaningful on a quiet machine.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import Dict, List, Tuple
 
-#: Default maximum allowed slowdown (new/old - 1) before the gate fails.
+#: Default maximum allowed slowdown (new/old - 1) before the gate fails;
+#: overridable via the BENCH_GATE_THRESHOLD environment variable.
 DEFAULT_THRESHOLD = 0.20
+
+
+def _default_threshold() -> float:
+    raw = os.environ.get("BENCH_GATE_THRESHOLD")
+    if raw is None:
+        return DEFAULT_THRESHOLD
+    try:
+        value = float(raw)
+    except ValueError:
+        raise SystemExit(
+            f"BENCH_GATE_THRESHOLD must be a float, got {raw!r}"
+        ) from None
+    if value <= 0:
+        raise SystemExit(
+            f"BENCH_GATE_THRESHOLD must be positive, got {raw!r}"
+        )
+    return value
 
 
 def _figure_walls(payload: dict) -> Dict[str, float]:
@@ -108,6 +135,15 @@ def self_test() -> int:
     tight, _ = compare(payload(f=(1000.0, None)), payload(f=(1100.0, None)),
                        threshold=0.05)
     checks.append(("threshold configurable", len(tight) == 1))
+    prior = os.environ.get("BENCH_GATE_THRESHOLD")
+    try:
+        os.environ["BENCH_GATE_THRESHOLD"] = "0.5"
+        checks.append(("env threshold respected", _default_threshold() == 0.5))
+    finally:
+        if prior is None:
+            del os.environ["BENCH_GATE_THRESHOLD"]
+        else:
+            os.environ["BENCH_GATE_THRESHOLD"] = prior
 
     failed = [name for name, passed in checks if not passed]
     for name, passed in checks:
@@ -125,13 +161,17 @@ def main(argv: List[str] | None = None) -> int:
     )
     ap.add_argument("old", nargs="?", help="baseline BENCH_*.json")
     ap.add_argument("new", nargs="?", help="candidate BENCH_*.json")
-    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
-                    help="max allowed fractional slowdown (default 0.20)")
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="max allowed fractional slowdown (default 0.20, or "
+                         "the BENCH_GATE_THRESHOLD environment variable; an "
+                         "explicit flag beats a broken environment)")
     ap.add_argument("--self-test", action="store_true",
                     help="run the gate's built-in contract checks and exit")
     args = ap.parse_args(argv)
     if args.self_test:
         return self_test()
+    if args.threshold is None:
+        args.threshold = _default_threshold()
     if args.old is None or args.new is None:
         ap.error("old and new BENCH files are required (or use --self-test)")
 

@@ -1,11 +1,19 @@
 """Benchmark driver: one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (derived = paper-comparable values);
 ``--json out.json`` additionally writes the per-figure wall-times and derived
-metrics machine-readably (the seed for BENCH_*.json trajectory tracking)."""
+metrics machine-readably (the seed for BENCH_*.json trajectory tracking).
+
+``--runs N`` repeats every module N times and records the *median* wall-time
+and per-record ``engine_ms`` — the derived grids are deterministic, so only
+the timings vary.  On noisy shared machines (PR 3 measured 23/51 records of
+identical code drifting >20% between single runs on a 2-core container)
+median-of-3 is what makes the ``check_regression`` wall-time gate usable.
+"""
 from __future__ import annotations
 
 import argparse
 import json
+import statistics
 import time
 
 from .common import write_json
@@ -18,7 +26,12 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="substring filter")
     ap.add_argument("--json", dest="json_out", default=None, metavar="OUT",
                     help="also write machine-readable results to OUT")
+    ap.add_argument("--runs", type=int, default=1, metavar="N",
+                    help="repeat each module N times; record median wall "
+                         "and engine_ms timings (noise-robust BENCH files)")
     args = ap.parse_args()
+    if args.runs < 1:
+        ap.error("--runs must be >= 1")
 
     from . import (
         beyond_lta,
@@ -32,6 +45,7 @@ def main() -> None:
         fig16_high_variation,
         fig17_retry_budget,
         fig18_wdm32_cafp,
+        fig19_lta_protocol,
         kernel_bench,
         roofline_report,
     )
@@ -47,6 +61,7 @@ def main() -> None:
         fig16_high_variation,
         fig17_retry_budget,
         fig18_wdm32_cafp,
+        fig19_lta_protocol,
         kernel_bench,
         roofline_report,
         beyond_lta,
@@ -57,9 +72,23 @@ def main() -> None:
         mod_name = mod.__name__.rsplit(".", 1)[-1]
         if args.only and args.only not in mod_name:
             continue
-        t0 = time.time()
-        rows = mod.run(full=args.full)
-        wall_ms = (time.time() - t0) * 1e3
+        walls, engine_runs = [], []
+        for _ in range(args.runs):
+            t0 = time.time()
+            rows = mod.run(full=args.full)
+            walls.append((time.time() - t0) * 1e3)
+            engine_runs.append(
+                {name: d["engine_ms"] for name, d in rows if "engine_ms" in d}
+            )
+        wall_ms = statistics.median(walls)
+        if args.runs > 1:
+            # Grids are deterministic across runs; only timings vary.  Keep
+            # the last run's rows and replace engine_ms with the median.
+            for name, derived in rows:
+                if "engine_ms" in derived:
+                    derived["engine_ms"] = round(statistics.median(
+                        er[name] for er in engine_runs
+                    ), 1)
         us = wall_ms * 1e3 / max(len(rows), 1)
         for name, derived in rows:
             print(f"{name},{us:.0f},{json.dumps(derived, default=float)}")

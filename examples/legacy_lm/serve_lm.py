@@ -1,8 +1,10 @@
-"""Batched serving example: prefill a batch of prompts, then decode with the
+"""LEGACY SEED SCAFFOLD (see README.md here) — unrelated to the paper.
+
+Batched serving example: prefill a batch of prompts, then decode with the
 cached state — the same prefill/decode units the dry-run lowers for the
 ``prefill_*`` / ``decode_*`` shape cells.
 
-    PYTHONPATH=src python examples/serve_lm.py --batch 4 --new-tokens 24
+    PYTHONPATH=src python examples/legacy_lm/serve_lm.py --batch 4 --new-tokens 24
 """
 import argparse
 import time

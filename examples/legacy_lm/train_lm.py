@@ -1,10 +1,12 @@
-"""End-to-end training driver: ~100M-parameter LM on the synthetic Markov
+"""LEGACY SEED SCAFFOLD (see README.md here) — unrelated to the paper.
+
+End-to-end training driver: ~100M-parameter LM on the synthetic Markov
 corpus with the full production stack — sharded params, microbatched train
 step, AdamW, checkpointing/restart, optical-fabric bring-up, straggler
 tracking.
 
-    PYTHONPATH=src python examples/train_lm.py --steps 300
-    PYTHONPATH=src python examples/train_lm.py --preset small --steps 80
+    PYTHONPATH=src python examples/legacy_lm/train_lm.py --steps 300
+    PYTHONPATH=src python examples/legacy_lm/train_lm.py --preset small --steps 80
 """
 import argparse
 import dataclasses

@@ -53,7 +53,30 @@ r = evaluate_scheme(
 )
 print(f"\npoint eval @ TR=5nm, 0.3nm thermal drift: CAFP = {float(r.cafp):.4f}")
 
+# Protocol-engine schemes (repro.core.protocol — multi-hop augmenting LtA,
+# the paper's §V-E future work) are ordinary registry entries, so a whole
+# protocol-family comparison is just more SweepRequests.  protocol_lta_h1
+# caps displacement chains at one hop; protocol_lta runs full multi-hop
+# augmenting and tracks the *ideal* perfect-matching LtA arbiter (CAFP ~ 0).
+# (Smaller Monte-Carlo batch: the round-driven simulation is heavier than
+# the one-shot schemes, and the contrast shows at 256 trials already.)
+units_p = make_units(cfg, seed=0, n_laser=16, n_ring=16)
+protocol = {
+    scheme: sweep(SweepRequest(cfg=cfg, units=units_p, scheme=scheme,
+                               axes={"tr_mean": trs}, chunk_size=1))
+    for scheme in ("seq_retry", "protocol_lta_h1", "protocol_lta")
+}
+print(f"\n{'TR[nm]':>7s} {'CAFP retry':>11s} {'CAFP hop-1':>11s} {'CAFP multi':>11s}  (vs ideal LtA)")
+for i, tr in enumerate(trs):
+    print(
+        f"{tr:7.2f} {float(protocol['seq_retry'].data.cafp[i]):11.4f} "
+        f"{float(protocol['protocol_lta_h1'].data.cafp[i]):11.4f} "
+        f"{float(protocol['protocol_lta'].data.cafp[i]):11.4f}"
+    )
+
 print(
     "\nVT-RS/SSM tracks the ideal wavelength-aware LtC arbiter (CAFP ~ 0)\n"
-    "while sequential Lock-to-Nearest fails on most trials — paper Fig. 14."
+    "while sequential Lock-to-Nearest fails on most trials — paper Fig. 14.\n"
+    "Multi-hop augmenting closes the oblivious-LtA gap the same way\n"
+    "(beyond-paper Fig. 19; benchmarks/fig19_lta_protocol.py)."
 )

@@ -104,7 +104,8 @@ def section_repro():
         "component against an independent per-trial Python oracle."
     )
     out.append(
-        "\n**End-to-end driver**: `examples/train_lm.py` trains a 110M-param "
+        "\n**End-to-end driver**: `examples/legacy_lm/train_lm.py` (legacy "
+        "seed scaffold) trains a 110M-param "
         "GQA model with the full stack (sharded params, checkpointing/restart, "
         "optical-fabric bring-up + injected link failures with LtC "
         "re-arbitration); see experiments/train_lm_log.txt."

@@ -33,6 +33,7 @@ from .api import (  # noqa: F401
     SchemeSpec,
     evaluate_policy,
     evaluate_scheme,
+    make_protocol,
     make_seq_retry,
     make_units,
     oblivious_arbitrate,
@@ -42,6 +43,13 @@ from .api import (  # noqa: F401
     registered_schemes,
     scheme_spec,
     shmoo,
+)
+from .protocol import (  # noqa: F401
+    ProtocolState,
+    ProtocolStats,
+    masked_first_entry,
+    run_protocol,
+    run_protocol_trace,
 )
 from .sweep import (  # noqa: F401
     SweepRequest,

@@ -48,6 +48,7 @@ from .reach import reach_matrix, scaled_residual
 from .relation import ChainSpec, chain_spec, relation_search
 from .sampling import SystemBatch, UnitSamples, draw_unit_samples, instantiate
 from .lta_retry import sequential_retry
+from .protocol import run_protocol
 from .search_table import SearchTables, build_search_tables
 from .sequential import sequential_tuning
 from .ssm import Assignment, single_step_matching
@@ -190,6 +191,51 @@ register_scheme_family(
         "phys": {"n_rounds": None, "constrained_first": False},
     },
     policy="lta",
+)
+
+
+def make_protocol(
+    depth: int | None = None,
+    n_rounds: int | None = None,
+    order: str = "constrained",
+    backend: str | None = None,
+) -> Arbiter:
+    """Factory for protocol-engine arbiters (``repro.core.protocol``).
+
+    ``depth`` bounds the displacement chains of the augment phase (None = N,
+    full multi-hop; 0 = probe/release only), ``n_rounds`` the static round
+    budget, ``order`` the probe-phase controller order.  All static — bake
+    them here and register the result under its own jit-static name.
+    """
+
+    def arbiter(cfg, tables, spec):
+        return run_protocol(
+            tables, spec, order=order, depth=depth, n_rounds=n_rounds,
+            backend=backend,
+        )
+
+    return arbiter
+
+
+# Protocol-engine schemes (the multi-hop augmenting LtA that closes
+# seq_retry's residual mid-TR CAFP, plus its chain-depth family for the
+# probe-budget trade-off and the LtD-conditioned chain-order variant) —
+# benchmarked in benchmarks/fig19_lta_protocol.py.
+register_scheme("protocol_lta", make_protocol(), policy="lta")
+register_scheme_family(
+    "protocol_lta",
+    make_protocol,
+    {
+        "h1": {"depth": 1},
+        "h2": {"depth": 2},
+        "h4": {"depth": 4},
+    },
+    policy="lta",
+)
+register_scheme(
+    "protocol_ltd",
+    make_protocol(depth=0, n_rounds=1, order="chain"),
+    policy="ltd",
 )
 
 

@@ -1,0 +1,488 @@
+"""Oblivious arbitration protocol engine — round-driven distributed
+wavelength arbitration (beyond-paper; the §V-E future work the paper defers).
+
+The paper's schemes are *one-shot*: a record phase plus a single assignment
+step.  ``benchmarks/beyond_lta`` shows why that is not enough for LtA —
+depth-1 conflict retry (``seq_retry``) leaves residual mid-TR CAFP that only
+multi-hop augmenting can close.  This module contributes the missing layer: a
+batched, jit-compatible simulator of a *protocol* — many rounds of
+probe / release / augment messages between per-ring controllers — on top of
+which multi-hop augmenting Lock-to-Any (and an LtD-conditioned variant) are
+ordinary registered schemes.
+
+Observables (wavelength-oblivious, as in §V-A)
+----------------------------------------------
+A controller only ever sees its own search table (entry indices and tuning
+codes — never wavelength values) and *masking events*: a re-search against
+the live bus in which previously-recorded peaks are missing because another
+ring holds that line (lock-monitor power at the holder, none at the
+searcher).  Coordination — "release line, let me re-search, restore" — is a
+control-plane message exchange, the same unit-search transactions the
+paper's record phase is built from; the engine counts every such transaction
+as a *probe* so the probe/CAFP trade-off is measurable.  Capture is modeled
+globally (a held line is invisible to every other searcher): the protocol
+serializes lock movements explicitly, so the upstream/downstream precedence
+asymmetry of free-running rings is subsumed by protocol messages.
+
+Round structure (a ``lax.while_loop``; all phases vectorized over trials)
+-------------------------------------------------------------------------
+  probe    — in a fixed controller order, every starved ring re-searches the
+             masked bus red-ward of its tuner ``cursor`` and locks the first
+             visible peak.
+  augment  — every still-starved ring runs a *displacement chain* of up to
+             ``depth`` hops: scan its table for a donor line; the donor
+             either relocks red-ward of its current entry (chain closed), or
+             surrenders the line and becomes the seeker of the next hop.
+             Free lines and red-ward-relockable donors are preferred over
+             surrender, so chains close as early as possible.
+  release  — starved rings reset their tuner cursor to entry 0 (a sweep
+             restart is an explicit protocol event, not a silent blue-ward
+             drift).
+
+Termination is provable: within a round every displaced ring moves strictly
+red-ward (its cursor is monotone non-decreasing between releases), so a
+round performs at most N*E displacements; rounds are statically bounded by
+``n_rounds``.  These invariants — red-ward monotonicity, the static round
+bound, and dup-lock freedom (a searcher can only lock a *visible* line, and
+every donor hand-off is atomic) — are property-tested in
+``tests/test_protocol.py``.
+
+Complexity: a full augmenting sweep interrogates O(N) donors per seeker and
+O(N) seekers per round over O(N) rounds — the O(N^3)-probe protocol
+``benchmarks/beyond_lta`` calls for.  ``depth`` and ``n_rounds`` are static
+knobs (baked into registered scheme names via ``register_scheme_family``),
+giving the probe-budget/CAFP trade-off of ``benchmarks/fig19_lta_protocol``.
+
+Everything is shape-static and vmap-safe: the sweep engine maps
+``run_protocol`` over whole TR/sigma grids inside one jit, exactly like the
+one-shot schemes.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .relation import ChainSpec
+from .search_table import SearchTables
+from .ssm import Assignment
+
+#: research(wl (T, C, E), taken (T, L), floor (T, C)) ->
+#:   (first entry >= floor per row, found mask), each (T, C).
+ResearchFn = Callable[[jax.Array, jax.Array, jax.Array], tuple]
+
+_ORDERS = ("constrained", "physical", "chain")
+
+
+class ProtocolState(NamedTuple):
+    """Per-trial controller state between protocol phases."""
+
+    lock: jax.Array    # (T, N) held laser-line id, -1 if starved
+    entry: jax.Array   # (T, N) table entry of the held line, -1 if starved
+    cursor: jax.Array  # (T, N) red-ward tuner floor (monotone within a round)
+    probes: jax.Array  # (T,) cumulative unit-search transaction count
+
+
+class ProtocolStats(NamedTuple):
+    """Cost/outcome accounting of one ``run_protocol`` call."""
+
+    probes: jax.Array  # (T,) unit-search transactions spent
+    rounds: jax.Array  # (T,) rounds until complete (round bound if never)
+    locked: jax.Array  # (T,) rings holding a line at exit
+
+
+def _taken_lines(lock: jax.Array, n_lines: int) -> jax.Array:
+    """(T, N) locks -> (T, L) bool: line captured by some ring."""
+    onehot = jax.nn.one_hot(jnp.clip(lock, 0, n_lines - 1), n_lines, dtype=bool)
+    return jnp.any(onehot & (lock >= 0)[..., None], axis=1)
+
+
+def _taken_at(taken: jax.Array, wl: jax.Array) -> jax.Array:
+    """Gather ``taken`` (T, L) at line ids ``wl`` (T, ...); -1 ids -> False
+    (invalid ids route to the all-False pad column)."""
+    t, n_lines = taken.shape
+    pad = jnp.pad(taken, ((0, 0), (0, 1)))
+    rows = jnp.arange(t).reshape((t,) + (1,) * (wl.ndim - 1))
+    idx = jnp.where((wl < 0) | (wl >= n_lines), n_lines, wl)
+    return pad[rows, idx]
+
+
+def masked_first_entry(wl: jax.Array, taken: jax.Array, floor: jax.Array):
+    """Batched masked re-search: first visible entry at-or-after ``floor``.
+
+    wl: (T, C, E) line ids of C search tables per trial (-1 padding);
+    taken: (T, L) captured-line mask; floor: (T, C) minimum entry index.
+    Returns (first (T, C) int32 entry or -1, found (T, C) bool).
+
+    This is the protocol's unit primitive — one call re-searches a whole
+    batch of tables at once (every donor candidate of an augmenting chain in
+    one shot), which is what keeps a round O(1) jaxpr in N.  The kernel
+    mirror is ``repro.kernels.ops.masked_research`` (parity-tested).
+    """
+    e = wl.shape[-1]
+    eiota = jnp.arange(e, dtype=jnp.int32)
+    vis = (wl >= 0) & ~_taken_at(taken, wl) & (eiota >= floor[..., None])
+    found = vis.any(axis=-1)
+    first = jnp.argmax(vis, axis=-1).astype(jnp.int32)
+    return jnp.where(found, first, -1), found
+
+
+def _line_holder(lock: jax.Array, n_lines: int) -> jax.Array:
+    """(T, N) locks -> (T, L) int32: ring holding each line, -1 if free.
+
+    Safe under the engine's dup-lock-freedom invariant (each line has at
+    most one holder, so the one-hot sum is exact)."""
+    oh = jax.nn.one_hot(jnp.clip(lock, 0, n_lines - 1), n_lines, dtype=jnp.int32)
+    ring1 = jnp.arange(1, lock.shape[1] + 1, dtype=jnp.int32)[None, :, None]
+    return jnp.sum(oh * ring1 * (lock >= 0)[..., None].astype(jnp.int32), axis=1) - 1
+
+
+def _controller_order(tables: SearchTables, spec: ChainSpec, order: str):
+    """(T, N) rank -> ring: who re-searches first in the probe phase.
+
+    "constrained": fewest-peaks-first (n_valid is locally observable, so the
+    order is oblivious); "physical": bus order; "chain": the target-ordering
+    chain (the LtD-conditioned variant locks in spectral target order).
+    """
+    t, n, _ = tables.wl.shape
+    if order == "constrained":
+        return jnp.argsort(tables.n_valid, axis=1).astype(jnp.int32)
+    if order == "physical":
+        return jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (t, n))
+    if order == "chain":
+        return jnp.broadcast_to(jnp.asarray(spec.chain, jnp.int32), (t, n))
+    raise ValueError(f"unknown controller order {order!r}; valid: {_ORDERS}")
+
+
+def _probe_phase(tables: SearchTables, order: jax.Array, state: ProtocolState,
+                 research: ResearchFn) -> ProtocolState:
+    """One lock sweep: starved rings relock red-ward of their cursor."""
+    t, n, e = tables.wl.shape
+    rows = jnp.arange(t)
+
+    def body(rank, st):
+        lock, entry, cursor, probes = st
+        ring = order[:, rank]                            # (T,) per-trial ring
+        # A starved ring with an *empty* table (its sweep recorded no peak)
+        # has nothing to re-search: it never spends probes, which keeps the
+        # per-trial probe count independent of which other trials keep the
+        # shared round loop alive.
+        searching = (lock[rows, ring] < 0) & (tables.n_valid[rows, ring] > 0)
+        taken = _taken_lines(lock, n)
+        wl_row = tables.wl[rows, ring]                   # (T, E)
+        cur = cursor[rows, ring]
+        first, found = research(wl_row[:, None, :], taken, cur[:, None])
+        first, found = first[:, 0], found[:, 0]
+        do = searching & found
+        l_new = wl_row[rows, jnp.clip(first, 0, e - 1)]
+        lock = lock.at[rows, ring].set(jnp.where(do, l_new, lock[rows, ring]))
+        entry = entry.at[rows, ring].set(jnp.where(do, first, entry[rows, ring]))
+        cursor = cursor.at[rows, ring].set(jnp.where(do, first, cur))
+        probes = probes + searching.astype(jnp.int32)
+        return lock, entry, cursor, probes
+
+    out = jax.lax.fori_loop(0, n, body, tuple(state))
+    return ProtocolState(*out)
+
+
+def _augment_phase(tables: SearchTables, state: ProtocolState, depth: int,
+                   n_seekers: int, k_donors: int,
+                   research: ResearchFn) -> ProtocolState:
+    """Displacement chains for starved rings, up to ``depth`` hops each.
+
+    Hop resolution order (first match wins, all red-ward of the seeker's
+    cursor): a *free* visible line; among the first ``k_donors`` donor
+    candidates, one that can itself relock red-ward (two coordinated moves,
+    chain closed); otherwise the nearest donor surrenders its line and
+    becomes the next hop's seeker.  Every donor hand-off advances the
+    displaced ring's cursor past the surrendered entry, so hops within a
+    round are monotone red-ward and chains cannot cycle.
+
+    ``n_seekers`` chains run per phase (each picks the lowest-indexed
+    not-yet-attempted starved ring per trial); leftover starvation is
+    retried next round, so small slot counts trade rounds for per-round
+    cost, not correctness.
+    """
+    t, n, e = tables.wl.shape
+    k_don = max(1, min(k_donors, e))
+    rows = jnp.arange(t)
+    eiota = jnp.arange(e, dtype=jnp.int32)
+
+    def chain_step(_, carry):
+        lock, entry, cursor, probes, s, active = carry
+        taken = _taken_lines(lock, n)
+        holder = _line_holder(lock, n)
+        wl_s = tables.wl[rows, s]                        # (T, E)
+        floor_s = cursor[rows, s]
+
+        # 1) a free line red-ward of the seeker's cursor.
+        f_free, free_ok = research(wl_s[:, None, :], taken, floor_s[:, None])
+        f_free, free_ok = f_free[:, 0], free_ok[:, 0]
+
+        # 2) donor candidates: entry e of the seeker's table is a candidate
+        #    iff its line is held by another ring.  The first k_donors of
+        #    them are interrogated in ONE batched re-search: a donor can
+        #    close the chain iff it has a visible entry red-ward of the one
+        #    it holds.
+        cand = (wl_s >= 0) & (eiota[None, :] >= floor_s[:, None])
+        x_e = jnp.where(cand, holder[rows[:, None], jnp.clip(wl_s, 0, n - 1)], -1)
+        cand = cand & (x_e >= 0) & (x_e != s[:, None])
+        e_k = jnp.sort(jnp.where(cand, eiota[None, :], e), axis=1)[:, :k_don]
+        valid_k = e_k < e                                # (T, K)
+        e_k_safe = jnp.clip(e_k, 0, e - 1)
+        x_k = jnp.clip(x_e[rows[:, None], e_k_safe], 0, n - 1)   # (T, K)
+        wl_x = tables.wl[rows[:, None], x_k]             # (T, K, E)
+        floor_x = entry[rows[:, None], x_k] + 1          # strictly red-ward
+        alt, has_alt = research(wl_x, taken, floor_x)    # (T, K)
+        swap_ok = valid_k & has_alt
+
+        do_free = active & free_ok
+        do_swap = active & ~free_ok & swap_ok.any(axis=1)
+        do_yield = active & ~free_ok & ~swap_ok.any(axis=1) & cand.any(axis=1)
+        take = do_free | do_swap | do_yield
+
+        k_swap = jnp.argmax(swap_ok, axis=1).astype(jnp.int32)
+        k_sel = jnp.where(do_swap, k_swap, 0)            # yield: nearest donor
+        e_don = e_k_safe[rows, k_sel]
+        e_s = jnp.where(do_free, f_free, e_don)
+        e_s_safe = jnp.clip(e_s, 0, e - 1)
+        l_s = wl_s[rows, e_s_safe]
+
+        # donor of the selected entry (swap or yield case)
+        x_sel = x_k[rows, k_sel]
+        a_sel = jnp.clip(alt[rows, k_sel], 0, e - 1)
+        l_alt = tables.wl[rows, x_sel, a_sel]
+        x_entry = entry[rows, x_sel]                     # read before writes
+
+        # seeker locks its chosen line (atomic with the donor hand-off)
+        lock = lock.at[rows, s].set(jnp.where(take, l_s, lock[rows, s]))
+        entry = entry.at[rows, s].set(jnp.where(take, e_s, entry[rows, s]))
+        cursor = cursor.at[rows, s].set(jnp.where(take, e_s, cursor[rows, s]))
+        # swap: the donor relocks red-ward at its alternative entry
+        lock = lock.at[rows, x_sel].set(
+            jnp.where(do_swap, l_alt, lock[rows, x_sel]))
+        entry = entry.at[rows, x_sel].set(
+            jnp.where(do_swap, a_sel, entry[rows, x_sel]))
+        cursor = cursor.at[rows, x_sel].set(
+            jnp.where(do_swap, a_sel, cursor[rows, x_sel]))
+        # yield: the donor surrenders and becomes the next hop's seeker,
+        # cursor advanced past the surrendered entry (red-ward monotone)
+        lock = lock.at[rows, x_sel].set(
+            jnp.where(do_yield, -1, lock[rows, x_sel]))
+        entry = entry.at[rows, x_sel].set(
+            jnp.where(do_yield, -1, entry[rows, x_sel]))
+        cursor = cursor.at[rows, x_sel].set(
+            jnp.where(do_yield, x_entry + 1, cursor[rows, x_sel]))
+
+        # probe accounting: 1 re-search by the seeker, plus one
+        # release/re-search/restore transaction per donor interrogated
+        # (up to the selected one; all k_donors when the chain is stuck).
+        n_inter = jnp.sum(valid_k.astype(jnp.int32), axis=1)
+        scanned = jnp.where(
+            do_free, 0, jnp.where(do_swap, k_swap + 1, n_inter)
+        )
+        probes = probes + jnp.where(active, 1 + scanned, 0)
+
+        s = jnp.where(do_yield, x_sel, s)
+        return lock, entry, cursor, probes, s, do_yield
+
+    def seeker_slot(_, st):
+        lock, entry, cursor, probes, tried = st
+        # Empty-table rings can never lock: they launch no chains (and spend
+        # no probes), same per-trial accounting argument as the probe phase.
+        starved = (lock < 0) & ~tried & (tables.n_valid > 0)
+        any_s = starved.any(axis=1)
+        s0 = jnp.argmax(starved, axis=1).astype(jnp.int32)
+        tried = tried.at[rows, s0].set(tried[rows, s0] | any_s)
+        carry = (lock, entry, cursor, probes, s0, any_s)
+        out = jax.lax.fori_loop(0, depth, chain_step, carry)
+        return out[:4] + (tried,)
+
+    out = jax.lax.fori_loop(
+        0, min(n_seekers, n), seeker_slot,
+        tuple(state) + (jnp.zeros((t, n), bool),),
+    )
+    return ProtocolState(*out[:4])
+
+
+def _release_phase(state: ProtocolState) -> ProtocolState:
+    """Starved rings restart their tuner sweep (cursor back to entry 0)."""
+    starved = state.lock < 0
+    return state._replace(cursor=jnp.where(starved, 0, state.cursor))
+
+
+def _finalize(tables: SearchTables, state: ProtocolState) -> Assignment:
+    e = tables.max_entries
+    e_safe = jnp.clip(state.entry, 0, e - 1)
+    delta = jnp.where(
+        state.entry >= 0,
+        jnp.take_along_axis(tables.delta, e_safe[..., None], axis=-1)[..., 0],
+        jnp.inf,
+    )
+    wl = jnp.where(state.entry >= 0, state.lock, -1)
+    return Assignment(entry=state.entry, wl=wl, delta=delta)
+
+
+def _resolve_research(backend: str | None) -> ResearchFn:
+    if backend is None:
+        return masked_first_entry
+    from repro.kernels import ops  # local import: kernels layer is optional
+
+    def research(wl, taken, floor):
+        return ops.masked_research(wl, taken, floor, backend=backend)
+
+    return research
+
+
+def default_rounds(n_ch: int) -> int:
+    """Static round bound: enough for the starvation "hole" to traverse the
+    bus a few times.  4N empirically drives CAFP vs the ideal LtA arbiter to
+    zero on the WDM8 *and* WDM16 benchmark grids (2N leaves a ~1e-2 mid-TR
+    residual at N=16); converged trials exit the while_loop early, so the
+    bound is only ever paid on ideal-infeasible trials."""
+    return 4 * n_ch
+
+
+def run_protocol(
+    tables: SearchTables,
+    spec: ChainSpec,
+    *,
+    order: str = "constrained",
+    depth: int | None = None,
+    n_rounds: int | None = None,
+    n_seekers: int = 4,
+    k_donors: int = 4,
+    backend: str | None = None,
+    with_stats: bool = False,
+):
+    """Run the round-driven oblivious arbitration protocol on a table batch.
+
+    depth:    max displacement-chain hops per augmenting attempt (None = N —
+              full multi-hop); 0 disables augmenting entirely.
+    n_rounds: static probe/release/augment round bound (None =
+              ``default_rounds`` = 4N).
+    n_seekers: displacement chains launched per augment phase (starvation
+              rarely exceeds a few rings; leftovers retry next round).
+    k_donors: donor-lookahead width per hop (how many held lines the seeker
+              interrogates before forcing the nearest donor to surrender).
+    order:    controller order of the probe phase (see ``_controller_order``).
+    backend:  None = core jnp; "jnp"/"interpret"/"pallas" route the masked
+              re-search primitive through ``repro.kernels.ops``.  Note the
+              *registered* protocol schemes bake backend=None (the sweep
+              engine's ``SweepRequest.backend`` reaches table build and
+              ideal scoring but not scheme arbiters), so the Pallas kernel
+              path is exercised via this knob and the parity tests; wiring
+              kernel-backed arbiters into TPU sweeps rides the open
+              ROADMAP "Pallas-backed sweeps on TPU" item.
+
+    Returns an ``Assignment`` ((T, N) entry/wl/delta), plus ``ProtocolStats``
+    when ``with_stats``.  The while_loop exits as soon as every trial is
+    fully locked, so converged workloads never pay the full round bound.
+    """
+    t, n, _ = tables.wl.shape
+    dep = n if depth is None else int(depth)
+    rounds = default_rounds(n) if n_rounds is None else int(n_rounds)
+    research = _resolve_research(backend)
+    order_idx = _controller_order(tables, spec, order)
+
+    state0 = ProtocolState(
+        lock=jnp.full((t, n), -1, jnp.int32),
+        entry=jnp.full((t, n), -1, jnp.int32),
+        cursor=jnp.zeros((t, n), jnp.int32),
+        probes=jnp.zeros((t,), jnp.int32),
+    )
+
+    def cond(carry):
+        state, rnd, _ = carry
+        # A trial stays live while some starved ring could still act: a
+        # starved ring whose search table is empty (n_valid == 0 — an
+        # observable event: its sweep records no peak) can never lock, and a
+        # trial whose every starved ring is in that state is a fixed point
+        # of all three phases — exit instead of spinning out the bound.
+        live = (state.lock < 0) & (tables.n_valid > 0)
+        return (rnd < rounds) & jnp.any(live)
+
+    def body(carry):
+        state, rnd, done_round = carry
+        state = _probe_phase(tables, order_idx, state, research)
+        if dep > 0:
+            state = _augment_phase(
+                tables, state, dep, n_seekers, k_donors, research
+            )
+        state = _release_phase(state)
+        complete = jnp.all(state.lock >= 0, axis=1)
+        done_round = jnp.where(
+            complete & (done_round < 0), rnd + 1, done_round
+        )
+        return state, rnd + 1, done_round
+
+    state, _, done_round = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(0), jnp.full((t,), -1, jnp.int32))
+    )
+    assign = _finalize(tables, state)
+    if not with_stats:
+        return assign
+    stats = ProtocolStats(
+        probes=state.probes,
+        rounds=jnp.where(done_round < 0, rounds, done_round),
+        locked=jnp.sum((state.lock >= 0).astype(jnp.int32), axis=1),
+    )
+    return assign, stats
+
+
+# Jitted phase steps for the trace path: compiled once per (T, N, E) shape,
+# so the per-round Python loop of run_protocol_trace stays fast enough for
+# the hypothesis/parametrized invariant tests.
+_probe_jit = jax.jit(
+    lambda tables, order, state: _probe_phase(
+        tables, order, state, masked_first_entry
+    )
+)
+_augment_jit = jax.jit(
+    lambda tables, state, depth, n_seekers, k_donors: _augment_phase(
+        tables, state, depth, n_seekers, k_donors, masked_first_entry
+    ),
+    static_argnums=(2, 3, 4),
+)
+
+
+def run_protocol_trace(
+    tables: SearchTables,
+    spec: ChainSpec,
+    *,
+    order: str = "constrained",
+    depth: int | None = None,
+    n_rounds: int | None = None,
+    n_seekers: int = 4,
+    k_donors: int = 4,
+) -> tuple:
+    """Instrumented run: per-phase state snapshots for invariant checks.
+
+    Executes exactly ``n_rounds`` rounds (no early exit) with a Python round
+    loop and returns (assignment, snapshots) where snapshots is a list of
+    (round, phase_name, ProtocolState) — phases "probe", "augment",
+    "release" in execution order.  Test-only; never on a hot path.
+    """
+    t, n, _ = tables.wl.shape
+    dep = n if depth is None else int(depth)
+    rounds = default_rounds(n) if n_rounds is None else int(n_rounds)
+    order_idx = _controller_order(tables, spec, order)
+
+    state = ProtocolState(
+        lock=jnp.full((t, n), -1, jnp.int32),
+        entry=jnp.full((t, n), -1, jnp.int32),
+        cursor=jnp.zeros((t, n), jnp.int32),
+        probes=jnp.zeros((t,), jnp.int32),
+    )
+    snaps = []
+    for rnd in range(rounds):
+        state = _probe_jit(tables, order_idx, state)
+        snaps.append((rnd, "probe", jax.tree_util.tree_map(np.asarray, state)))
+        if dep > 0:
+            state = _augment_jit(tables, state, dep, n_seekers, k_donors)
+        snaps.append((rnd, "augment", jax.tree_util.tree_map(np.asarray, state)))
+        state = _release_phase(state)
+        snaps.append((rnd, "release", jax.tree_util.tree_map(np.asarray, state)))
+    return _finalize(tables, state), snaps

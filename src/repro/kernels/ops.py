@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from . import ref
 from .bitmask_match import TRIAL_BLOCK, bottleneck_pallas, match_pallas
 from .feasibility import feasibility_pallas
+from .probe import research_pallas
 from .table_build import table_pallas
 
 
@@ -104,6 +105,41 @@ def bottleneck_threshold(weights, *, backend="auto"):
     # Padded trials see all-zero weights: threshold 0, sliced off below.
     thr = bottleneck_pallas(_pad_cols(w, tp), interpret=(backend == "interpret"))
     return thr[:t]
+
+
+def masked_research(wl, taken, floor, *, backend="auto"):
+    """Batched masked re-search (the protocol engine's unit primitive).
+
+    wl (T, C, E) int32 line ids of C search-table rows per trial; taken
+    (T, L) bool captured-line mask; floor (T, C) int32 first admissible
+    entry.  Returns (first (T, C) int32 entry or -1, found (T, C) bool) —
+    semantics of ``repro.core.protocol.masked_first_entry`` (parity-tested).
+    Layout moves are last-axes swaps only, so extra leading vmap axes pass
+    through untouched.
+    """
+    backend = _resolve(backend)
+    wl_c = jnp.moveaxis(jnp.asarray(wl, jnp.int32), -3, -1)       # (C, E, T)
+    taken_c = jnp.swapaxes(jnp.asarray(taken, jnp.int32), -1, -2)  # (L, T)
+    floor_c = jnp.swapaxes(jnp.asarray(floor, jnp.int32), -1, -2)  # (C, T)
+    if backend == "jnp":
+        first, found = ref.research_ref(wl_c, taken_c, floor_c)
+    else:
+        t = wl_c.shape[-1]
+        tp = _padded_t(t)
+        # Padded trials: all-invalid tables (wl = -1) -> found = 0, sliced.
+        if tp != t:
+            wl_c = jnp.pad(wl_c, [(0, 0)] * (wl_c.ndim - 1) + [(0, tp - t)],
+                           constant_values=-1)
+            taken_c = _pad_cols(taken_c, tp)
+            floor_c = _pad_cols(floor_c, tp)
+        first, found = research_pallas(
+            wl_c, taken_c, floor_c, interpret=(backend == "interpret")
+        )
+        first, found = first[..., : t], found[..., : t]
+    return (
+        jnp.swapaxes(first, -1, -2),
+        jnp.swapaxes(found, -1, -2).astype(bool),
+    )
 
 
 def build_tables(laser, ring, fsr, tr, *, visible=None, max_alias=8,

@@ -10,6 +10,7 @@ from repro.core.matching import (
     bottleneck_matching_threshold,
     max_matching,
 )
+from repro.core.protocol import masked_first_entry
 from repro.core.sampling import SystemBatch
 from repro.core.search_table import build_search_tables
 
@@ -39,6 +40,21 @@ def bottleneck_ref(w):
     sweep otherwise) — all formulations are bit-identical.
     """
     return bottleneck_matching_threshold(jnp.moveaxis(w, -1, -3))
+
+
+def research_ref(wl, taken, floor):
+    """Oracle for kernels.probe: kernel-layout batched masked re-search.
+
+    wl (C, E, T), taken (L, T), floor (C, T) -> (first (C, T), found (C, T)),
+    delegating to the core primitive the protocol engine runs on — the
+    kernel is pinned bit-identical to it.
+    """
+    first, found = masked_first_entry(
+        jnp.moveaxis(wl, -1, 0),                   # (T, C, E)
+        jnp.moveaxis(taken != 0, -1, 0),           # (T, L)
+        jnp.moveaxis(floor, -1, 0),                # (T, C)
+    )
+    return first.T, found.T.astype(jnp.int32)
 
 
 def table_ref(laser, ring, fsr, tr, *, visible=None, max_alias=8, max_entries=None):

@@ -1,0 +1,316 @@
+"""Protocol-engine invariants (repro.core.protocol).
+
+The engine's termination argument rests on mechanical invariants, probed
+over random *and* tie-heavy grid-quantized systems:
+
+  * red-ward monotonicity: within a round (release -> probe -> augment) no
+    ring's tuner cursor ever decreases, and a ring locked at both phase
+    boundaries never moved to an earlier entry; only the release phase may
+    rewind, and only for starved rings;
+  * static termination: complete trials are fixed points — once every ring
+    holds a line, later rounds change nothing;
+  * dup-lock freedom: a searcher can only lock a *visible* line and donor
+    hand-offs are atomic, so ``outcomes.classify`` must never see a
+    duplicate lock (nor an out-of-table one);
+  * soundness: protocol success implies ideal LtA success (every lock is a
+    reach-graph edge, so a completed protocol is a perfect matching).
+
+The checks run twice: a deterministic parametrized sweep (always on, so
+tier-1 really exercises them — hypothesis is not installed in every CI
+container) and, when hypothesis is importable, the same invariants under
+randomized @given search.
+"""
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on container
+    HAVE_HYPOTHESIS = False
+
+from repro.core import ArbitrationConfig, DWDMGrid, ideal, make_units
+from repro.core.outcomes import classify
+from repro.core.protocol import (
+    masked_first_entry,
+    run_protocol,
+    run_protocol_trace,
+)
+from repro.core.relation import chain_spec
+from repro.core.sampling import SystemBatch, instantiate
+from repro.core.search_table import build_search_tables
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+#: deterministic (n_ch, seed, tr_mean, quantized) grid for the always-on runs
+CASES = [
+    (4, 0, 2.5, False),
+    (4, 3, 6.0, True),
+    (8, 1, 1.0, False),
+    (8, 2, 4.5, False),
+    (8, 5, 3.0, True),
+    (8, 7, 9.0, True),
+]
+
+
+def _random_system(n_ch, seed, quantized):
+    """Either a sampled paper system or a tie-heavy grid-quantized batch."""
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=n_ch))
+    if not quantized:
+        return cfg, instantiate(cfg, make_units(cfg, seed, 3, 3))
+    rng = np.random.default_rng(seed)
+    t = 9
+    sys = SystemBatch(
+        laser=jnp.asarray(rng.integers(0, n_ch, (t, n_ch)).astype(np.float32) * 0.25),
+        ring=jnp.asarray(rng.integers(-4, 4, (t, n_ch)).astype(np.float32) * 0.25),
+        fsr=jnp.asarray(rng.integers(1, 4, (t, n_ch)).astype(np.float32) * 0.25),
+        tr_unit=jnp.ones((t, n_ch), jnp.float32),
+    )
+    return cfg, sys
+
+
+def _tables_spec(cfg, sys, tr_mean):
+    tables = build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    return tables, chain_spec(cfg.s)
+
+
+# ------------------------------------------------------ invariant checkers --
+
+def check_no_dup_lock_and_locks_in_table(n_ch, seed, tr_mean, quantized,
+                                         depth=None):
+    """classify must never see a duplicate or out-of-table lock."""
+    cfg, sys = _random_system(n_ch, seed, quantized)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    asg = run_protocol(tables, spec, depth=depth)
+    out = classify(asg, jnp.asarray(cfg.s), policy="lta")
+    assert not np.any(np.asarray(out.dup_lock))
+    wl = np.asarray(asg.wl)
+    entry = np.asarray(asg.entry)
+    locked = wl >= 0
+    assert np.all(wl[locked] < n_ch)
+    # the locked entry really is that line in the ring's table
+    twl = np.asarray(tables.wl)
+    rows, rings = np.nonzero(locked)
+    assert np.all(twl[rows, rings, entry[locked]] == wl[locked])
+
+
+def check_redward_monotone_within_round(n_ch, seed, tr_mean, quantized):
+    """Cursors never decrease inside a round; locked rings never move to an
+    earlier entry between phase boundaries; release rewinds starved only."""
+    cfg, sys = _random_system(n_ch, seed, quantized)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    _, snaps = run_protocol_trace(tables, spec, n_rounds=5)
+    by_round = {}
+    for rnd, phase, state in snaps:
+        by_round.setdefault(rnd, {})[phase] = state
+    prev_release = None
+    for rnd in sorted(by_round):
+        probe, augment, release = (
+            by_round[rnd]["probe"], by_round[rnd]["augment"],
+            by_round[rnd]["release"],
+        )
+        if prev_release is not None:  # release of round r-1 opens round r
+            assert np.all(probe.cursor >= prev_release.cursor)
+        assert np.all(augment.cursor >= probe.cursor)
+        both = (probe.entry >= 0) & (augment.entry >= 0)
+        assert np.all(augment.entry[both] >= probe.entry[both])
+        # release only rewinds cursors, and only for starved rings
+        rewound = release.cursor < augment.cursor
+        assert np.all(release.lock[rewound] < 0)
+        assert np.all(release.cursor[rewound] == 0)
+        prev_release = release
+
+
+def check_complete_trials_are_fixed_points(n_ch, seed, tr_mean, quantized):
+    """Termination: once a trial is fully locked, no later phase changes it
+    (so the while_loop bound in run_protocol is an upper bound, not a cap
+    on useful work)."""
+    cfg, sys = _random_system(n_ch, seed, quantized)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    _, snaps = run_protocol_trace(tables, spec, n_rounds=4)
+    states = [s for _, _, s in snaps]
+    for i, state in enumerate(states[:-1]):
+        complete = np.all(state.lock >= 0, axis=1)
+        for later in states[i + 1:]:
+            assert np.array_equal(later.lock[complete], state.lock[complete])
+
+
+def check_protocol_success_implies_ideal_lta(n_ch, seed, tr_mean, quantized):
+    """A completed protocol run IS a perfect matching in the reach graph."""
+    cfg, sys = _random_system(n_ch, seed, quantized)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    asg = run_protocol(tables, spec)
+    out = classify(asg, jnp.asarray(cfg.s), policy="lta")
+    ideal_ok = np.asarray(
+        ideal.success(sys, "lta", jnp.asarray(cfg.s), tr_mean)
+    )
+    assert not np.any(np.asarray(out.success) & ~ideal_ok)
+
+
+# ------------------------------------------------ always-on deterministic --
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean,quantized", CASES)
+def test_no_dup_lock_and_locks_in_table(n_ch, seed, tr_mean, quantized):
+    for depth in (0, 1, None):
+        check_no_dup_lock_and_locks_in_table(
+            n_ch, seed, tr_mean, quantized, depth=depth
+        )
+
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean,quantized", CASES)
+def test_redward_monotone_within_round(n_ch, seed, tr_mean, quantized):
+    check_redward_monotone_within_round(n_ch, seed, tr_mean, quantized)
+
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean,quantized", CASES[:3])
+def test_complete_trials_are_fixed_points(n_ch, seed, tr_mean, quantized):
+    check_complete_trials_are_fixed_points(n_ch, seed, tr_mean, quantized)
+
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean,quantized", CASES)
+def test_protocol_success_implies_ideal_lta(n_ch, seed, tr_mean, quantized):
+    check_protocol_success_implies_ideal_lta(n_ch, seed, tr_mean, quantized)
+
+
+# ----------------------------------------------------- hypothesis variants --
+
+if HAVE_HYPOTHESIS:
+    _args = dict(
+        n_ch=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**16),
+        tr_mean=st.floats(0.5, 10.0),
+        quantized=st.booleans(),
+    )
+
+    @given(depth=st.sampled_from([0, 1, None]), **_args)
+    @settings(**SETTINGS)
+    def test_hyp_no_dup_lock(n_ch, seed, tr_mean, quantized, depth):
+        check_no_dup_lock_and_locks_in_table(
+            n_ch, seed, tr_mean, quantized, depth=depth
+        )
+
+    @given(**_args)
+    @settings(**SETTINGS)
+    def test_hyp_redward_monotone(n_ch, seed, tr_mean, quantized):
+        check_redward_monotone_within_round(n_ch, seed, tr_mean, quantized)
+
+    @given(**_args)
+    @settings(**SETTINGS)
+    def test_hyp_fixed_points(n_ch, seed, tr_mean, quantized):
+        check_complete_trials_are_fixed_points(n_ch, seed, tr_mean, quantized)
+
+    @given(**_args)
+    @settings(**SETTINGS)
+    def test_hyp_success_implies_ideal(n_ch, seed, tr_mean, quantized):
+        check_protocol_success_implies_ideal_lta(n_ch, seed, tr_mean, quantized)
+
+
+# ------------------------------------------------- masked re-search kernel --
+
+@partial(jax.jit, static_argnames=("backend",))
+def _research_via_ops(wl, taken, floor, backend):
+    from repro.kernels import ops
+
+    return ops.masked_research(wl, taken, floor, backend=backend)
+
+
+@pytest.mark.parametrize("seed,c,e,n_lines,t", [
+    (0, 1, 8, 8, 7),
+    (1, 5, 24, 8, 130),
+    (2, 16, 24, 16, 64),
+    (3, 4, 12, 16, 128),
+])
+def test_masked_research_kernel_parity(seed, c, e, n_lines, t):
+    """ops.masked_research (jnp + pallas-interpret) is bit-identical to the
+    core primitive the protocol engine runs on, including trial padding."""
+    rng = np.random.default_rng(seed)
+    wl = rng.integers(-1, n_lines, (t, c, e)).astype(np.int32)
+    taken = rng.random((t, n_lines)) < 0.4
+    floor = rng.integers(0, e + 1, (t, c)).astype(np.int32)
+    first0, found0 = masked_first_entry(
+        jnp.asarray(wl), jnp.asarray(taken), jnp.asarray(floor)
+    )
+    for backend in ("jnp", "interpret"):
+        first, found = _research_via_ops(wl, taken, floor, backend)
+        np.testing.assert_array_equal(np.asarray(first0), np.asarray(first))
+        np.testing.assert_array_equal(np.asarray(found0), np.asarray(found))
+
+
+def test_protocol_engine_backend_parity():
+    """run_protocol routed through the kernel wrappers (interpret) matches
+    the core jnp path bit-for-bit."""
+    cfg = ArbitrationConfig()
+    sys = instantiate(cfg, make_units(cfg, 7, 3, 3))
+    tables, spec = _tables_spec(cfg, sys, 5.0)
+    a0 = run_protocol(tables, spec)
+    for backend in ("jnp", "interpret"):
+        a1 = run_protocol(tables, spec, backend=backend)
+        np.testing.assert_array_equal(np.asarray(a0.entry), np.asarray(a1.entry))
+        np.testing.assert_array_equal(np.asarray(a0.wl), np.asarray(a1.wl))
+
+
+def test_protocol_schemes_registered():
+    """The protocol family rides the ordinary scheme registry."""
+    from repro.core import SCHEME_POLICY, registered_schemes, scheme_spec
+
+    names = registered_schemes()
+    for name in ("protocol_lta", "protocol_lta_h1", "protocol_lta_h2",
+                 "protocol_lta_h4", "protocol_ltd"):
+        assert name in names
+    assert SCHEME_POLICY["protocol_lta"] == "lta"
+    assert SCHEME_POLICY["protocol_ltd"] == "ltd"
+    assert dict(scheme_spec("protocol_lta_h2").params) == {"depth": 2}
+
+
+def test_probe_counts_batch_independent():
+    """A trial's probe count must not depend on which other trials share
+    the batched round loop: running each trial alone gives the same stats
+    as running the whole batch (hopeless/complete trials stop spending
+    probes even while slower co-batched trials keep the while_loop alive)."""
+    cfg = ArbitrationConfig()
+    sys = instantiate(cfg, make_units(cfg, 11, 4, 4))
+    # low TR: a mix of complete, live-starved and hopeless trials
+    for tr in (1.5, 3.0, 6.0):
+        tables, spec = _tables_spec(cfg, sys, tr)
+        _, full = run_protocol(tables, spec, with_stats=True)
+        for t in range(0, tables.wl.shape[0], 5):
+            sub = jax.tree_util.tree_map(lambda a: a[t:t + 1], tables)
+            _, solo = run_protocol(sub, spec, with_stats=True)
+            assert int(solo.probes[0]) == int(full.probes[t]), (tr, t)
+            assert int(solo.locked[0]) == int(full.locked[t]), (tr, t)
+
+
+def test_protocol_stats_accounting():
+    """with_stats returns probe/round accounting consistent with the run."""
+    cfg = ArbitrationConfig()
+    sys = instantiate(cfg, make_units(cfg, 3, 4, 4))
+    tables, spec = _tables_spec(cfg, sys, 6.0)
+    asg, stats = run_protocol(tables, spec, with_stats=True)
+    locked = np.asarray((asg.wl >= 0).sum(axis=1))
+    assert np.array_equal(np.asarray(stats.locked), locked)
+    assert np.all(np.asarray(stats.probes) >= cfg.grid.n_ch)  # >= 1/ring
+    assert np.all(np.asarray(stats.rounds) >= 1)
+
+
+def test_protocol_closes_seq_retry_residual():
+    """The headline: at TR points where depth-1 retry (seq_retry) leaves
+    residual CAFP vs the ideal LtA arbiter, full multi-hop augmenting is
+    ideal (CAFP == 0 on this seed — the fig19 acceptance in miniature)."""
+    from repro.configs.wdm import WDM8_G200
+    from repro.core import SweepRequest, sweep
+
+    cfg = WDM8_G200
+    units = make_units(cfg, seed=21, n_laser=10, n_ring=10)  # 100 trials
+    trs = np.linspace(0.28, 9.0, 6).astype(np.float32)
+    cafp = {}
+    for scheme in ("seq_retry", "protocol_lta"):
+        res = sweep(SweepRequest(cfg=cfg, units=units, scheme=scheme,
+                                 axes={"tr_mean": trs}))
+        cafp[scheme] = np.asarray(res.data.cafp)
+    residual = cafp["seq_retry"] > 0.0
+    assert residual.any(), "expected seq_retry residual on this grid"
+    assert float(cafp["protocol_lta"][residual].max()) <= 1e-3
