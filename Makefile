@@ -1,13 +1,13 @@
 # CI entry points (ROADMAP "wire into CI"): `make ci` is what the GitHub
-# workflow runs — the tier-1 suite, the BENCH-gate self-test, and the
-# kernel microbenches (table-build + matching only; no figure sweeps), so
-# the bench entry points stay importable and green without the full
-# bench-gate cost.
+# workflow runs — the tier-1 suite, the BENCH-gate self-test, the kernel
+# microbenches (table-build/rank-merge + matching + the WDM64 sweep smoke;
+# no figure sweeps), and a tiny-grid fig18 smoke (2x2 grid, low trials) so
+# the paper-scale WDM32 path stays green without the full bench-gate cost.
 PY ?= python
 
-.PHONY: ci tier1 bench-selftest bench-kernel bench bench-gate
+.PHONY: ci tier1 bench-selftest bench-kernel bench-fig18-smoke bench bench-gate
 
-ci: tier1 bench-selftest bench-kernel
+ci: tier1 bench-selftest bench-kernel bench-fig18-smoke
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -17,6 +17,9 @@ bench-selftest:
 
 bench-kernel:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only kernel
+
+bench-fig18-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.fig18_wdm32_cafp
 
 # Regenerate the BENCH trajectory file and gate it against the committed
 # baseline (>20% per-figure / per-record slowdowns fail).  On noisy shared

@@ -11,12 +11,15 @@ Comparison happens at two granularities, both against the same threshold
 
   * per figure: ``module_wall_ms`` (each record of a module carries the
     module's wall-time; the max is used);
-  * per record: the steady-state ``derived.engine_ms`` where a record in
-    both files has one (compile time excluded, so this is the stable
-    trajectory signal).
+  * per record: every steady-state ``derived.*_ms`` field a record carries
+    in both files — ``engine_ms`` keyed by the plain record name (so old
+    baselines keep comparing), per-phase fields (``table_ms`` /
+    ``arbitrate_ms`` / ``score_ms``) keyed ``name:field``.  Compile time is
+    excluded everywhere, so these are the stable trajectory signals.
 
-Figures/records present in only one file are reported but never fail the
-gate (benchmarks come and go); a ``full`` flag mismatch is a hard error
+Figures/records/fields present in only one file are reported but never fail
+the gate (benchmarks — and phase breakdowns — come and go; old baselines
+without the breakdown stay usable); a ``full`` flag mismatch is a hard error
 (exit 2) since fast and paper-scale runs are not comparable.
 
 Noisy-container hardening: generate candidates with
@@ -65,12 +68,20 @@ def _figure_walls(payload: dict) -> Dict[str, float]:
     return walls
 
 
-def _engine_times(payload: dict) -> Dict[str, float]:
+def _record_times(payload: dict) -> Dict[str, float]:
+    """Per-record steady timings: every ``derived.*_ms`` field.
+
+    ``engine_ms`` keys by the plain record name (back-compat with baselines
+    written before the per-phase breakdown existed); any other ``*_ms``
+    field keys ``f"{name}:{field}"``.  Fields missing on either side of a
+    diff become one-sided notes in ``compare`` — never failures."""
     times: Dict[str, float] = {}
     for rec in payload.get("records", []):
-        ms = rec.get("derived", {}).get("engine_ms")
-        if ms is not None:
-            times[rec["name"]] = float(ms)
+        for field, value in rec.get("derived", {}).items():
+            if not field.endswith("_ms") or value is None:
+                continue
+            key = rec["name"] if field == "engine_ms" else f"{rec['name']}:{field}"
+            times[key] = float(value)
     return times
 
 
@@ -82,7 +93,7 @@ def compare(old: dict, new: dict, threshold: float = DEFAULT_THRESHOLD
     notes: List[str] = []
     for kind, old_map, new_map in (
         ("figure", _figure_walls(old), _figure_walls(new)),
-        ("record", _engine_times(old), _engine_times(new)),
+        ("record", _record_times(old), _record_times(new)),
     ):
         for name in sorted(set(old_map) | set(new_map)):
             if name not in old_map or name not in new_map:
@@ -113,8 +124,11 @@ def self_test() -> int:
     """
     def payload(**figure_times):
         records = []
-        for fig, (wall, engine) in figure_times.items():
+        for fig, times in figure_times.items():
+            wall, engine = times[0], times[1]
             derived = {} if engine is None else {"engine_ms": engine}
+            if len(times) > 2:
+                derived.update(times[2])  # per-phase *_ms fields
             records.append({"figure": fig, "name": f"{fig}/row",
                             "module_wall_ms": wall, "derived": derived})
         return {"schema": "bench.v1", "full": False, "records": records}
@@ -132,6 +146,15 @@ def self_test() -> int:
                         payload(f=(1000.0, None), added=(9e9, None)))
     checks.append(("added/removed figures never fail",
                    ok == [] and len(notes) == 2))
+    bad, _ = compare(payload(f=(1000.0, 100.0, {"table_ms": 50.0})),
+                     payload(f=(1000.0, 100.0, {"table_ms": 100.0})))
+    checks.append(("phase-field slowdown flagged",
+                   [(r["kind"], r["name"]) for r in bad]
+                   == [("record", "f/row:table_ms")]))
+    ok, notes = compare(payload(f=(1000.0, 100.0)),
+                        payload(f=(1000.0, 100.0, {"table_ms": 70.0})))
+    checks.append(("breakdown absent from old baseline is note-only",
+                   ok == [] and any("table_ms" in n for n in notes)))
     tight, _ = compare(payload(f=(1000.0, None)), payload(f=(1100.0, None)),
                        threshold=0.05)
     checks.append(("threshold configurable", len(tight) == 1))

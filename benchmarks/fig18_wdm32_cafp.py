@@ -14,16 +14,54 @@ Trials are paper-scale in *both* modes (that is the figure's point);
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.wdm import WDM32_G200
-from repro.core import SweepRequest, make_units, sweep
+from repro.core import SweepRequest, Variations, make_units, sweep
 from repro.core.sweep import _CHUNK_BUDGET, _auto_chunk, scheme_point_bytes
 
 from .common import timed_steady
 
 TRIALS = 100  # paper-scale Monte Carlo (100x100) in every mode
 SCHEME = "vtrs_ssm"
+
+
+def _phase_breakdown(cfg, units, rlv: float, tr: float) -> dict:
+    """Steady-state per-phase times (ms) at one representative grid point.
+
+    The sweep's ``engine_ms`` is the trajectory headline; this attributes it
+    (table build vs arbitration vs CAFP scoring) so a regression in one
+    phase can't hide behind an improvement in another.  Uses the same
+    warm-then-time discipline as ``timed_steady``.
+    """
+    from repro.core.api import _build_tables, _ideal_success, scheme_spec
+    from repro.core.outcomes import classify
+    from repro.core.relation import chain_spec
+    from repro.core.sampling import instantiate
+
+    over = Variations(tr_mean=float(tr), sigma_rlv=float(rlv))
+    sys = jax.block_until_ready(
+        jax.jit(instantiate, static_argnums=0)(cfg, units, over)
+    )
+    spec = chain_spec(cfg.s)
+    sspec = scheme_spec(SCHEME)
+
+    tab_fn = jax.jit(lambda s: _build_tables(cfg, s, float(tr), None))
+    tables, table_ms = timed_steady(tab_fn, sys)
+    arb_fn = jax.jit(lambda t: sspec.arbiter(cfg, t, spec, backend=None))
+    assign, arbitrate_ms = timed_steady(arb_fn, tables)
+    score_fn = jax.jit(lambda s, a: (
+        _ideal_success(cfg, s, sspec.policy, float(tr), None),
+        classify(a, jnp.asarray(cfg.s), policy=sspec.policy),
+    ))
+    _, score_ms = timed_steady(score_fn, sys, assign)
+    return {
+        "table_ms": round(table_ms, 1),
+        "arbitrate_ms": round(arbitrate_ms, 1),
+        "score_ms": round(score_ms, 1),
+    }
 
 
 def run(full: bool = False):
@@ -51,6 +89,7 @@ def run(full: bool = False):
     res, engine_ms = timed_steady(sweep, req)
     cafp = np.asarray(res.data.cafp, np.float32)
     afp = np.asarray(res.data.afp, np.float32)
+    phases = _phase_breakdown(cfg, units, float(rlvs[0]), float(trs[0]))
     return [
         (
             f"fig18/wdm32-g200/{SCHEME}",
@@ -67,6 +106,35 @@ def run(full: bool = False):
                 "max_cafp": round(float(cafp.max()), 4),
                 "mean_cafp": round(float(cafp.mean()), 4),
                 "engine_ms": round(engine_ms, 1),
+                **phases,
             },
         )
     ]
+
+
+def smoke(trials: int = 12) -> dict:
+    """Tiny-grid CI smoke (``make ci``): the paper-scale fig18 *path* —
+    WDM32 streaming tables through the sweep engine plus the per-phase
+    breakdown — on a 2x2 grid at low trials, so a regression that only
+    bites this entry point cannot land silently.  Returns the derived dict
+    it printed (for ad-hoc inspection)."""
+    cfg = WDM32_G200
+    units = make_units(cfg, seed=21, n_laser=trials, n_ring=trials)
+    trs = np.array([0.25, 0.28], np.float32) * cfg.grid.fsr
+    rlvs = np.array([1.0, 2.0], np.float32) * cfg.grid.grid_spacing
+    req = SweepRequest(
+        cfg=cfg, units=units, scheme=SCHEME,
+        axes={"sigma_rlv": rlvs, "tr_mean": trs},
+    )
+    res = sweep(req)
+    cafp = np.asarray(res.data.cafp, np.float32)
+    assert cafp.shape == (2, 2), cafp.shape
+    assert np.all((cafp >= 0.0) & (cafp <= 1.0)), cafp
+    phases = _phase_breakdown(cfg, units, float(rlvs[0]), float(trs[0]))
+    out = {"cafp": np.round(cafp, 4).tolist(), **phases}
+    print(f"fig18 smoke OK: {out}")
+    return out
+
+
+if __name__ == "__main__":
+    smoke()

@@ -107,6 +107,73 @@ def run(full: bool = False):
               "identical_wl": parity})
         )
 
+    # Rank-merge streaming builder (the core jnp path every sweep runs)
+    # across channel counts including the first 64-channel config: timing
+    # plus the merge plan actually chosen, with a dense-oracle parity check
+    # on a small trial slice at N<=32 (N=64 parity is covered by
+    # tests/test_rank_merge.py; the dense tensor there is too large for a
+    # timing row).
+    from repro.core.search_table import (
+        build_search_tables, build_search_tables_dense, merge_plan,
+    )
+
+    build_jit = jax.jit(build_search_tables)
+    for n_ch in (16, 32, 64):
+        cfg_n = wdm_config(n_ch=n_ch)
+        units_n = make_units(cfg_n, seed=7, n_laser=n, n_ring=n)
+        sys_n = instantiate(cfg_n, units_n)
+        _, us_rm = _time(build_jit, sys_n, 5.0)
+        plan = merge_plan(sys_n.n_trials, n_ch)
+        derived = {
+            "trials": sys_n.n_trials, "us_per_call": round(us_rm),
+            "line_block": plan.line_block, "ring_block": plan.ring_block,
+            "plan_mb": round(plan.total_bytes / 2**20, 1),
+        }
+        if n_ch <= 32:
+            sub = type(sys_n)(*[a[:64] for a in sys_n])
+            t_s = build_jit(sub, 5.0)
+            t_d = build_search_tables_dense(sub, 5.0)
+            parity = bool(
+                np.array_equal(np.asarray(t_s.wl), np.asarray(t_d.wl))
+                and np.array_equal(np.asarray(t_s.delta), np.asarray(t_d.delta),
+                                   equal_nan=True)
+            )
+            if not parity:
+                raise AssertionError(f"rank-merge n={n_ch}: stream != dense")
+            derived["identical_to_dense"] = parity
+        rows.append((f"kernel/table_rankmerge_n{n_ch}", derived))
+
+    # WDM64 smoke: the first 64-channel config end to end — streaming
+    # tables through the sweep engine plus one vtrs_ssm scheme point, all
+    # inside the 256 MB chunk budget (LtC conditioning: the int32 adjacency
+    # bitmask of the ideal LtA path tops out at N=32).  Trials are capped so
+    # --full keeps the point inside the budget too.
+    from repro.configs.wdm import WDM64_G200
+    from repro.core import SweepRequest, sweep
+    from repro.core.sweep import _CHUNK_BUDGET, scheme_point_bytes
+
+    cfg64 = WDM64_G200
+    m64 = min(n, 48)
+    units64 = make_units(cfg64, seed=9, n_laser=m64, n_ring=m64)
+    pt_bytes = scheme_point_bytes(cfg64, m64 * m64)
+    if pt_bytes > _CHUNK_BUDGET:
+        raise AssertionError(
+            f"WDM64 scheme point {pt_bytes} B exceeds the chunk budget"
+        )
+    req64 = SweepRequest(
+        cfg=cfg64, units=units64, scheme="vtrs_ssm",
+        axes={"tr_mean": np.array([0.28 * cfg64.grid.fsr], np.float32)},
+    )
+    res64, us64 = _time(sweep, req64, reps=1)
+    rows.append(
+        ("kernel/wdm64_sweep_smoke",
+         {"trials": m64 * m64, "point_mb": round(pt_bytes / 2**20, 1),
+          "budget_mb": round(_CHUNK_BUDGET / 2**20, 1),
+          "cafp": round(float(np.asarray(res64.data.cafp)[0]), 4),
+          "afp": round(float(np.asarray(res64.data.afp)[0]), 4),
+          "us_per_call": round(us64)})
+    )
+
     # Bottleneck matching across channel counts: the retired Kuhn binary
     # search vs the current dispatch (Hall subsets at N=8, the single-pass
     # bottleneck sweep at N=16/32).  Thresholds must stay bit-identical —

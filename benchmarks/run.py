@@ -4,8 +4,9 @@ Prints ``name,us_per_call,derived`` CSV (derived = paper-comparable values);
 metrics machine-readably (the seed for BENCH_*.json trajectory tracking).
 
 ``--runs N`` repeats every module N times and records the *median* wall-time
-and per-record ``engine_ms`` — the derived grids are deterministic, so only
-the timings vary.  On noisy shared machines (PR 3 measured 23/51 records of
+and per-record ``*_ms`` timings (``engine_ms`` plus any per-phase breakdown
+such as ``table_ms``/``arbitrate_ms``/``score_ms``) — the derived grids are
+deterministic, so only the timings vary.  On noisy shared machines (PR 3 measured 23/51 records of
 identical code drifting >20% between single runs on a 2-core container)
 median-of-3 is what makes the ``check_regression`` wall-time gate usable.
 """
@@ -28,7 +29,7 @@ def main() -> None:
                     help="also write machine-readable results to OUT")
     ap.add_argument("--runs", type=int, default=1, metavar="N",
                     help="repeat each module N times; record median wall "
-                         "and engine_ms timings (noise-robust BENCH files)")
+                         "and *_ms timings (noise-robust BENCH files)")
     args = ap.parse_args()
     if args.runs < 1:
         ap.error("--runs must be >= 1")
@@ -72,22 +73,24 @@ def main() -> None:
         mod_name = mod.__name__.rsplit(".", 1)[-1]
         if args.only and args.only not in mod_name:
             continue
-        walls, engine_runs = [], []
+        walls, timing_runs = [], []
         for _ in range(args.runs):
             t0 = time.time()
             rows = mod.run(full=args.full)
             walls.append((time.time() - t0) * 1e3)
-            engine_runs.append(
-                {name: d["engine_ms"] for name, d in rows if "engine_ms" in d}
+            timing_runs.append(
+                {name: {k: v for k, v in d.items() if k.endswith("_ms")}
+                 for name, d in rows}
             )
         wall_ms = statistics.median(walls)
         if args.runs > 1:
             # Grids are deterministic across runs; only timings vary.  Keep
-            # the last run's rows and replace engine_ms with the median.
+            # the last run's rows and replace every *_ms derived field
+            # (engine_ms and the per-phase breakdown) with its median.
             for name, derived in rows:
-                if "engine_ms" in derived:
-                    derived["engine_ms"] = round(statistics.median(
-                        er[name] for er in engine_runs
+                for field in [k for k in derived if k.endswith("_ms")]:
+                    derived[field] = round(statistics.median(
+                        run[name][field] for run in timing_runs
                     ), 1)
         us = wall_ms * 1e3 / max(len(rows), 1)
         for name, derived in rows:

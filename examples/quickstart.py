@@ -45,6 +45,18 @@ for i, tr in enumerate(results["seq"].axis("tr_mean")):
         f"{float(results['vtrs_ssm'].data.cafp[i]):9.4f}"
     )
 
+# Every stage honors ``backend=``: None (default) is the core jnp path;
+# "jnp" routes table build, ideal scoring and the protocol engine's masked
+# re-search through the kernel wrappers' jnp mirrors, "interpret"/"pallas"
+# select the Pallas kernels (interpreter / real accelerator).  The value
+# reaches every registered scheme arbiter (see the ROADMAP backend
+# matrix), and CPU-reachable backends are bit-identical by contract.
+res_jnp = sweep(SweepRequest(cfg=cfg, units=units, scheme="vtrs_ssm",
+                             axes={"tr_mean": trs}, backend="jnp"))
+assert np.array_equal(np.asarray(res_jnp.data.cafp),
+                      np.asarray(results["vtrs_ssm"].data.cafp))
+print("\nbackend='jnp' sweep is bit-identical to the core path")
+
 # Point evaluations take the same Variations pytree; any registered axis
 # (including post-paper ones like thermal_drift) is a valid override.
 r = evaluate_scheme(

@@ -9,6 +9,13 @@ WDM16_G400 = wdm_config(n_ch=16, ghz=400)
 # N > 10 single-pass bottleneck matching in repro.core.matching.
 WDM32_G200 = wdm_config(n_ch=32, ghz=200)
 WDM32_G400 = wdm_config(n_ch=32, ghz=400)
+# 64 channels (§VII scalability; the channel counts deployment studies in
+# PAPERS.md operate at).  The rank-merge streaming tables keep a scheme
+# point inside the sweep engine's chunk budget here; note the LtA ideal
+# path's int32 adjacency bitmask tops out at N=32, so 64-channel sweeps use
+# LtC-conditioned schemes (e.g. vtrs_ssm) — see the ROADMAP backend matrix.
+WDM64_G200 = wdm_config(n_ch=64, ghz=200)
+WDM64_G400 = wdm_config(n_ch=64, ghz=400)
 
 WDM_CONFIGS = {
     "wdm8-g200": WDM8_G200,
@@ -17,4 +24,6 @@ WDM_CONFIGS = {
     "wdm16-g400": WDM16_G400,
     "wdm32-g200": WDM32_G200,
     "wdm32-g400": WDM32_G400,
+    "wdm64-g200": WDM64_G200,
+    "wdm64-g400": WDM64_G400,
 }

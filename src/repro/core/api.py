@@ -32,6 +32,7 @@ registered after import are immediately visible.
 """
 from __future__ import annotations
 
+import inspect
 from collections.abc import Mapping as _MappingABC
 from collections.abc import Sequence as _SequenceABC
 from typing import Any, Callable, Mapping, NamedTuple
@@ -56,7 +57,34 @@ from .variations import Variations, merge_legacy_overrides
 
 # An arbiter maps (cfg, tables, spec) -> Assignment using only oblivious
 # primitives (entry indices and masking events; never wavelength values).
-Arbiter = Callable[[ArbitrationConfig, SearchTables, ChainSpec], Assignment]
+# Registered arbiters additionally receive the engine's ``backend=`` keyword
+# (None | "jnp" | "pallas" | "interpret"); ``register_scheme`` wraps legacy
+# 3-argument arbiters so pure-jnp schemes may simply ignore it.
+Arbiter = Callable[..., Assignment]
+
+
+def _normalize_arbiter(arbiter: Callable[..., Assignment]) -> Arbiter:
+    """Ensure a registered arbiter accepts the engine's ``backend`` keyword.
+
+    Arbiters that already take ``backend`` (or ``**kwargs``) pass through
+    untouched; legacy 3-argument arbiters are wrapped to swallow it, so
+    existing registrations (and user schemes) keep working unchanged.
+    """
+    try:
+        params = inspect.signature(arbiter).parameters
+    except (TypeError, ValueError):
+        params = None
+    if params is not None and (
+        "backend" in params
+        or any(p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+    ):
+        return arbiter
+
+    def legacy(cfg, tables, spec, *, backend=None):
+        del backend  # pure-jnp arbiter: backend selection has nothing to reach
+        return arbiter(cfg, tables, spec)
+
+    return legacy
 
 
 class SchemeSpec(NamedTuple):
@@ -99,7 +127,8 @@ def register_scheme(
     if policy not in ("ltd", "ltc", "lta"):
         raise ValueError(f"unknown conditioning policy {policy!r}")
     frozen = tuple(sorted(dict(params or {}).items()))
-    spec = SchemeSpec(name=name, arbiter=arbiter, policy=policy, params=frozen)
+    spec = SchemeSpec(name=name, arbiter=_normalize_arbiter(arbiter),
+                      policy=policy, params=frozen)
     _SCHEME_REGISTRY[name] = spec
     return spec
 
@@ -206,12 +235,18 @@ def make_protocol(
     full multi-hop; 0 = probe/release only), ``n_rounds`` the static round
     budget, ``order`` the probe-phase controller order.  All static — bake
     them here and register the result under its own jit-static name.
-    """
 
-    def arbiter(cfg, tables, spec):
+    ``backend`` is only a *default*: at call time the engine's backend
+    (``SweepRequest.backend`` / ``oblivious_arbitrate(backend=)``) takes
+    precedence when set, so registered protocol schemes honor
+    ``backend="pallas"``/``"interpret"`` sweeps without re-registration.
+    """
+    baked = backend
+
+    def arbiter(cfg, tables, spec, *, backend=None):
         return run_protocol(
             tables, spec, order=order, depth=depth, n_rounds=n_rounds,
-            backend=backend,
+            backend=baked if backend is None else backend,
         )
 
     return arbiter
@@ -374,10 +409,14 @@ def oblivious_arbitrate(
     ``visible`` ((T, N_wl) or (T, N_ring, N_wl) bool) runs the scheme on
     masked re-search tables — the arbitration a late-joining ring performs
     while earlier locks have already captured lines.
+
+    ``backend`` selects the kernel backend for table build *and* is
+    forwarded to the scheme's arbiter, so backend-aware schemes (the
+    protocol engine) run their hot loop on the same backend.
     """
     tables = _build_tables(cfg, sys, tr_mean, backend, visible=visible)
     spec = chain_spec(cfg.s)
-    return scheme_spec(scheme).arbiter(cfg, tables, spec)
+    return scheme_spec(scheme).arbiter(cfg, tables, spec, backend=backend)
 
 
 class EvalResult(NamedTuple):

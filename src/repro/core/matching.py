@@ -82,6 +82,12 @@ def _sorting_network(n: int) -> tuple:
 def adjacency_bitmask(reach: jax.Array) -> jax.Array:
     """(T, N, N) bool reach[t, ring, wl] -> (T, N) int32 per-ring wl bitmask."""
     n = reach.shape[-1]
+    if n > 32:
+        raise ValueError(
+            f"adjacency_bitmask packs wavelengths into int32 and supports at "
+            f"most 32 channels, got N={n}; matching-based (LtA) paths are "
+            f"unavailable at this width — use an LtC-conditioned policy"
+        )
     bits = (1 << jnp.arange(n, dtype=jnp.int32))[None, None, :]
     return jnp.sum(jnp.where(reach, bits, 0), axis=-1).astype(jnp.int32)
 

@@ -369,17 +369,20 @@ def run_protocol(
               interrogates before forcing the nearest donor to surrender).
     order:    controller order of the probe phase (see ``_controller_order``).
     backend:  None = core jnp; "jnp"/"interpret"/"pallas" route the masked
-              re-search primitive through ``repro.kernels.ops``.  Note the
-              *registered* protocol schemes bake backend=None (the sweep
-              engine's ``SweepRequest.backend`` reaches table build and
-              ideal scoring but not scheme arbiters), so the Pallas kernel
-              path is exercised via this knob and the parity tests; wiring
-              kernel-backed arbiters into TPU sweeps rides the open
-              ROADMAP "Pallas-backed sweeps on TPU" item.
+              re-search primitive through ``repro.kernels.ops``.  Registered
+              protocol schemes forward the engine's call-time backend here
+              (``SweepRequest.backend`` reaches table build, ideal scoring
+              *and* this loop); the ``make_protocol(backend=)`` default only
+              applies when the caller leaves the backend unset.
 
     Returns an ``Assignment`` ((T, N) entry/wl/delta), plus ``ProtocolStats``
     when ``with_stats``.  The while_loop exits as soon as every trial is
-    fully locked, so converged workloads never pay the full round bound.
+    fully locked — and, since one probe/augment/release round is a
+    deterministic function of (lock, entry, cursor), a trial whose round
+    changed nothing is at a fixed point: it is sticky-marked *halted*, its
+    later rounds refund their probes (keeping the per-trial probe count
+    batch-independent), and the loop exits once every trial is complete,
+    dead or halted — ideal-infeasible trials stop paying the 4N bound.
     """
     t, n, _ = tables.wl.shape
     dep = n if depth is None else int(depth)
@@ -395,31 +398,53 @@ def run_protocol(
     )
 
     def cond(carry):
-        state, rnd, _ = carry
+        state, rnd, _, halted = carry
         # A trial stays live while some starved ring could still act: a
         # starved ring whose search table is empty (n_valid == 0 — an
         # observable event: its sweep records no peak) can never lock, and a
         # trial whose every starved ring is in that state is a fixed point
         # of all three phases — exit instead of spinning out the bound.
+        # ``halted`` extends the same argument to *stalled* trials (a full
+        # round changed nothing), so ideal-infeasible workloads exit as soon
+        # as every trial is complete, dead or provably stuck.
         live = (state.lock < 0) & (tables.n_valid > 0)
-        return (rnd < rounds) & jnp.any(live)
+        return (rnd < rounds) & jnp.any(jnp.any(live, axis=1) & ~halted)
 
     def body(carry):
-        state, rnd, done_round = carry
+        state, rnd, done_round, halted = carry
+        prev = state
         state = _probe_phase(tables, order_idx, state, research)
         if dep > 0:
             state = _augment_phase(
                 tables, state, dep, n_seekers, k_donors, research
             )
         state = _release_phase(state)
+        # Progress stall: one round is a deterministic map of (lock, entry,
+        # cursor), so an unchanged live trial repeats forever — sticky-halt
+        # it.  Already-halted trials refund this round's probes (their state
+        # is a fixed point, so only the probe counter could drift): the
+        # per-trial spend stays independent of which *other* trials keep the
+        # shared loop alive.
+        changed = (
+            jnp.any(state.lock != prev.lock, axis=1)
+            | jnp.any(state.entry != prev.entry, axis=1)
+            | jnp.any(state.cursor != prev.cursor, axis=1)
+        )
+        state = state._replace(
+            probes=jnp.where(halted, prev.probes, state.probes)
+        )
+        live = jnp.any((prev.lock < 0) & (tables.n_valid > 0), axis=1)
+        halted = halted | (live & ~changed)
         complete = jnp.all(state.lock >= 0, axis=1)
         done_round = jnp.where(
             complete & (done_round < 0), rnd + 1, done_round
         )
-        return state, rnd + 1, done_round
+        return state, rnd + 1, done_round, halted
 
-    state, _, done_round = jax.lax.while_loop(
-        cond, body, (state0, jnp.int32(0), jnp.full((t,), -1, jnp.int32))
+    state, _, done_round, _ = jax.lax.while_loop(
+        cond, body,
+        (state0, jnp.int32(0), jnp.full((t,), -1, jnp.int32),
+         jnp.zeros((t,), bool)),
     )
     assign = _finalize(tables, state)
     if not with_stats:

@@ -24,25 +24,53 @@ candidate tensor plus an argsort — the pre-streaming implementation, kept
 below as ``build_search_tables_dense`` — costs O(T*N*(N*J + E)) while the
 answer only needs O(T*N*E).  ``build_search_tables`` instead *streams* the
 candidate axis: a ``lax.fori_loop`` walks (line-block, ring-block) tiles,
-materializes one small (T, R, L*J) candidate block at a time, and merges it
-into the persistent sorted (T, N, E) table with one stable top-E sort of
-width E + L*J.  Peak working set is the persistent table (8 bytes/entry:
-f32 delta + i32 wl) plus a bounded merge transient chosen by ``merge_plan``
-— O(T*N*E + T*R*(E + L*J)) — which is what lets a paper-scale (100x100
-trial) WDM32 point fit the sweep engine's 256 MB chunk budget (~6x below
-the dense build; see ``repro.core.sweep.scheme_point_bytes``).
+materializes one small (T, R, L*J) candidate block at a time, and
+**rank-merges** it into the persistent sorted (T, N, E) table: the block is
+put in ascending order (a stable width-L*J sort — or, for single-line
+blocks, a sort-free rotation; see ``build_search_tables``), a
+``searchsorted``-style rank pass places each candidate against the buffer,
+and the E survivors are materialized by gathering through the merge-path
+inverse (candidates ranked past E drop out).  No E-wide sort ever runs:
+per step the table-width work is a log-depth batched bisection plus two
+gathers instead of the former stable sort of width E + L*J, which is what
+buys the paper-scale speedup at forced L=1 tilings.  (Everything is
+phrased gather-only on purpose: CPU XLA lowers both scatter and vmapped
+``searchsorted`` to serial per-element loops, measured ~10x slower than
+this formulation at paper scale.)  Peak working set is the
+persistent table (8 bytes/entry: f32 delta + i32 wl) plus a bounded merge
+transient chosen by ``merge_plan`` — O(T*N*E + T*R*(E + L*J)) — which is
+what lets a paper-scale (100x100 trial) WDM32 point fit the sweep engine's
+256 MB chunk budget (~6x below the dense build; see
+``repro.core.sweep.scheme_point_bytes``).
 
 Bit-exactness: the dense path's stable argsort orders candidates by
 (delta, flat candidate index) with flat index = line*J + alias.  The
-streaming merge preserves exactly that order: blocks are consumed in
-ascending line-major/alias-minor order, each block's internal layout is the
-same sub-order, and the merge sort is *stable* with the existing buffer
-(all earlier flat indices) concatenated first — so ties resolve identically
-and the two builders agree bit-for-bit (guarded by a hypothesis property
-test and the kernel parity suite).
+rank-merge preserves exactly that order:
+
+  * blocks are consumed in ascending line-major order, so every buffer
+    entry has a smaller flat index than every incoming candidate;
+  * the rank pass counts buffer entries ``<=`` each candidate
+    (``searchsorted(buffer, block, side="right")``), so buffer entries win
+    all delta ties — the flat-index order;
+  * within a block, a *stable* delta sort keeps tied candidates in flat
+    order (blocks are laid out line-major/alias-minor);
+  * buffer and candidate positions tile [0, E + L*J) with no collisions
+    (the classic merge-path bijection), so gathering through its inverse
+    reproduces the first E entries of the full stable sort exactly.
+
+For L=1 the block sort is elided entirely: within one line, delta is
+monotone in the alias index (step = FSR >= 0), so enumerating aliases in
+*descending* j order yields ascending deltas with the masked (+inf)
+entries in one run at each end, and a single rotation moves them to the
+back.  Tied candidates inside one line carry identical (delta, wl)
+payloads (same line id; FSR == 0 collapses the deltas too), so any
+within-line tie order produces bit-identical tables.  All of this is
+guarded by always-on deterministic oracle tests, hypothesis variants, and
+the kernel parity suite.
 """
 from __future__ import annotations
 
+import math
 from typing import NamedTuple
 
 import jax
@@ -58,6 +86,11 @@ SENTINEL = jnp.float32(jnp.inf)
 #: 256 MiB chunk budget next to its 245.8 MB persistent tables.
 _MERGE_FLOOR_BYTES = 4 * 1024 * 1024
 _MERGE_CAP_BYTES = 20 * 1024 * 1024
+
+#: Max per-row compare-reduction size (block width x table width) for the
+#: rank-merge's fused small-block path; larger tiles bisect instead (see
+#: ``build_search_tables``).
+_RANK_FUSE_MAX = 4096
 
 
 class SearchTables(NamedTuple):
@@ -77,11 +110,12 @@ def max_entries_for(n_ch: int) -> int:
 class MergePlan(NamedTuple):
     """Static tiling of the streaming builder at one (T, N, J, E) shape.
 
-    line_block (L) and ring_block (R) divide N; each fori_loop step merges
-    the (T, R, L*J) candidate tile of one (line-block, ring-block) pair into
-    the table with a stable sort of width E + L*J.  ``table_bytes`` is the
-    persistent output footprint (f32 delta + i32 wl + i32 n_valid);
-    ``transient_bytes`` bounds the per-step scratch (sort in + out + block).
+    line_block (L) and ring_block (R) divide N; each fori_loop step
+    rank-merges the (T, R, L*J) candidate tile of one (line-block,
+    ring-block) pair into the table.  ``table_bytes`` is the persistent
+    output footprint (f32 delta + i32 wl + i32 n_valid);
+    ``transient_bytes`` bounds the per-step scratch (buffer slice in +
+    scatter out at width E, block/sorted/rank arrays at width L*J).
     """
 
     line_block: int
@@ -103,11 +137,11 @@ def merge_plan(
 ) -> MergePlan:
     """Choose the streaming tile sizes for a (T, N) system batch.
 
-    Work (total sorted elements ~ T * N^2/L * (E + L*J)) is minimized by the
-    largest line block, so L is the largest divisor of N whose transient
-    fits the cap; R then grows to cut the step count (N^2 / (L*R)) while
-    still fitting.  The same plan drives the builder and the sweep engine's
-    ``scheme_point_bytes`` accounting, so the two cannot drift.
+    Step count (N^2 / (L*R)) falls with the largest line block, so L is the
+    largest divisor of N whose transient fits the cap; R then grows to cut
+    the step count further while still fitting.  The same plan drives the
+    builder and the sweep engine's ``scheme_point_bytes`` accounting, so
+    the two cannot drift.
     """
     n_j = 2 * max_alias + 1
     e_req = max_entries_for(n_ch) if max_entries is None else max_entries
@@ -115,9 +149,11 @@ def merge_plan(
     table = n_trials * n_ch * (e * 8 + 4)  # f32 delta + i32 wl + i32 n_valid
 
     def transient(l: int, r: int) -> int:
-        # stable sort in + out ((E + L*J) wide, f32 key + i32 payload) plus
-        # the candidate block itself (L*J wide, f32 + i32)
-        return n_trials * r * 8 * (2 * (e + l * n_j) + l * n_j)
+        # E-wide tiles: buffer slice in + merged tile out (f32 + i32 each)
+        # plus the buffer-rank scatter positions; L*J-wide: the candidate
+        # block, its sorted copy, and the rank/position arrays (validated
+        # against compiled memory_analysis in tests/test_memory)
+        return n_trials * r * (16 * e + 24 * l * n_j)
 
     cap = min(max(table, _MERGE_FLOOR_BYTES), _MERGE_CAP_BYTES)
     line = 1
@@ -153,6 +189,31 @@ def _candidate_block(laser_b, ring_b, fsr_b, tr_b, j):
     return d, ok
 
 
+def _searchsorted_rows(keys: jax.Array, vals: jax.Array, side: str) -> jax.Array:
+    """Row-wise ``searchsorted`` over the last axis, phrased as a fixed-depth
+    vectorized bisection.
+
+    keys: (..., A) ascending per row; vals: (..., V) (same leading dims);
+    returns (..., V) int32 insertion points.  ``jnp.searchsorted`` (vmapped)
+    and scatter both lower to serial per-element loops on CPU XLA, and a
+    broadcast compare-reduction materializes the (..., V, A) tensor — this
+    keeps per-step scratch at O(V) rows and runs as log2(A) batched gathers.
+    """
+    a = keys.shape[-1]
+    lo = jnp.zeros(vals.shape, jnp.int32)
+    hi = jnp.full(vals.shape, a, jnp.int32)
+    for _ in range(max(1, math.ceil(math.log2(a + 1)))):
+        mid = (lo + hi) >> 1
+        km = jnp.take_along_axis(keys, jnp.minimum(mid, a - 1), axis=-1)
+        pred = (km <= vals) if side == "right" else (km < vals)
+        active = lo < hi                       # mid is in-range iff active
+        lo = jnp.where(active & pred, mid + 1, lo)
+        hi = jnp.where(active & ~pred, mid, hi)
+    return lo
+
+
+
+
 def build_search_tables(
     sys: SystemBatch,
     tr_mean: float,
@@ -179,15 +240,22 @@ def build_search_tables(
     plan = merge_plan(T, N, max_alias=max_alias, max_entries=max_entries)
     lb, rb = plan.line_block, plan.ring_block
     n_lb, n_rb = N // lb, N // rb
+    m = lb * n_j
 
+    # L == 1 needs no block sort: descending-j enumeration makes the one
+    # line's deltas ascend, and a rotation parks the masked run at the end
+    # (see the module docstring for why within-line tie order is free).
     j = jnp.arange(-max_alias, max_alias + 1, dtype=jnp.float32)  # (J,)
+    if lb == 1:
+        j = j[::-1]
     tr = tr_mean * sys.tr_unit                                    # (T, N)
     laser, ring, fsr = sys.laser, sys.ring, sys.fsr
 
     def body(step, carry):
         delta, wl = carry
-        # Line blocks ascend for each ring block: the stable merge then sees
-        # candidates in dense flat order (line-major, alias-minor).
+        # Line blocks ascend for each ring block: the rank-merge then sees
+        # candidates in dense flat order (line-major, alias-minor), so
+        # buffer entries always hold the smaller flat indices.
         l0 = (step // n_rb) * lb
         r0 = (step % n_rb) * rb
         laser_b = jax.lax.dynamic_slice_in_dim(laser, l0, lb, axis=1)
@@ -203,32 +271,77 @@ def build_search_tables(
                 vis = jax.lax.dynamic_slice_in_dim(visible, r0, rb, axis=1)
                 vis = jax.lax.dynamic_slice_in_dim(vis, l0, lb, axis=2)
                 ok = ok & vis[:, :, :, None]
-        blk_d = jnp.where(ok, d, SENTINEL).reshape(d.shape[0], rb, lb * n_j)
-        blk_w = jnp.broadcast_to(
-            l0 + jnp.arange(lb, dtype=jnp.int32)[None, None, :, None], d.shape
-        ).reshape(d.shape[0], rb, lb * n_j)
+        blk_d = jnp.where(ok, d, SENTINEL).reshape(d.shape[0], rb, m)
+        if lb == 1:
+            # Ascending already, except the +inf run of the below-window
+            # aliases at the front: rotate it behind the valid run.  One
+            # line per block, so wl is constant and needs no permutation.
+            s = jnp.argmax(ok.reshape(d.shape[0], rb, m), axis=-1)
+            idx = (s[..., None] + jnp.arange(m, dtype=jnp.int32)) % m
+            blk_d = jnp.take_along_axis(blk_d, idx, axis=-1)
+            # Masked entries carry wl = -1 already (the dense output
+            # convention), so the loop carry needs no post-pass and XLA can
+            # alias it straight into the output buffer.
+            blk_w = jnp.where(jnp.isinf(blk_d), -1, l0.astype(jnp.int32))
+        else:
+            blk_w = jnp.where(
+                ok,
+                l0 + jnp.arange(lb, dtype=jnp.int32)[None, None, :, None],
+                -1,
+            ).reshape(d.shape[0], rb, m)
+            # Stable: tied candidates stay in flat (line-major/alias-minor)
+            # order, exactly like the dense stable argsort.
+            blk_d, blk_w = jax.lax.sort(
+                (blk_d, blk_w), dimension=-1, is_stable=True, num_keys=1
+            )
 
         buf_d = jax.lax.dynamic_slice_in_dim(delta, r0, rb, axis=1)
         buf_w = jax.lax.dynamic_slice_in_dim(wl, r0, rb, axis=1)
-        cat_d = jnp.concatenate([buf_d, blk_d], axis=-1)
-        cat_w = jnp.concatenate([buf_w, blk_w], axis=-1)
-        # Stable: buffer entries (all earlier flat candidate indices) win
-        # delta ties, exactly like the dense stable argsort.
-        srt_d, srt_w = jax.lax.sort(
-            (cat_d, cat_w), dimension=-1, is_stable=True, num_keys=1
+        # Merge-path ranks: rank_c = searchsorted(buf_d, blk_d, "right").
+        # "right" semantics make every buffer entry win delta ties against
+        # the block — the flat-index order — and block candidate k lands at
+        # pos_c[k], strictly ascending, tiling [0, e + m) with the buffer
+        # positions.  nc(g) inverts that map: the number of block
+        # candidates placed before output slot g, i.e.
+        # searchsorted(pos_c, g, "left").  Narrow blocks (the forced L=1
+        # tiling of paper-scale points) use a compare-reduction XLA fuses
+        # row-wise — measured ~4x faster than the bisection there — while
+        # wide blocks switch to the bisection so the (T, R, E, M) compare
+        # tensor is never materialized.
+        giota = jnp.arange(e, dtype=jnp.int32)
+        if m * e <= _RANK_FUSE_MAX:
+            rank_c = jnp.sum(
+                buf_d[..., None, :] <= blk_d[..., :, None], axis=-1,
+                dtype=jnp.int32,
+            )
+            pos_c = rank_c + jnp.arange(m, dtype=jnp.int32)       # (T, R, M)
+            nc = jnp.sum(
+                pos_c[..., None, :] < giota[:, None], axis=-1, dtype=jnp.int32
+            )                                                     # (T, R, E)
+        else:
+            rank_c = _searchsorted_rows(buf_d, blk_d, "right")
+            pos_c = rank_c + jnp.arange(m, dtype=jnp.int32)
+            nc = _searchsorted_rows(
+                pos_c, jnp.broadcast_to(giota, buf_d.shape), "left"
+            )
+        at_g = jnp.take_along_axis(pos_c, jnp.minimum(nc, m - 1), axis=-1)
+        src = jnp.where((nc < m) & (at_g == giota), e + nc, giota - nc)
+        out_d = jnp.take_along_axis(
+            jnp.concatenate([buf_d, blk_d], axis=-1), src, axis=-1
         )
-        delta = jax.lax.dynamic_update_slice_in_dim(
-            delta, srt_d[..., :e], r0, axis=1
+        out_w = jnp.take_along_axis(
+            jnp.concatenate([buf_w, blk_w], axis=-1), src, axis=-1
         )
-        wl = jax.lax.dynamic_update_slice_in_dim(wl, srt_w[..., :e], r0, axis=1)
+        delta = jax.lax.dynamic_update_slice_in_dim(delta, out_d, r0, axis=1)
+        wl = jax.lax.dynamic_update_slice_in_dim(wl, out_w, r0, axis=1)
         return delta, wl
 
     delta0 = jnp.full((T, N, e), SENTINEL, jnp.float32)
     wl0 = jnp.full((T, N, e), -1, jnp.int32)
     delta, wl = jax.lax.fori_loop(0, n_lb * n_rb, body, (delta0, wl0))
-    finite = jnp.isfinite(delta)
-    wl = jnp.where(finite, wl, -1)
-    n_valid = jnp.sum(finite, axis=-1).astype(jnp.int32)
+    # Sentinel wl is maintained inside the loop (blocks mask to -1 before
+    # the merge), so both carries alias the outputs — no full-table temps.
+    n_valid = jnp.sum(jnp.isfinite(delta), axis=-1).astype(jnp.int32)
     return SearchTables(delta=delta, wl=wl, n_valid=n_valid)
 
 

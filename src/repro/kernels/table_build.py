@@ -2,16 +2,20 @@
 
 For every (trial, ring) the wavelength sweep yields up to K = N*(2J+1)
 candidate peaks  delta = laser_k - ring_i - j*FSR_i  with 0 <= delta <= TR_i.
-The kernel streams the candidate axis in FSR-alias groups: each group
-contributes N*G candidates which are merged into a persistent sorted
-top-E buffer with one bitonic sort of M = pow2(E + N*G) rows — the same
-streaming top-E merge as ``repro.core.search_table.build_search_tables``.
+The kernel streams the candidate axis in FSR-alias groups and
+**rank-merges** each group into a persistent sorted top-E buffer — the
+kernel-shaped mirror of ``repro.core.search_table.build_search_tables``:
+only the *new* candidates are bitonic-sorted (pow2(N*G) rows, the full
+log^2 network), and the buffer join is a single bitonic *merge* of
+M = pow2(E + pow2(N*G)) rows.  The merge input [buffer (ascending), BIG
+pads, sorted block reversed (descending)] is ascending-then-descending —
+a valid bitonic sequence — so one log2(M)-stage ladder suffices instead
+of re-running the full log^2 sort over the buffer every group (at N=32,
+J=17 that is ~1.3x fewer compare-exchanges; ~2.7x at N=64, where the row
+bound forces single-alias groups and the old kernel re-sorted 17 times).
 The group size G is the largest that keeps M at or under ``_VMEM_ROWS``
 (256), so VMEM per ring is bounded by 256 rows instead of the dense
-K_pad = pow2(N*J) (1024 rows at N=32, J=17: a 4x working-set cut); when
-the whole candidate set fits the bound (e.g. N <= 16 at the test alias
-counts) one group covers every alias and the merge degenerates to the
-retired single-sort kernel — same stage count, no interpret-mode cost.
+K_pad = pow2(N*J) (1024 rows at N=32, J=17: a 4x working-set cut).
 
 Sort keys are (delta, flat candidate index = line*J + alias) compared
 lexicographically, so the (unstable) bitonic network still reproduces the
@@ -74,6 +78,33 @@ def _bitonic_sort(key, idx):
     return key, idx
 
 
+def _bitonic_merge(key, idx):
+    """One ascending bitonic *merge* ladder along axis 0 by (key, idx).
+
+    Input rows must form a bitonic sequence (here: ascending buffer, then
+    constant-BIG pads, then a descending block).  log2(M) compare-exchange
+    stages — the final merge stage of a bitonic sort, without the log^2
+    prefix that builds bitonicity from scratch.
+    """
+    k_len, tb = key.shape
+    stride = k_len // 2
+    while stride >= 1:
+        blocks = k_len // (2 * stride)
+        kr = key.reshape(blocks, 2, stride, tb)
+        ir = idx.reshape(blocks, 2, stride, tb)
+        a_k, b_k = kr[:, 0], kr[:, 1]
+        a_i, b_i = ir[:, 0], ir[:, 1]
+        swap = (a_k > b_k) | ((a_k == b_k) & (a_i > b_i))
+        new_a_k = jnp.where(swap, b_k, a_k)
+        new_b_k = jnp.where(swap, a_k, b_k)
+        new_a_i = jnp.where(swap, b_i, a_i)
+        new_b_i = jnp.where(swap, a_i, b_i)
+        key = jnp.stack([new_a_k, new_b_k], axis=1).reshape(k_len, tb)
+        idx = jnp.stack([new_a_i, new_b_i], axis=1).reshape(k_len, tb)
+        stride //= 2
+    return key, idx
+
+
 def _table_kernel(*refs, max_alias, m_pad, alias_group, has_vis):
     if has_vis:
         laser_ref, ring_ref, fsr_ref, tr_ref, vis_ref = refs[:5]
@@ -97,8 +128,8 @@ def _table_kernel(*refs, max_alias, m_pad, alias_group, has_vis):
         vis_i = (vis_ref[i, :, :] != 0) if has_vis else None
         key = jnp.full((e, tb), BIG, jnp.float32)
         idx = jnp.full((e, tb), idx_big, jnp.int32)
-        for g, group in enumerate(groups):  # streaming merge over alias groups
-            parts_k, parts_i = [key], [idx]
+        for g, group in enumerate(groups):  # streaming rank-merge over groups
+            parts_k, parts_i = [], []
             for jj, j in enumerate(group):
                 d = laser - ring_i - float(j) * fsr_i           # (N, TB)
                 ok = (d >= 0.0) & (d <= tr_i)
@@ -109,12 +140,28 @@ def _table_kernel(*refs, max_alias, m_pad, alias_group, has_vis):
                     jax.lax.broadcasted_iota(jnp.int32, (n, tb), 0) * n_j
                     + (g * alias_group + jj)
                 )
-            pad = m_pad - e - n * len(group)
-            if pad:
-                parts_k.append(jnp.full((pad, tb), BIG, jnp.float32))
-                parts_i.append(jnp.full((pad, tb), idx_big, jnp.int32))
-            key, idx = _bitonic_sort(
+            gb = n * len(group)
+            gb_pad = 1 << int(np.ceil(np.log2(gb)))
+            if gb_pad - gb:
+                parts_k.append(jnp.full((gb_pad - gb, tb), BIG, jnp.float32))
+                parts_i.append(jnp.full((gb_pad - gb, tb), idx_big, jnp.int32))
+            # Full sort of the new block only; the buffer is already sorted.
+            blk_k, blk_i = _bitonic_sort(
                 jnp.concatenate(parts_k, axis=0), jnp.concatenate(parts_i, axis=0)
+            )
+            # [buffer asc, (BIG, idx_big) pads, block desc] ascends to the
+            # compound maximum and then descends — bitonic, so one merge
+            # ladder joins buffer and block (masked candidates are
+            # (BIG, real idx) < (BIG, idx_big), keeping the pads maximal).
+            pad = m_pad - e - gb_pad
+            seq_k = [key] + (
+                [jnp.full((pad, tb), BIG, jnp.float32)] if pad else []
+            ) + [jnp.flip(blk_k, axis=0)]
+            seq_i = [idx] + (
+                [jnp.full((pad, tb), idx_big, jnp.int32)] if pad else []
+            ) + [jnp.flip(blk_i, axis=0)]
+            key, idx = _bitonic_merge(
+                jnp.concatenate(seq_k, axis=0), jnp.concatenate(seq_i, axis=0)
             )
             key, idx = key[:e], idx[:e]
 
@@ -138,11 +185,15 @@ def table_pallas(laser, ring, fsr, tr, vis=None, *, max_alias=8, max_entries=Non
     k = n * n_j
     e = 3 * n if max_entries is None else max_entries
     e = min(e, k)  # like the dense argsort, at most K entries exist
-    # Alias group: as many aliases per merge as fit the VMEM row bound
-    # (one group when K fits — the merge then degenerates to one sort).
-    rows = max(_VMEM_ROWS, 1 << int(np.ceil(np.log2(e + n))))
-    alias_group = min(n_j, max(1, (rows - e) // n))
-    m_pad = 1 << int(np.ceil(np.log2(e + n * alias_group)))
+    # Alias group: as many aliases per rank-merge as fit the VMEM row bound.
+    # The merge tile holds the buffer (E) plus the pow2-padded sorted block.
+    def tile_rows(g: int) -> int:
+        gb_pad = 1 << int(np.ceil(np.log2(n * g)))
+        return 1 << int(np.ceil(np.log2(e + gb_pad)))
+
+    rows = max(_VMEM_ROWS, tile_rows(1))
+    alias_group = max(g for g in range(1, n_j + 1) if tile_rows(g) <= rows)
+    m_pad = tile_rows(alias_group)
     grid = (t // TRIAL_BLOCK,)
     in_spec = pl.BlockSpec((n, TRIAL_BLOCK), lambda b: (0, b))
     has_vis = vis is not None

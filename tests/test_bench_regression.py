@@ -8,10 +8,13 @@ from benchmarks.check_regression import compare, main
 
 
 def _payload(full=False, **figure_times):
-    """figure_times: name -> (module_wall_ms, engine_ms | None)."""
+    """figure_times: name -> (module_wall_ms, engine_ms | None[, phases])."""
     records = []
-    for fig, (wall, engine) in figure_times.items():
+    for fig, times in figure_times.items():
+        wall, engine = times[0], times[1]
         derived = {} if engine is None else {"engine_ms": engine}
+        if len(times) > 2:
+            derived.update(times[2])  # per-phase *_ms breakdown fields
         records.append(
             {"figure": fig, "name": f"{fig}/row", "module_wall_ms": wall,
              "derived": derived}
@@ -44,6 +47,28 @@ def test_added_and_removed_figures_never_fail():
     assert regressions == []
     assert any("new_only" in n for n in notes)
     assert any("old_only" in n for n in notes)
+
+
+def test_phase_breakdown_fields_gated():
+    """Shared *_ms phase fields gate like engine_ms, keyed name:field."""
+    old = _payload(fig18=(1000.0, 100.0, {"table_ms": 50.0, "score_ms": 10.0}))
+    new = _payload(fig18=(1000.0, 100.0, {"table_ms": 120.0, "score_ms": 11.0}))
+    regressions, _ = compare(old, new)
+    assert [(r["kind"], r["name"]) for r in regressions] == [
+        ("record", "fig18/row:table_ms")
+    ]
+
+
+def test_phase_breakdown_missing_on_old_baseline_is_graceful():
+    """Old baselines without the breakdown produce notes, never failures,
+    and engine_ms keeps gating under its plain record name."""
+    old = _payload(fig18=(1000.0, 100.0))
+    new = _payload(fig18=(1000.0, 500.0, {"table_ms": 9e9}))
+    regressions, notes = compare(old, new)
+    assert [(r["kind"], r["name"]) for r in regressions] == [
+        ("record", "fig18/row")
+    ]
+    assert any("table_ms" in n and "only in new" in n for n in notes)
 
 
 def test_threshold_is_configurable():

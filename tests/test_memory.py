@@ -10,7 +10,7 @@ sweep on a user's machine.
 import jax
 import pytest
 
-from repro.configs.wdm import WDM32_G200
+from repro.configs.wdm import WDM32_G200, WDM64_G200
 from repro.core import evaluate_scheme, make_units
 from repro.core.sampling import instantiate
 from repro.core.search_table import build_search_tables, merge_plan
@@ -24,10 +24,12 @@ def _temp_bytes(lowered):
     return stats.temp_size_in_bytes
 
 
-def test_streaming_builder_compiled_temps_match_plan():
-    """The builder's compiled scratch stays within its own ``merge_plan``
-    accounting (tables + transient) at WDM32 bench scale."""
-    cfg = WDM32_G200
+@pytest.mark.parametrize("cfg_name", ["wdm32", "wdm64"])
+def test_streaming_builder_compiled_temps_match_plan(cfg_name):
+    """The rank-merge builder's compiled scratch stays within its own
+    ``merge_plan`` accounting (tables + transient) at WDM32/WDM64 bench
+    scale (measured ~22.3/50.6 MB vs plans of 22.6/73.6 MB)."""
+    cfg = {"wdm32": WDM32_G200, "wdm64": WDM64_G200}[cfg_name]
     units = make_units(cfg, seed=0, n_laser=24, n_ring=24)
     sys = instantiate(cfg, units)
     T, N = sys.laser.shape
@@ -38,14 +40,18 @@ def test_streaming_builder_compiled_temps_match_plan():
     assert _temp_bytes(lowered) <= plan.total_bytes
 
 
-def test_scheme_path_compiled_temps_wdm32():
+@pytest.mark.parametrize("cfg_name", ["wdm32", "wdm64"])
+def test_scheme_path_compiled_temps(cfg_name):
     """End-to-end scheme evaluation (tables + record phase + SSM + scoring)
-    at WDM32 bench scale: compiled temps stay within 1.5x of the engine's
-    per-point estimate.  The dense candidate tensor alone would be ~7x over
-    this bound (measured ~160 MB vs the ~34 MB allowance)."""
-    cfg = WDM32_G200
+    at WDM32/WDM64 bench scale: compiled temps stay within 2x of the
+    engine's per-point estimate (rank-merge measured at 1.63x/1.46x — the
+    extra over 1x is the fori_loop's double-buffered table carry plus the
+    SSM/scoring stages' own temps).  The dense candidate tensor alone would
+    blow this bound ~4x at WDM32 (measured ~160 MB vs the ~45 MB allowance)
+    long before it OOMs a paper-scale sweep on a user's machine."""
+    cfg = {"wdm32": WDM32_G200, "wdm64": WDM64_G200}[cfg_name]
     units = make_units(cfg, seed=0, n_laser=24, n_ring=24)
     trials = units.u_rlv.shape[0] * units.u_go.shape[0]
     lowered = evaluate_scheme.lower(cfg, units, "vtrs_ssm", 9.0)
-    bound = int(1.5 * scheme_point_bytes(cfg, trials))
+    bound = int(2.0 * scheme_point_bytes(cfg, trials))
     assert _temp_bytes(lowered) <= bound

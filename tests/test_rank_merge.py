@@ -1,0 +1,130 @@
+"""Always-on deterministic oracle tests for the rank-merge streaming builder.
+
+``tests/test_property.py`` carries the hypothesis variants of these checks,
+but that module skips wholesale when hypothesis is not installed — the
+bit-exactness contract of ``build_search_tables`` vs the dense oracle
+(entries, tie order, sentinels, n_valid) must hold in every environment, so
+the representative cases live here as plain parametrized tests: tie-heavy
+grid-quantized systems, TR > FSR multi-alias tables, fully-masked (dead)
+rings, 2-D/3-D visibility masks, the degenerate FSR == 0 system, and the
+forced single-line (L=1) tiling of paper-scale batches.
+"""
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ArbitrationConfig, DWDMGrid, make_units
+from repro.core.sampling import SystemBatch, instantiate
+from repro.core.search_table import (
+    build_search_tables,
+    build_search_tables_dense,
+    merge_plan,
+)
+
+
+@partial(jax.jit, static_argnames=("max_alias", "has_vis"))
+def _both_builders(sys, tr_mean, vis, max_alias, has_vis):
+    # Jitted together: the engine always runs the builder under jit, and
+    # XLA's fusion (FMA formation) differs between eager and compiled —
+    # bit-identity is contracted where production runs.
+    v = vis if has_vis else None
+    return (
+        build_search_tables(sys, tr_mean, visible=v, max_alias=max_alias),
+        build_search_tables_dense(sys, tr_mean, visible=v, max_alias=max_alias),
+    )
+
+
+def _assert_tables_identical(sys, tr_mean, vis=None, max_alias=8):
+    stream, dense = _both_builders(
+        sys, tr_mean, vis if vis is not None else jnp.zeros(()),
+        max_alias, vis is not None,
+    )
+    assert stream.delta.shape == dense.delta.shape
+    np.testing.assert_array_equal(np.asarray(stream.wl), np.asarray(dense.wl))
+    np.testing.assert_array_equal(
+        np.asarray(stream.n_valid), np.asarray(dense.n_valid)
+    )
+    assert np.array_equal(
+        np.asarray(stream.delta), np.asarray(dense.delta), equal_nan=True
+    )
+
+
+def _vis(kind, key, T, N):
+    if kind == "none":
+        return None
+    if kind == "2d":
+        return jax.random.bernoulli(key, 0.6, (T, N))
+    if kind == "3d":
+        return jax.random.bernoulli(key, 0.5, (T, N, N))
+    assert kind == "dead_rings", kind
+    # dead_rings: whole rings see nothing -> n_valid == 0 rows
+    vis = jax.random.bernoulli(key, 0.5, (T, N, N))
+    return vis.at[: T // 2].set(False)
+
+
+@pytest.mark.parametrize(
+    "n_ch,max_alias,tr_mean,vis_kind",
+    [
+        (4, 8, 9.5, "none"),
+        (8, 0, 3.0, "none"),       # no aliasing at all
+        (8, 8, 5.0, "2d"),
+        (8, 8, 9.5, "3d"),
+        (8, 8, 9.5, "dead_rings"),
+        (8, 3, 30.0, "none"),      # TR >> FSR: multi-alias entries
+        (16, 2, 5.0, "none"),
+        (16, 8, 30.0, "3d"),       # multi-alias + per-ring masking
+    ],
+)
+def test_rank_merge_matches_dense_oracle(n_ch, max_alias, tr_mean, vis_kind):
+    """Streaming rank-merge == dense full-sort oracle, bit for bit."""
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=n_ch))
+    sys = instantiate(cfg, make_units(cfg, seed=7, n_laser=4, n_ring=4))
+    T, N = sys.laser.shape
+    vis = _vis(vis_kind, jax.random.key(3), T, N)
+    _assert_tables_identical(sys, tr_mean, vis, max_alias)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("max_alias", [1, 3])
+def test_rank_merge_tie_order_on_quantized_systems(seed, max_alias):
+    """Grid-quantized systems make many candidate deltas *exactly* equal
+    across (line, alias) pairs; the rank pass must reproduce the dense
+    stable argsort's tie order (flat candidate index) bit-for-bit."""
+    rng = np.random.default_rng(seed)
+    T, N = 12, 8
+    sys = SystemBatch(
+        laser=jnp.asarray(rng.integers(0, 8, (T, N)).astype(np.float32) * 0.25),
+        ring=jnp.asarray(rng.integers(-4, 4, (T, N)).astype(np.float32) * 0.25),
+        fsr=jnp.asarray(rng.integers(1, 4, (T, N)).astype(np.float32) * 0.25),
+        tr_unit=jnp.ones((T, N), jnp.float32),
+    )
+    _assert_tables_identical(sys, 3.0, None, max_alias)
+
+
+def test_rank_merge_degenerate_fsr_zero():
+    """FSR == 0 collapses every alias of a line onto one delta — the
+    maximal tie pile-up; the first J' aliases of each reachable line must
+    surface in flat order exactly as the dense stable argsort emits them."""
+    T, N = 8, 4
+    rng = np.random.default_rng(11)
+    sys = SystemBatch(
+        laser=jnp.asarray(rng.integers(0, 6, (T, N)).astype(np.float32) * 0.5),
+        ring=jnp.asarray(rng.integers(-3, 3, (T, N)).astype(np.float32) * 0.5),
+        fsr=jnp.zeros((T, N), jnp.float32),
+        tr_unit=jnp.ones((T, N), jnp.float32),
+    )
+    _assert_tables_identical(sys, 4.0, None, 8)
+
+
+def test_rank_merge_forced_single_line_tiling():
+    """Large trial counts force the L=1 plan (the paper-scale tiling whose
+    sort-free rotation + fused rank path is the tentpole's hot loop)."""
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=8))
+    sys = instantiate(cfg, make_units(cfg, seed=5, n_laser=100, n_ring=200))
+    T, N = sys.laser.shape
+    plan = merge_plan(T, N)
+    assert plan.line_block == 1, plan  # the test exists to cover this path
+    _assert_tables_identical(sys, 5.0, None, 8)

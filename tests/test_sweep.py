@@ -402,3 +402,46 @@ def test_scheme_registry_errors():
         evaluate_scheme(cfg, _units(cfg, n=2), "no_such_scheme", 5.0)
     with pytest.raises(ValueError, match="policy"):
         register_scheme("bad_policy_scheme", lambda c, t, s: None, policy="nope")
+
+
+# ------------------------------------------------- backend -> arbiters ---
+
+_SPY_BACKENDS = []
+
+
+def test_backend_reaches_registered_arbiter():
+    """SweepRequest.backend is forwarded into the scheme's arbiter.
+
+    The spy arbiter records the backend value it receives at trace time;
+    the legacy 3-arg lambda above (``test_seq_clone``) proves old-style
+    arbiters still register (``_normalize_arbiter`` swallows the kwarg)."""
+    name = "test_backend_spy"
+    if name not in registered_schemes():
+        def spy(cfg, tables, spec, *, backend=None):
+            _SPY_BACKENDS.append(backend)
+            return sequential_tuning(tables, spec)
+
+        register_scheme(name, spy)
+    cfg = WDM8_G200
+    units = _units(cfg, n=4)
+    _SPY_BACKENDS.clear()
+    sweep_scheme(cfg, units, name, {"tr_mean": TRS[:1]}, backend="jnp")
+    assert "jnp" in _SPY_BACKENDS
+    _SPY_BACKENDS.clear()
+    sweep_scheme(cfg, units, name, {"tr_mean": TRS[:2]})
+    assert _SPY_BACKENDS and set(_SPY_BACKENDS) == {None}
+
+
+@pytest.mark.parametrize("backend", ["jnp", "interpret"])
+def test_protocol_scheme_backend_parity(backend):
+    """A *registered* protocol scheme honors SweepRequest.backend — the
+    kernel-backed masked re-search loop must match core jnp bit-for-bit."""
+    cfg = WDM8_G200
+    units = _units(cfg, n=4)
+    axes = {"tr_mean": TRS[:2]}
+    base = sweep_scheme(cfg, units, "protocol_lta_h1", axes)
+    got = sweep_scheme(cfg, units, "protocol_lta_h1", axes, backend=backend)
+    for field in ("cafp", "afp", "lock_err", "order_err"):
+        a = np.asarray(getattr(got, field))
+        b = np.asarray(getattr(base, field))
+        assert np.array_equal(a, b), (backend, field)
