@@ -1,13 +1,16 @@
 # CI entry points (ROADMAP "wire into CI"): `make ci` is what the GitHub
 # workflow runs — the tier-1 suite, the BENCH-gate self-test, the kernel
 # microbenches (table-build/rank-merge + matching + the WDM64 sweep smoke;
-# no figure sweeps), and a tiny-grid fig18 smoke (2x2 grid, low trials) so
-# the paper-scale WDM32 path stays green without the full bench-gate cost.
+# no figure sweeps), a tiny-grid fig18 smoke (2x2 grid, low trials) so the
+# paper-scale WDM32 path stays green, and a tiny-timeline fig20 smoke so
+# the temporal re-arbitration scan stays green — both without the full
+# bench-gate cost.
 PY ?= python
 
-.PHONY: ci tier1 bench-selftest bench-kernel bench-fig18-smoke bench bench-gate
+.PHONY: ci tier1 bench-selftest bench-kernel bench-fig18-smoke \
+        bench-fig20-smoke bench bench-gate
 
-ci: tier1 bench-selftest bench-kernel bench-fig18-smoke
+ci: tier1 bench-selftest bench-kernel bench-fig18-smoke bench-fig20-smoke
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -20,6 +23,9 @@ bench-kernel:
 
 bench-fig18-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.fig18_wdm32_cafp
+
+bench-fig20-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.fig20_temporal_relock
 
 # Regenerate the BENCH trajectory file and gate it against the committed
 # baseline (>20% per-figure / per-record slowdowns fail).  On noisy shared

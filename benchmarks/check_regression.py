@@ -59,9 +59,17 @@ def _default_threshold() -> float:
     return value
 
 
+def _timed_out(rec: dict) -> bool:
+    """Marker record written by ``benchmarks.run --timeout`` for a module
+    that blew its wall budget — carries no real timings."""
+    return bool(rec.get("derived", {}).get("timeout"))
+
+
 def _figure_walls(payload: dict) -> Dict[str, float]:
     walls: Dict[str, float] = {}
     for rec in payload.get("records", []):
+        if _timed_out(rec):
+            continue  # treated as missing: one-sided note, never a failure
         walls[rec["figure"]] = max(
             walls.get(rec["figure"], 0.0), float(rec.get("module_wall_ms", 0.0))
         )
@@ -77,6 +85,8 @@ def _record_times(payload: dict) -> Dict[str, float]:
     diff become one-sided notes in ``compare`` — never failures."""
     times: Dict[str, float] = {}
     for rec in payload.get("records", []):
+        if _timed_out(rec):
+            continue
         for field, value in rec.get("derived", {}).items():
             if not field.endswith("_ms") or value is None:
                 continue
@@ -158,6 +168,20 @@ def self_test() -> int:
     tight, _ = compare(payload(f=(1000.0, None)), payload(f=(1100.0, None)),
                        threshold=0.05)
     checks.append(("threshold configurable", len(tight) == 1))
+    # A timed-out module is *missing*, not regressed: its marker record
+    # must produce a one-sided note on both diff directions, never a fail.
+    timeout_payload = {
+        "schema": "bench.v1", "full": False,
+        "records": [{"figure": "f", "name": "f/TIMEOUT",
+                     "module_wall_ms": 0.0,
+                     "derived": {"timeout": True, "budget_s": 60}}],
+    }
+    ok, notes = compare(payload(f=(1000.0, 100.0)), timeout_payload)
+    checks.append(("timed-out candidate treated as missing",
+                   ok == [] and len(notes) == 2))
+    ok, notes = compare(timeout_payload, payload(f=(1000.0, 100.0)))
+    checks.append(("timed-out baseline treated as missing",
+                   ok == [] and len(notes) == 2))
     prior = os.environ.get("BENCH_GATE_THRESHOLD")
     try:
         os.environ["BENCH_GATE_THRESHOLD"] = "0.5"

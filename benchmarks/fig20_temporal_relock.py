@@ -1,0 +1,214 @@
+"""Fig. 20 (beyond paper) — temporal re-arbitration: incremental re-lock vs
+cold re-arbitration under drift, aging, comb wander, and lane hot-swap.
+
+Every scenario drives ``run_timeline`` twice over the same drift timeline
+(``configs.wdm.DRIFT_SCENARIOS``): warm (the protocol resumes from its own
+carried lock state, with transactional make-before-break commits and a
+plateau halt) and cold (full re-arbitration each step, same engine
+settings).  The acceptance comparison masks to the (step, trial) pairs
+where a complete lock set remains *feasible* — on infeasible steps the warm
+path honestly escalates unresolved trials to a cold rerun and pays both
+passes, which is the controller a real system would run, not a win to gate
+on.  Step 0 is excluded: both modes start cold there.
+
+Studies:
+
+  * WDM16 scenarios (x WDM32 under ``--full``) — per-step probe/round/
+    churn/lock trajectories and the feasible-masked warm-vs-cold gate;
+  * chain-depth ladder on the hot-swap scenario — does incremental re-lock
+    still win when augmenting is depth-limited?
+  * ``seq_retry`` quality row — a one-shot oblivious arbiter re-run cold
+    each step: lock counts match, but churn shows why stateful re-lock
+    matters (every drift step reshuffles rings that never had to move);
+  * hysteresis margin sweep on the comb-wander scenario — how much margin
+    the revalidator needs before marginal locks stop thrashing
+    (break/re-lock cycles) as the comb sweeps back and forth.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.wdm import drift_timeline
+from repro.core import make_units, run_timeline, slice_timeline
+
+from .common import timed_steady
+
+SCENARIOS16 = ("wdm16-thermal", "wdm16-aging", "wdm16-comb", "wdm16-hotswap")
+SCENARIOS32 = ("wdm32-thermal", "wdm32-hotswap")
+DEPTH_SCHEMES = ("protocol_lta_h1", "protocol_lta_h2", "protocol_lta_h4",
+                 "protocol_lta")
+#: operating TR for every temporal study, in units of grid spacing
+TR_X = 4.0
+
+
+def _trials(full: bool) -> int:
+    return 32 if full else 12
+
+
+def _means(a) -> list:
+    """(S, T) per-trial stat -> per-step trial means, rounded."""
+    return [round(float(v), 2) for v in np.asarray(a, np.float32).mean(axis=1)]
+
+
+def _run_pair(name: str, scheme: str, n: int, seed: int = 33):
+    """Warm and cold timelines for one scenario; returns (row dict, gates)."""
+    cfg, tl = drift_timeline(name)
+    units = make_units(cfg, seed=seed, n_laser=n, n_ring=n)
+    var = {"tr_mean": TR_X * cfg.grid.grid_spacing}
+    (_, warm), warm_ms = timed_steady(
+        run_timeline, cfg, units, tl, var, scheme=scheme, warm=True
+    )
+    (_, cold), cold_ms = timed_steady(
+        run_timeline, cfg, units, tl, var, scheme=scheme, warm=False
+    )
+    # Feasibility is a property of the drifted system, not the mode.
+    feas = np.asarray(warm.feasible, bool)
+    mask = feas[1:]                       # step 0 is cold for both modes
+    wp = np.asarray(warm.probes, np.float32)[1:]
+    cp = np.asarray(cold.probes, np.float32)[1:]
+    wr = np.asarray(warm.rounds, np.float32)[1:]
+    cr = np.asarray(cold.rounds, np.float32)[1:]
+    if mask.any():
+        warm_probes = float(wp[mask].mean())
+        cold_probes = float(cp[mask].mean())
+        warm_rounds = float(wr[mask].mean())
+        cold_rounds = float(cr[mask].mean())
+    else:  # degenerate scenario: nothing feasible to compare
+        warm_probes = cold_probes = warm_rounds = cold_rounds = 0.0
+    locked_ok = bool(
+        np.all(np.asarray(warm.locked) >= np.asarray(cold.locked))
+    )
+    derived = {
+        "steps": int(feas.shape[0]),
+        "feasible_frac": _means(feas),
+        "warm_probes": _means(warm.probes),
+        "cold_probes": _means(cold.probes),
+        "warm_rounds": _means(warm.rounds),
+        "cold_rounds": _means(cold.rounds),
+        "warm_churn": _means(warm.churn),
+        "cold_churn": _means(cold.churn),
+        "warm_locked": _means(warm.locked),
+        "cold_locked": _means(cold.locked),
+        "feasible_warm_probes": round(warm_probes, 2),
+        "feasible_cold_probes": round(cold_probes, 2),
+        "feasible_warm_rounds": round(warm_rounds, 2),
+        "feasible_cold_rounds": round(cold_rounds, 2),
+        "warm_wins_probes": bool(warm_probes < cold_probes),
+        "warm_wins_rounds": bool(warm_rounds <= cold_rounds),
+        "warm_locked_ge_cold": locked_ok,
+        "warm_ms": round(warm_ms, 1),
+        "cold_ms": round(cold_ms, 1),
+    }
+    gates = (derived["warm_wins_probes"], derived["warm_wins_rounds"],
+             locked_ok)
+    return derived, gates
+
+
+def run(full: bool = False):
+    n = _trials(full)
+    rows = []
+
+    # --- scenario sweep: incremental vs cold, feasible-masked gate --------
+    gate_bits = []
+    scenarios = SCENARIOS16 + (SCENARIOS32 if full else ())
+    for name in scenarios:
+        derived, gates = _run_pair(name, "protocol_lta", n)
+        if name in SCENARIOS16:
+            gate_bits.append(gates)
+        rows.append((f"fig20/{name}/protocol_lta", derived))
+    rows.append(
+        (
+            "fig20/summary",
+            {
+                "wdm16_scenarios": len(SCENARIOS16),
+                "warm_wins_probes_all": bool(all(g[0] for g in gate_bits)),
+                "warm_wins_rounds_all": bool(all(g[1] for g in gate_bits)),
+                "warm_locked_ge_cold_all": bool(all(g[2] for g in gate_bits)),
+            },
+        )
+    )
+
+    # --- chain-depth ladder on the hot-swap scenario ----------------------
+    ladder = {"scheme": [], "feasible_warm_probes": [],
+              "feasible_cold_probes": [], "warm_wins_probes": []}
+    for scheme in DEPTH_SCHEMES:
+        derived, _ = _run_pair("wdm16-hotswap", scheme, n)
+        ladder["scheme"].append(scheme)
+        ladder["feasible_warm_probes"].append(derived["feasible_warm_probes"])
+        ladder["feasible_cold_probes"].append(derived["feasible_cold_probes"])
+        ladder["warm_wins_probes"].append(derived["warm_wins_probes"])
+    rows.append(("fig20/wdm16-hotswap/depth_ladder", ladder))
+
+    # --- seq_retry: one-shot oblivious arbitration re-run cold each step --
+    cfg, tl = drift_timeline("wdm16-comb")
+    tl4 = slice_timeline(tl, 0, 4)
+    units = make_units(cfg, seed=33, n_laser=8, n_ring=8)
+    var = {"tr_mean": TR_X * cfg.grid.grid_spacing}
+    (_, sr), sr_ms = timed_steady(
+        run_timeline, cfg, units, tl4, var, scheme="seq_retry", warm=False
+    )
+    (_, pl), _ = timed_steady(
+        run_timeline, cfg, units, tl4, var, scheme="protocol_lta", warm=True
+    )
+    rows.append(
+        (
+            "fig20/wdm16-comb/seq_retry_cold",
+            {
+                "locked": _means(sr.locked),
+                "churn": _means(sr.churn),
+                "protocol_warm_locked": _means(pl.locked),
+                "protocol_warm_churn": _means(pl.churn),
+                "engine_ms": round(sr_ms, 1),
+            },
+        )
+    )
+
+    # --- hysteresis margin sweep (comb wander: locks thrash at the edge) --
+    hx = (0.0, 0.1, 0.25, 0.5)
+    units = make_units(cfg, seed=33, n_laser=n, n_ring=n)
+    hrow = {"hysteresis_x_spacing": list(hx), "total_broken": [],
+            "total_churn": [], "total_probes": [], "mean_locked": []}
+    for h in hx:
+        _, stats = run_timeline(
+            cfg, units, tl, var, scheme="protocol_lta", warm=True,
+            hysteresis=h * cfg.grid.grid_spacing,
+        )
+        hrow["total_broken"].append(round(float(
+            np.asarray(stats.broken, np.float32).sum(axis=0).mean()), 2))
+        hrow["total_churn"].append(round(float(
+            np.asarray(stats.churn, np.float32).sum(axis=0).mean()), 2))
+        hrow["total_probes"].append(round(float(
+            np.asarray(stats.probes, np.float32).sum(axis=0).mean()), 1))
+        hrow["mean_locked"].append(round(float(
+            np.asarray(stats.locked, np.float32).mean()), 2))
+    rows.append(("fig20/wdm16-comb/hysteresis", hrow))
+    return rows
+
+
+def smoke(trials: int = 4) -> dict:
+    """Tiny-timeline CI smoke (``make ci``): the full temporal path — drift
+    scenario resolution, warm scan with cold-fallback escalation, cold
+    baseline — on a 3-step slice with 16 trials.  Asserts the structural
+    invariants (shapes, warm never locking fewer than cold) without pinning
+    the noisy probe comparison a 16-trial batch can't support."""
+    cfg, tl = drift_timeline("wdm16-hotswap")
+    tl = slice_timeline(tl, 0, 3)
+    units = make_units(cfg, seed=5, n_laser=trials, n_ring=trials)
+    var = {"tr_mean": TR_X * cfg.grid.grid_spacing}
+    _, warm = run_timeline(cfg, units, tl, var, warm=True)
+    _, cold = run_timeline(cfg, units, tl, var, warm=False)
+    t = trials * trials
+    assert np.asarray(warm.probes).shape == (3, t)
+    assert np.all(np.asarray(warm.locked) >= np.asarray(cold.locked))
+    assert np.array_equal(np.asarray(warm.feasible), np.asarray(cold.feasible))
+    out = {
+        "warm_probes": _means(warm.probes),
+        "cold_probes": _means(cold.probes),
+        "warm_locked": _means(warm.locked),
+    }
+    print(f"fig20 smoke OK: {out}")
+    return out
+
+
+if __name__ == "__main__":
+    smoke()

@@ -34,10 +34,6 @@ def run(full: bool = False):
         spacing = base.grid.grid_spacing
         rlvs = (np.array([0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0]) * spacing)
         for case, policy, order in CASES:
-            if policy == "lta" and len(base.s) > 32:
-                # adjacency_bitmask is int32 (N <= 32): ideal-LtA matching is
-                # unavailable at 64 channels; the LtC rows still run.
-                continue
             cfg = base.with_orders(order)
             units = make_units(cfg, seed=5, n_laser=n, n_ring=n)
             req = SweepRequest(cfg=cfg, units=units, policy=policy,

@@ -9,15 +9,49 @@ such as ``table_ms``/``arbitrate_ms``/``score_ms``) — the derived grids are
 deterministic, so only the timings vary.  On noisy shared machines (PR 3 measured 23/51 records of
 identical code drifting >20% between single runs on a 2-core container)
 median-of-3 is what makes the ``check_regression`` wall-time gate usable.
+
+``--timeout S`` arms a per-module alarm (SIGALRM; POSIX main thread only).
+A module that hangs past it is recorded as a single marker record
+(``derived: {"timeout": true}``), every module that already finished keeps
+its records, and the JSON is still written — one wedged figure no longer
+loses the whole run.  ``check_regression`` treats marker records as missing
+(note, never a failure).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 import statistics
 import time
 
 from .common import write_json
+
+
+class ModuleTimeout(Exception):
+    """A benchmark module exceeded the per-module wall budget."""
+
+
+def _run_with_timeout(fn, seconds: int | None):
+    """Run ``fn()`` under a SIGALRM budget; raises ModuleTimeout on expiry.
+
+    No-op passthrough when ``seconds`` is None/0 or SIGALRM is unavailable
+    (non-POSIX or non-main-thread): the run degrades to untimed, never
+    breaks.
+    """
+    if not seconds or not hasattr(signal, "SIGALRM"):
+        return fn()
+
+    def on_alarm(signum, frame):
+        raise ModuleTimeout()
+
+    prev = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(seconds)
+    try:
+        return fn()
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 def main() -> None:
@@ -30,9 +64,15 @@ def main() -> None:
     ap.add_argument("--runs", type=int, default=1, metavar="N",
                     help="repeat each module N times; record median wall "
                          "and *_ms timings (noise-robust BENCH files)")
+    ap.add_argument("--timeout", type=int, default=0, metavar="S",
+                    help="per-module wall budget in seconds (0 = off); a "
+                         "module over budget becomes a timeout marker "
+                         "record and the run continues")
     args = ap.parse_args()
     if args.runs < 1:
         ap.error("--runs must be >= 1")
+    if args.timeout < 0:
+        ap.error("--timeout must be >= 0")
 
     from . import (
         beyond_lta,
@@ -47,6 +87,7 @@ def main() -> None:
         fig17_retry_budget,
         fig18_wdm32_cafp,
         fig19_lta_protocol,
+        fig20_temporal_relock,
         kernel_bench,
         roofline_report,
     )
@@ -63,6 +104,7 @@ def main() -> None:
         fig17_retry_budget,
         fig18_wdm32_cafp,
         fig19_lta_protocol,
+        fig20_temporal_relock,
         kernel_bench,
         roofline_report,
         beyond_lta,
@@ -74,14 +116,34 @@ def main() -> None:
         if args.only and args.only not in mod_name:
             continue
         walls, timing_runs = [], []
-        for _ in range(args.runs):
-            t0 = time.time()
-            rows = mod.run(full=args.full)
-            walls.append((time.time() - t0) * 1e3)
-            timing_runs.append(
-                {name: {k: v for k, v in d.items() if k.endswith("_ms")}
-                 for name, d in rows}
+        try:
+            for _ in range(args.runs):
+                t0 = time.time()
+                rows = _run_with_timeout(
+                    lambda: mod.run(full=args.full), args.timeout
+                )
+                walls.append((time.time() - t0) * 1e3)
+                timing_runs.append(
+                    {name: {k: v for k, v in d.items() if k.endswith("_ms")}
+                     for name, d in rows}
+                )
+        except ModuleTimeout:
+            # One wedged module must not lose the run: emit a marker record
+            # (check_regression treats it as missing) and move on.  Partial
+            # repeats are discarded — a half-measured median is not a median.
+            print(f"{mod_name}/TIMEOUT,0,{{}}")
+            records.append(
+                {
+                    "figure": mod_name,
+                    "name": f"{mod_name}/TIMEOUT",
+                    "module_wall_ms": 0.0,
+                    "derived": {"timeout": True,
+                                "budget_s": args.timeout},
+                }
             )
+            if args.json_out:
+                write_json(args.json_out, records, full=args.full)
+            continue
         wall_ms = statistics.median(walls)
         if args.runs > 1:
             # Grids are deterministic across runs; only timings vary.  Keep
@@ -103,6 +165,9 @@ def main() -> None:
                     "derived": derived,
                 }
             )
+        if args.json_out:
+            # incremental flush: a crash mid-suite keeps everything finished
+            write_json(args.json_out, records, full=args.full)
     if args.json_out:
         write_json(args.json_out, records, full=args.full)
 

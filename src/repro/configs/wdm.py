@@ -11,9 +11,9 @@ WDM32_G200 = wdm_config(n_ch=32, ghz=200)
 WDM32_G400 = wdm_config(n_ch=32, ghz=400)
 # 64 channels (§VII scalability; the channel counts deployment studies in
 # PAPERS.md operate at).  The rank-merge streaming tables keep a scheme
-# point inside the sweep engine's chunk budget here; note the LtA ideal
-# path's int32 adjacency bitmask tops out at N=32, so 64-channel sweeps use
-# LtC-conditioned schemes (e.g. vtrs_ssm) — see the ROADMAP backend matrix.
+# point inside the sweep engine's chunk budget here, and the multiword
+# (2x uint32) adjacency bitmasks in repro.core.matching carry the ideal-LtA
+# matching path to this width — see the ROADMAP backend matrix.
 WDM64_G200 = wdm_config(n_ch=64, ghz=200)
 WDM64_G400 = wdm_config(n_ch=64, ghz=400)
 
@@ -27,3 +27,50 @@ WDM_CONFIGS = {
     "wdm64-g200": WDM64_G200,
     "wdm64-g400": WDM64_G400,
 }
+
+# --- temporal drift scenarios (re-arbitration under drift / aging / failure)
+#
+# Each entry: (wdm config key, timeline spec).  Drift magnitudes are stored
+# as multiples of the config's grid spacing so a scenario means the same
+# thing at 200 and 400 GHz; ``drift_timeline`` resolves them to nm and
+# builds the concrete ``repro.core.temporal.Timeline``.  Events are
+# (step, kind, channel) with liveness persisting from ``step`` on.
+DRIFT_SCENARIOS = {
+    # slow uniform thermal ramp: every lock drifts red-ward together
+    "wdm16-thermal": ("wdm16-g200", dict(n_steps=8, thermal=0.6)),
+    # differential aging tilt: high-index rings outrun their locks first
+    "wdm16-aging": ("wdm16-g200", dict(n_steps=8, aging=0.5)),
+    # comb-source wander: sinusoidal, locks break then become feasible again
+    "wdm16-comb": ("wdm16-g200", dict(n_steps=8, comb=(0.4, 8.0))),
+    # mild ramp plus a lane failure and hot-swap recovery mid-timeline
+    "wdm16-hotswap": (
+        "wdm16-g200",
+        dict(n_steps=8, thermal=0.3,
+             events=((3, "lane_kill", 5), (6, "lane_swap", 5))),
+    ),
+    "wdm32-thermal": ("wdm32-g200", dict(n_steps=6, thermal=0.6)),
+    "wdm32-hotswap": (
+        "wdm32-g200",
+        dict(n_steps=6, comb=(0.3, 6.0),
+             events=((2, "lane_kill", 11), (4, "lane_swap", 11))),
+    ),
+}
+
+
+def drift_timeline(name: str):
+    """Resolve a ``DRIFT_SCENARIOS`` entry -> (cfg, Timeline) with drift
+    multipliers scaled by the config's grid spacing [nm]."""
+    from repro.core.temporal import make_timeline  # local: avoid import cycle
+
+    cfg_key, spec = DRIFT_SCENARIOS[name]
+    cfg = WDM_CONFIGS[cfg_key]
+    sp = cfg.grid.grid_spacing
+    kw = dict(spec)
+    n_steps = kw.pop("n_steps")
+    for key in ("thermal", "aging"):
+        if key in kw:
+            kw[key] = kw[key] * sp
+    if "comb" in kw:
+        amp, period = kw["comb"]
+        kw["comb"] = (amp * sp, period)
+    return cfg, make_timeline(n_steps, len(cfg.s), **kw)

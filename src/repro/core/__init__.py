@@ -47,9 +47,20 @@ from .api import (  # noqa: F401
 from .protocol import (  # noqa: F401
     ProtocolState,
     ProtocolStats,
+    cold_state,
     masked_first_entry,
+    revalidate_state,
     run_protocol,
     run_protocol_trace,
+)
+from .temporal import (  # noqa: F401
+    TemporalStats,
+    Timeline,
+    make_timeline,
+    restore_campaign,
+    run_timeline,
+    save_campaign,
+    slice_timeline,
 )
 from .sweep import (  # noqa: F401
     SweepRequest,

@@ -80,16 +80,40 @@ def _sorting_network(n: int) -> tuple:
 
 
 def adjacency_bitmask(reach: jax.Array) -> jax.Array:
-    """(T, N, N) bool reach[t, ring, wl] -> (T, N) int32 per-ring wl bitmask."""
+    """(T, N, N) bool reach[t, ring, wl] -> packed per-ring wl bitmasks.
+
+    N <= 32 packs into a single int32 word per ring — (T, N), the layout the
+    Pallas matching kernel consumes, unchanged bit-for-bit.  Wider systems
+    (e.g. WDM64) pack into ``ceil(N / 32)`` little-endian uint32 words —
+    (T, N, W) — consumed by the multiword Kuhn path in ``max_matching``.
+    """
     n = reach.shape[-1]
     if n > 32:
-        raise ValueError(
-            f"adjacency_bitmask packs wavelengths into int32 and supports at "
-            f"most 32 channels, got N={n}; matching-based (LtA) paths are "
-            f"unavailable at this width — use an LtC-conditioned policy"
-        )
+        return _pack_words(reach)
     bits = (1 << jnp.arange(n, dtype=jnp.int32))[None, None, :]
     return jnp.sum(jnp.where(reach, bits, 0), axis=-1).astype(jnp.int32)
+
+
+def _pack_words(bits: jax.Array) -> jax.Array:
+    """(..., n) bool -> (..., W) uint32, little-endian 32-bit words."""
+    n = bits.shape[-1]
+    w = -(-n // 32)
+    pad = w * 32 - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bool)], axis=-1
+        )
+    lanes = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    grouped = bits.reshape(bits.shape[:-1] + (w, 32))
+    return jnp.sum(jnp.where(grouped, lanes, jnp.uint32(0)), axis=-1,
+                   dtype=jnp.uint32)
+
+
+def _unpack_words(words: jax.Array, n: int) -> jax.Array:
+    """(..., W) uint32 -> (..., n) bool."""
+    idx = jnp.arange(n) // 32
+    shift = jnp.arange(n, dtype=jnp.uint32) % 32
+    return ((words[..., idx] >> shift) & 1).astype(bool)
 
 
 def _augment_one(adj: jax.Array, match_wl: jax.Array, match_ring: jax.Array, i: jax.Array):
@@ -172,9 +196,90 @@ def _lowest_bit_index(x: jax.Array) -> jax.Array:
     return (31 - jax.lax.clz(lsb)).astype(jnp.int32)
 
 
+def _augment_one_wide(adj: jax.Array, match_wl: jax.Array, match_ring: jax.Array, i: jax.Array):
+    """Kuhn augmentation from ring ``i`` on an unpacked (T, N, N) bool
+    adjacency — the N > 32 mirror of ``_augment_one``.  Frontier/visited
+    masks are (T, N) bool lanes instead of int32 words; identical BFS order
+    (lowest wavelength index first), so matchings agree with the single-word
+    path wherever both apply."""
+    T, N, _ = adj.shape
+    rows = jnp.arange(T)
+
+    start = adj[rows, i]                                   # (T, N) bool
+    parent = jnp.where(start, i, -1).astype(jnp.int32)
+    matched = match_ring >= 0                              # (T, N) bool
+
+    def bfs_body(_, carry):
+        frontier, visited, parent, free_wl = carry
+        free_hit = frontier & ~matched
+        found_now = free_hit.any(axis=1) & (free_wl < 0)
+        free_wl = jnp.where(
+            found_now, jnp.argmax(free_hit, axis=1).astype(jnp.int32), free_wl
+        )
+        new_frontier = jnp.zeros_like(frontier)
+        new_parent = parent
+
+        def ring_body(r, inner):
+            nf, par = inner
+            wl_of_r = match_wl[rows, r]                    # (T,)
+            in_frontier = (wl_of_r >= 0) & jnp.take_along_axis(
+                frontier, jnp.maximum(wl_of_r, 0)[:, None], axis=1
+            )[:, 0]
+            newly = adj[rows, r] & ~visited & ~nf & in_frontier[:, None]
+            par = jnp.where(newly, r, par)
+            return nf | newly, par
+
+        new_frontier, new_parent = jax.lax.fori_loop(
+            0, N, ring_body, (new_frontier, new_parent)
+        )
+        cont = free_wl < 0
+        frontier = jnp.where(cont[:, None], new_frontier & ~visited, False)
+        visited = visited | new_frontier
+        parent = jnp.where(cont[:, None], new_parent, parent)
+        return frontier, visited, parent, free_wl
+
+    free_wl0 = jnp.full((T,), -1, jnp.int32)
+    _, _, parent, free_wl = jax.lax.fori_loop(
+        0, N, bfs_body, (start, start, parent, free_wl0)
+    )
+
+    def walk_body(_, carry):
+        match_wl, match_ring, k, active = carry
+        k_safe = jnp.maximum(k, 0)
+        r = parent[rows, k_safe]
+        r_safe = jnp.maximum(r, 0)
+        prev = match_wl[rows, r_safe]
+        match_wl = match_wl.at[rows, r_safe].set(jnp.where(active, k_safe, match_wl[rows, r_safe]))
+        match_ring = match_ring.at[rows, k_safe].set(jnp.where(active, r_safe, match_ring[rows, k_safe]))
+        active = active & (r_safe != i) & (prev >= 0)
+        return match_wl, match_ring, jnp.where(active, prev, k), active
+
+    active0 = free_wl >= 0
+    match_wl, match_ring, _, _ = jax.lax.fori_loop(
+        0, N, walk_body, (match_wl, match_ring, free_wl, active0)
+    )
+    return match_wl, match_ring
+
+
 @jax.jit
 def max_matching(adj: jax.Array):
-    """Run Kuhn over all left vertices.  Returns (match_wl, match_ring)."""
+    """Run Kuhn over all left vertices.  Returns (match_wl, match_ring).
+
+    Accepts either a single-word (T, N) int32 adjacency (N <= 32, the
+    original path, unchanged) or a multiword (T, N, W) uint32 one from
+    ``adjacency_bitmask`` at N > 32, which runs on unpacked bool lanes.
+    """
+    if adj.ndim == 3:
+        t, n, _ = adj.shape
+        adj_bool = _unpack_words(adj, n)                   # square: N wls
+        match_wl = jnp.full((t, n), -1, jnp.int32)
+        match_ring = jnp.full((t, n), -1, jnp.int32)
+
+        def body_wide(i, carry):
+            return _augment_one_wide(adj_bool, *carry, i=i)
+
+        return jax.lax.fori_loop(0, n, body_wide, (match_wl, match_ring))
+
     T, N = adj.shape
     match_wl = jnp.full((T, N), -1, jnp.int32)
     match_ring = jnp.full((T, N), -1, jnp.int32)

@@ -91,6 +91,62 @@ class ProtocolStats(NamedTuple):
     probes: jax.Array  # (T,) unit-search transactions spent
     rounds: jax.Array  # (T,) rounds until complete (round bound if never)
     locked: jax.Array  # (T,) rings holding a line at exit
+    worked: jax.Array  # (T,) rounds actually executed (complete, halt or bound)
+
+
+def cold_state(n_trials: int, n_ch: int) -> ProtocolState:
+    """The protocol's initial state: every ring starved, sweep at entry 0."""
+    return ProtocolState(
+        lock=jnp.full((n_trials, n_ch), -1, jnp.int32),
+        entry=jnp.full((n_trials, n_ch), -1, jnp.int32),
+        cursor=jnp.zeros((n_trials, n_ch), jnp.int32),
+        probes=jnp.zeros((n_trials,), jnp.int32),
+    )
+
+
+def revalidate_state(
+    tables: SearchTables,
+    state: ProtocolState,
+    *,
+    tr=None,
+    hysteresis=0.0,
+) -> tuple[ProtocolState, jax.Array]:
+    """Match a carried lock state against freshly rebuilt search tables.
+
+    The temporal re-arbitration entry gate: after drift/failure the tables
+    are rebuilt from the live bus, and a held line is *broken* when it no
+    longer appears in its ring's table (drifted out of the TR window, lane
+    killed, or the ring itself dead — an empty table).  Surviving locks are
+    re-anchored to the line's entry in the NEW table (the nearest alias may
+    have moved) with the cursor following, so a warm ``run_protocol`` resumes
+    exactly where the controller physically is.  Broken rings reset to the
+    cold per-ring state (starved, cursor 0).
+
+    ``hysteresis`` (with ``tr`` = (T, N) actual per-ring tuning ranges)
+    proactively breaks locks whose tuning distance sits within ``hysteresis``
+    of either window edge: the ring re-arbitrates *before* drift pushes it
+    out, trading one early re-lock for repeated break/relock thrash.
+
+    Returns ``(state, kept)`` — ``kept`` (T, N) bool marks locks that
+    survived (the still-feasible locks that lock-churn accounting is
+    measured against).  Probes are carried through untouched.
+    """
+    e = tables.wl.shape[-1]
+    held = state.lock >= 0
+    hit = (tables.wl == state.lock[:, :, None]) & held[:, :, None]
+    found = hit.any(axis=-1)
+    new_entry = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+    kept = found
+    if tr is not None:
+        delta = jnp.take_along_axis(
+            tables.delta, jnp.clip(new_entry, 0, e - 1)[..., None], axis=-1
+        )[..., 0]
+        kept = kept & (delta >= hysteresis) & (delta <= tr - hysteresis)
+    return state._replace(
+        lock=jnp.where(kept, state.lock, -1),
+        entry=jnp.where(kept, new_entry, -1),
+        cursor=jnp.where(kept, new_entry, 0),
+    ), kept
 
 
 def _taken_lines(lock: jax.Array, n_lines: int) -> jax.Array:
@@ -356,6 +412,10 @@ def run_protocol(
     k_donors: int = 4,
     backend: str | None = None,
     with_stats: bool = False,
+    init_state: ProtocolState | None = None,
+    with_state: bool = False,
+    transactional: bool = False,
+    patience: int | None = None,
 ):
     """Run the round-driven oblivious arbitration protocol on a table batch.
 
@@ -374,15 +434,53 @@ def run_protocol(
               (``SweepRequest.backend`` reaches table build, ideal scoring
               *and* this loop); the ``make_protocol(backend=)`` default only
               applies when the caller leaves the backend unset.
+    init_state: resume from a live ``ProtocolState`` (warm start — the
+              incremental re-arbitration path of ``core.temporal``; pass it
+              through ``revalidate_state`` against the current tables first).
+              None = ``cold_state`` — today's from-scratch behavior.
+    with_state: additionally return the final ``ProtocolState``, resumable
+              by a later call's ``init_state``.
+    transactional: make-before-break commit — the whole re-arbitration is
+              one transaction per trial, committed only if it locked
+              strictly MORE rings than ``init_state`` held; otherwise
+              (lock, entry, cursor) roll back to the initial state (probes
+              stay spent: the exploratory transactions physically ran).
+              Warm re-arbitration needs this: after a lane loss leaves a
+              ring unlockable, augmenting yields would otherwise walk the
+              starvation hole through every still-feasible lock and leave
+              the bus permuted for nothing.  Rollback is per-trial and a
+              pure function of that trial's own states, so probe/stat
+              accounting stays batch-independent.  Keep False for cold
+              starts (bit-identical legacy behavior; from an empty state
+              any lock is an improvement, so rollback could only ever fire
+              on the all-infeasible no-lock case).
+    patience: halt a trial after this many consecutive rounds without a
+              locked-count increase (None = legacy: halt only on exact
+              fixed points).  Augmenting yields keep *changing* state while
+              walking the starvation hole around an infeasible bus, so the
+              fixed-point halt never fires and such trials pay the full
+              round bound; a patience cap bounds that exploration at
+              ``patience * O(chain)`` probes.  Plateau-halted trials freeze
+              (later rounds restore their state and refund their probes,
+              same per-trial argument as the fixed-point halt); a feasible
+              augmenting sequence with full ``depth`` rarely plateaus more
+              than a round or two before locking another ring, so small
+              values (4-8) trade essentially no completion for a bounded
+              infeasible-trial budget.  Used by ``core.temporal`` for both
+              warm and cold re-arbitration (a fair probe comparison).
 
-    Returns an ``Assignment`` ((T, N) entry/wl/delta), plus ``ProtocolStats``
-    when ``with_stats``.  The while_loop exits as soon as every trial is
-    fully locked — and, since one probe/augment/release round is a
-    deterministic function of (lock, entry, cursor), a trial whose round
-    changed nothing is at a fixed point: it is sticky-marked *halted*, its
-    later rounds refund their probes (keeping the per-trial probe count
+    Returns ``assign`` and, per the flags, ``(assign, stats)``,
+    ``(assign, state)`` or ``(assign, stats, state)``.  ``assign`` is an
+    ``Assignment`` ((T, N) entry/wl/delta).  The while_loop exits as soon as
+    every trial is fully locked — and, since one probe/augment/release round
+    is a deterministic function of (lock, entry, cursor), a trial whose
+    round changed nothing is at a fixed point: it is sticky-marked *halted*,
+    its later rounds refund their probes (keeping the per-trial probe count
     batch-independent), and the loop exits once every trial is complete,
     dead or halted — ideal-infeasible trials stop paying the 4N bound.
+    Stats count only this call's spend: ``stats.probes`` starts from
+    ``init_state.probes`` (zero it for per-resume accounting) and
+    ``stats.rounds`` is 0 for a trial that resumed already-complete.
     """
     t, n, _ = tables.wl.shape
     dep = n if depth is None else int(depth)
@@ -390,15 +488,16 @@ def run_protocol(
     research = _resolve_research(backend)
     order_idx = _controller_order(tables, spec, order)
 
-    state0 = ProtocolState(
-        lock=jnp.full((t, n), -1, jnp.int32),
-        entry=jnp.full((t, n), -1, jnp.int32),
-        cursor=jnp.zeros((t, n), jnp.int32),
-        probes=jnp.zeros((t,), jnp.int32),
+    state0 = cold_state(t, n) if init_state is None else init_state
+    # Trials resumed already-complete never enter the loop: report round 0
+    # (a warm fixed point costs nothing).  Cold starts (n >= 1 starved
+    # rings) leave this at -1 exactly as before.
+    done0 = jnp.where(
+        jnp.all(state0.lock >= 0, axis=1), jnp.int32(0), jnp.int32(-1)
     )
 
     def cond(carry):
-        state, rnd, _, halted = carry
+        state, rnd, _, halted, _, _ = carry
         # A trial stays live while some starved ring could still act: a
         # starved ring whose search table is empty (n_valid == 0 — an
         # observable event: its sweep records no peak) can never lock, and a
@@ -411,7 +510,7 @@ def run_protocol(
         return (rnd < rounds) & jnp.any(jnp.any(live, axis=1) & ~halted)
 
     def body(carry):
-        state, rnd, done_round, halted = carry
+        state, rnd, done_round, halted, plateau, halt_round = carry
         prev = state
         state = _probe_phase(tables, order_idx, state, research)
         if dep > 0:
@@ -421,40 +520,74 @@ def run_protocol(
         state = _release_phase(state)
         # Progress stall: one round is a deterministic map of (lock, entry,
         # cursor), so an unchanged live trial repeats forever — sticky-halt
-        # it.  Already-halted trials refund this round's probes (their state
-        # is a fixed point, so only the probe counter could drift): the
-        # per-trial spend stays independent of which *other* trials keep the
-        # shared loop alive.
+        # it.  Already-halted trials are frozen: this round's state changes
+        # are restored and its probes refunded (for a fixed-point halt the
+        # restore is a no-op by definition; for a plateau halt it stops the
+        # hole-walk where the patience ran out).  Either way the per-trial
+        # spend stays independent of which *other* trials keep the shared
+        # loop alive.
         changed = (
             jnp.any(state.lock != prev.lock, axis=1)
             | jnp.any(state.entry != prev.entry, axis=1)
             | jnp.any(state.cursor != prev.cursor, axis=1)
         )
-        state = state._replace(
-            probes=jnp.where(halted, prev.probes, state.probes)
+        state = ProtocolState(
+            lock=jnp.where(halted[:, None], prev.lock, state.lock),
+            entry=jnp.where(halted[:, None], prev.entry, state.entry),
+            cursor=jnp.where(halted[:, None], prev.cursor, state.cursor),
+            probes=jnp.where(halted, prev.probes, state.probes),
         )
         live = jnp.any((prev.lock < 0) & (tables.n_valid > 0), axis=1)
+        was_halted = halted
         halted = halted | (live & ~changed)
+        if patience is not None:
+            improved = (
+                jnp.sum((state.lock >= 0).astype(jnp.int32), axis=1)
+                > jnp.sum((prev.lock >= 0).astype(jnp.int32), axis=1)
+            )
+            plateau = jnp.where(improved | halted, 0, plateau + 1)
+            halted = halted | (live & (plateau >= int(patience)))
+        halt_round = jnp.where(
+            halted & ~was_halted & (halt_round < 0), rnd + 1, halt_round
+        )
         complete = jnp.all(state.lock >= 0, axis=1)
         done_round = jnp.where(
             complete & (done_round < 0), rnd + 1, done_round
         )
-        return state, rnd + 1, done_round, halted
+        return state, rnd + 1, done_round, halted, plateau, halt_round
 
-    state, _, done_round, _ = jax.lax.while_loop(
+    state, _, done_round, _, _, halt_round = jax.lax.while_loop(
         cond, body,
-        (state0, jnp.int32(0), jnp.full((t,), -1, jnp.int32),
-         jnp.zeros((t,), bool)),
+        (state0, jnp.int32(0), done0, jnp.zeros((t,), bool),
+         jnp.zeros((t,), jnp.int32), jnp.full((t,), -1, jnp.int32)),
     )
+    if transactional:
+        n_lock0 = jnp.sum((state0.lock >= 0).astype(jnp.int32), axis=1)
+        n_lock1 = jnp.sum((state.lock >= 0).astype(jnp.int32), axis=1)
+        commit = (n_lock1 > n_lock0)[:, None]
+        state = state._replace(
+            lock=jnp.where(commit, state.lock, state0.lock),
+            entry=jnp.where(commit, state.entry, state0.entry),
+            cursor=jnp.where(commit, state.cursor, state0.cursor),
+        )
+        done_round = jnp.where(commit[:, 0], done_round, done0)
     assign = _finalize(tables, state)
     if not with_stats:
-        return assign
+        return (assign, state) if with_state else assign
     stats = ProtocolStats(
         probes=state.probes,
         rounds=jnp.where(done_round < 0, rounds, done_round),
         locked=jnp.sum((state.lock >= 0).astype(jnp.int32), axis=1),
+        # Rounds this trial actually executed: completion round, halt round
+        # (fixed point or plateau), or the full bound.  ``rounds`` keeps its
+        # legacy report-the-bound-when-incomplete semantics; ``worked`` is
+        # the honest latency the temporal layer accounts.
+        worked=jnp.where(
+            done_round >= 0, done_round,
+            jnp.where(halt_round >= 0, halt_round, rounds),
+        ),
     )
-    return assign, stats
+    return (assign, stats, state) if with_state else (assign, stats)
 
 
 # Jitted phase steps for the trace path: compiled once per (T, N, E) shape,
@@ -482,6 +615,8 @@ def run_protocol_trace(
     n_rounds: int | None = None,
     n_seekers: int = 4,
     k_donors: int = 4,
+    init_state: ProtocolState | None = None,
+    transactional: bool = False,
 ) -> tuple:
     """Instrumented run: per-phase state snapshots for invariant checks.
 
@@ -495,12 +630,8 @@ def run_protocol_trace(
     rounds = default_rounds(n) if n_rounds is None else int(n_rounds)
     order_idx = _controller_order(tables, spec, order)
 
-    state = ProtocolState(
-        lock=jnp.full((t, n), -1, jnp.int32),
-        entry=jnp.full((t, n), -1, jnp.int32),
-        cursor=jnp.zeros((t, n), jnp.int32),
-        probes=jnp.zeros((t,), jnp.int32),
-    )
+    state0 = cold_state(t, n) if init_state is None else init_state
+    state = state0
     snaps = []
     for rnd in range(rounds):
         state = _probe_jit(tables, order_idx, state)
@@ -510,4 +641,16 @@ def run_protocol_trace(
         snaps.append((rnd, "augment", jax.tree_util.tree_map(np.asarray, state)))
         state = _release_phase(state)
         snaps.append((rnd, "release", jax.tree_util.tree_map(np.asarray, state)))
+    if transactional:
+        commit = (
+            jnp.sum((state.lock >= 0).astype(jnp.int32), axis=1)
+            > jnp.sum((state0.lock >= 0).astype(jnp.int32), axis=1)
+        )[:, None]
+        state = state._replace(
+            lock=jnp.where(commit, state.lock, state0.lock),
+            entry=jnp.where(commit, state.entry, state0.entry),
+            cursor=jnp.where(commit, state.cursor, state0.cursor),
+        )
+        snaps.append((rounds, "commit",
+                      jax.tree_util.tree_map(np.asarray, state)))
     return _finalize(tables, state), snaps

@@ -157,6 +157,13 @@ class SweepRequest:
             ``_afp_from_trial_min_tr``).  Disable to force the direct path.
     mesh:   optional 1-D ``jax.sharding.Mesh``; the chunk axis is split
             over its devices with ``shard_map``.  A pure performance knob.
+    timeline: optional ``repro.core.temporal.Timeline``.  Each grid point
+            then runs the full temporal scan (incremental re-arbitration
+            with ``run_timeline`` defaults) instead of a one-shot
+            evaluation, and the result grids are trial-mean
+            ``TemporalStats`` fields with a trailing step axis.  Requires a
+            ``protocol_*`` scheme and ``metric="eval"``; warm/hysteresis
+            knobs live on ``run_timeline`` itself.
 
     Validation happens at construction, so an invalid request never reaches
     the engine (or the reference loop).
@@ -173,6 +180,7 @@ class SweepRequest:
     backend: str | None = None
     tr_fast: bool = True
     mesh: Any = None
+    timeline: Any = None
 
     def __post_init__(self):
         axes = {
@@ -202,6 +210,19 @@ class SweepRequest:
                 f"sweep meshes are 1-D (the chunk axis); got axes "
                 f"{self.mesh.axis_names}"
             )
+        if self.timeline is not None:
+            if self.scheme is None or not self.scheme.startswith("protocol_"):
+                raise ValueError(
+                    "timeline sweeps run incremental re-arbitration and "
+                    f"need a protocol_* scheme; got scheme={self.scheme!r}"
+                )
+            if self.metric != "eval":
+                raise ValueError("timeline sweeps require metric='eval'")
+            n_ch = int(self.timeline.n_ch)
+            if n_ch != len(self.cfg.s):
+                raise ValueError(
+                    f"timeline has {n_ch} channels but cfg has {len(self.cfg.s)}"
+                )
 
     def replace(self, **kw) -> "SweepRequest":
         return dataclasses.replace(self, **kw)
@@ -301,6 +322,7 @@ def _sweep_flat(
     chunk: int,
     backend: str | None,
     mesh=None,
+    timeline=None,     # Timeline pytree (traced) for temporal sweeps
 ):
     """Chunked vmap over flat grid points; one compilation for the grid.
 
@@ -311,10 +333,20 @@ def _sweep_flat(
     (the chunking contract extended to devices).
     """
 
-    def eval_point(units, fixed_values, vals):
+    def eval_point(units, fixed_values, tl, vals):
         over = {fn: fixed_values[i] for i, fn in enumerate(fixed_names)}
         over.update({name: vals[i] for i, name in enumerate(names)})
         var = Variations(**over)
+        if tl is not None:
+            from .temporal import run_timeline_impl
+
+            _, tstats = run_timeline_impl(
+                cfg, units, tl, var, scheme=scheme, backend=backend
+            )
+            # trial-mean per step: grids stay axis-shaped + (S,) trailing
+            return jax.tree_util.tree_map(
+                lambda a: jnp.mean(a.astype(jnp.float32), axis=-1), tstats
+            )
         if metric == "min_tr":
             return policy_min_tr_impl(cfg, units, policy, var, backend=backend)
         if metric == "trial_min_tr":
@@ -327,9 +359,10 @@ def _sweep_flat(
             cfg, units, scheme, variations=var, backend=backend
         )
 
-    def run_chunks(units, fixed_values, chunks):  # (C, chunk, K) -> C-leading tree
+    def run_chunks(units, fixed_values, timeline, chunks):
+        # chunks (C, chunk, K) -> C-leading tree
         return jax.lax.map(
-            jax.vmap(partial(eval_point, units, fixed_values)), chunks
+            jax.vmap(partial(eval_point, units, fixed_values, timeline)), chunks
         )
 
     p = points.shape[0]
@@ -342,15 +375,15 @@ def _sweep_flat(
     padded = jnp.concatenate([points, jnp.tile(points[-1:], (pad, 1))]) if pad else points
     chunks = padded.reshape(n_chunks, chunk, -1)
     if mesh is None:
-        out = run_chunks(units, fixed_values, chunks)
+        out = run_chunks(units, fixed_values, timeline, chunks)
     else:
         P = jax.sharding.PartitionSpec
         axis = mesh.axis_names[0]
         out = _shard_map(
             run_chunks, mesh=mesh,
-            in_specs=(P(), P(), P(axis)), out_specs=P(axis),
+            in_specs=(P(), P(), P(), P(axis)), out_specs=P(axis),
             check_rep=False,
-        )(units, fixed_values, chunks)
+        )(units, fixed_values, timeline, chunks)
     return jax.tree_util.tree_map(
         lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:p], out
     )
@@ -408,7 +441,7 @@ def sweep(request: SweepRequest) -> SweepResult:
         cfg, units, jnp.asarray(points), fixed_values,
         policy=policy, scheme=scheme, metric=metric, names=run_names,
         fixed_names=fixed_names, chunk=chunk, backend=request.backend,
-        mesh=request.mesh,
+        mesh=request.mesh, timeline=request.timeline,
     )
     if tr_idx is not None:
         afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
@@ -469,6 +502,12 @@ def sweep_reference(request: SweepRequest) -> SweepResult:
     """
     cfg, units = request.cfg, request.units
     policy, scheme = request.policy, request.scheme
+    if request.timeline is not None:
+        raise NotImplementedError(
+            "sweep_reference has no temporal path; run_timeline is itself "
+            "the per-point primitive a timeline sweep maps — compare "
+            "against direct run_timeline calls instead"
+        )
     names, points, shape = _grid_points(request.axes)
     outs = []
     for vals in points:

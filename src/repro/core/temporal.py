@@ -1,0 +1,354 @@
+"""Temporal re-arbitration — time as a first-class simulation axis.
+
+The paper treats arbitration as one-shot initialization, but its premise —
+algorithms "resilient to system variability" — only holds if a locked system
+survives *time*: thermal ramps, comb wander, ring aging, lane failure.  Mak
+et al., *Automatic Resonance Alignment of High-Order Microring Filters*
+(PAPERS.md), is this loop at the device level — feedback-driven continuous
+alignment without wavelength knowledge.  This module runs it at the
+protocol level: a drift/event ``Timeline`` driven by a ``lax.scan`` whose
+carry is the protocol engine's live ``ProtocolState`` pytree.
+
+Each timeline step:
+
+1. applies the step's drift offsets through the registered variation axes
+   (``thermal_drift`` for ring offsets, ``comb_wander`` for the comb — the
+   same ``Variations`` transform hooks static sweeps use),
+2. rebuilds the streaming search tables against the *live* bus (dead lanes
+   and dead rings masked via the tables' ``visible`` hook),
+3. revalidates the carried locks (``protocol.revalidate_state``): a held
+   line missing from the rebuilt table — drifted out of range, killed, or
+   the holder dead — is a *broken* lock; an optional ``hysteresis`` margin
+   breaks locks early, before drift pushes them over the edge,
+4. re-arbitrates with ``run_protocol`` **from the carried state** (warm,
+   incremental — the default) or from scratch (cold — the baseline the
+   incremental path is measured against in
+   ``benchmarks/fig20_temporal_relock.py``).
+
+Warm re-arbitration runs the augment phase transactionally
+(``run_protocol(transactional=True)``): after a lane loss leaves a ring
+unlockable, its displacement chains can never close, and non-transactional
+eager yields would walk the starvation hole through every still-feasible
+lock on the bus.
+
+Everything is shape-static and jit/vmap-safe; the sweep engine maps whole
+timelines over variation grids via ``SweepRequest(timeline=...)``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .matching import adjacency_bitmask, max_matching
+from .protocol import (
+    ProtocolState,
+    cold_state,
+    revalidate_state,
+    run_protocol,
+)
+from .reach import reach_matrix
+from .relation import chain_spec
+from .sampling import UnitSamples, instantiate
+from .variations import Variations, apply_axis_transforms, as_variations
+
+
+class Timeline(NamedTuple):
+    """A batched drift/event trajectory: per-step offsets and liveness.
+
+    All fields are (S, N) over S timeline steps and N channels; offsets are
+    in nm and *absolute* relative to the undrifted system (not per-step
+    increments), so a timeline slice replays identically from a checkpoint.
+    """
+
+    ring_drift: jax.Array   # (S, N) added to every trial's ring resonances
+    laser_drift: jax.Array  # (S, N) added to every trial's laser lines
+    lane_alive: jax.Array   # (S, N) bool: laser line present on the bus
+    ring_alive: jax.Array   # (S, N) bool: ring controller powered
+
+    @property
+    def n_steps(self) -> int:
+        return self.ring_drift.shape[0]
+
+    @property
+    def n_ch(self) -> int:
+        return self.ring_drift.shape[1]
+
+
+class TemporalStats(NamedTuple):
+    """Per-step accounting of one ``run_timeline`` call (all (S, T)).
+
+    ``probes``/``rounds`` count only each step's incremental spend (the
+    re-lock latency vs a cold start); ``broken`` counts locks invalidated
+    at the step's revalidation gate (drift-out, hysteresis, kill events);
+    ``churn`` counts rings whose lock survived revalidation but ended the
+    step on a different line anyway — the thrash a hysteresis margin is
+    meant to buy down; ``feasible`` marks trials where the live bus still
+    admits a perfect matching of live rings onto live lines.
+    """
+
+    probes: jax.Array    # (S, T) int32
+    rounds: jax.Array    # (S, T) int32
+    locked: jax.Array    # (S, T) int32
+    broken: jax.Array    # (S, T) int32
+    churn: jax.Array     # (S, T) int32
+    feasible: jax.Array  # (S, T) bool
+
+
+def _ramp(n_steps: int, spec, n_ch: int | None = None) -> np.ndarray:
+    """Resolve a drift spec to a (S,) profile.
+
+    ``spec`` may be a scalar (linear ramp 0 -> spec), a sequence of
+    (step, value) breakpoints (piecewise-linear), or a (S,) array.
+    """
+    steps = np.arange(n_steps, dtype=np.float32)
+    if spec is None:
+        return np.zeros(n_steps, np.float32)
+    arr = np.asarray(spec, np.float32)
+    if arr.ndim == 0:
+        last = max(1, n_steps - 1)
+        return arr * steps / last
+    if arr.ndim == 2 and arr.shape[1] == 2:
+        return np.interp(steps, arr[:, 0], arr[:, 1]).astype(np.float32)
+    if arr.shape != (n_steps,):
+        raise ValueError(
+            f"drift spec must be scalar, (K, 2) breakpoints or ({n_steps},); "
+            f"got shape {arr.shape}"
+        )
+    return arr
+
+
+_EVENT_KINDS = ("lane_kill", "lane_swap", "ring_kill", "ring_swap")
+
+
+def make_timeline(
+    n_steps: int,
+    n_ch: int,
+    *,
+    thermal=None,
+    aging=None,
+    comb=None,
+    events: Sequence[tuple] = (),
+) -> Timeline:
+    """Deterministic host-side timeline builder.
+
+    thermal: uniform ring red-shift profile [nm] — scalar (linear ramp to
+             that value), (K, 2) ``(step, value)`` breakpoints, or (S,).
+    aging:   differential aging: ring i accumulates ``profile * i/(N-1)``
+             (the ``ring_aging`` axis shape); same spec forms as thermal.
+    comb:    uniform laser-line wander [nm] — ``(amplitude, period)`` for a
+             sinusoid, or the same spec forms as thermal.
+    events:  ``(step, kind, channel)`` with kind one of lane_kill /
+             lane_swap / ring_kill / ring_swap; liveness changes persist
+             from ``step`` onward (a kill followed by a swap is a hot-swap).
+    """
+    thermal_t = _ramp(n_steps, thermal)
+    aging_t = _ramp(n_steps, aging)
+    if isinstance(comb, tuple) and len(comb) == 2 and np.ndim(comb[0]) == 0:
+        amp, period = comb
+        comb_t = np.float32(amp) * np.sin(
+            2.0 * np.pi * np.arange(n_steps) / float(period)
+        ).astype(np.float32)
+    else:
+        comb_t = _ramp(n_steps, comb)
+
+    tilt = np.arange(n_ch, dtype=np.float32) / max(1, n_ch - 1)
+    ring_drift = thermal_t[:, None] + aging_t[:, None] * tilt[None, :]
+    laser_drift = np.broadcast_to(comb_t[:, None], (n_steps, n_ch)).copy()
+
+    lane = np.ones((n_steps, n_ch), bool)
+    ring = np.ones((n_steps, n_ch), bool)
+    for step, kind, ch in events:
+        if kind not in _EVENT_KINDS:
+            raise ValueError(f"unknown event kind {kind!r}; valid: {_EVENT_KINDS}")
+        target = lane if kind.startswith("lane") else ring
+        target[step:, ch] = kind.endswith("swap")
+    return Timeline(
+        ring_drift=jnp.asarray(ring_drift, jnp.float32),
+        laser_drift=jnp.asarray(laser_drift, jnp.float32),
+        lane_alive=jnp.asarray(lane),
+        ring_alive=jnp.asarray(ring),
+    )
+
+
+def slice_timeline(tl: Timeline, start: int, stop: int | None = None) -> Timeline:
+    """Steps ``[start, stop)`` of a timeline (offsets are absolute, so a
+    slice resumes bit-identically from a checkpointed carry state)."""
+    return jax.tree_util.tree_map(lambda a: a[start:stop], tl)
+
+
+def _protocol_kwargs(scheme: str) -> dict | None:
+    """Static ``run_protocol`` kwargs for a registered protocol scheme, or
+    None for one-shot schemes (cold-only re-arbitration, no probe stats)."""
+    from .api import scheme_spec  # local: api imports this module's deps
+
+    spec = scheme_spec(scheme)  # validates the name either way
+    if not scheme.startswith("protocol_"):
+        return None
+    if scheme == "protocol_ltd":
+        return {"depth": 0, "n_rounds": 1, "order": "chain"}
+    return dict(spec.params)
+
+
+def run_timeline_impl(
+    cfg,
+    units: UnitSamples,
+    timeline: Timeline,
+    variations=None,
+    *,
+    scheme: str = "protocol_lta",
+    warm: bool = True,
+    transactional: bool = True,
+    patience: int | None = 4,
+    hysteresis=0.0,
+    backend: str | None = None,
+    init_state: ProtocolState | None = None,
+) -> tuple[ProtocolState, TemporalStats]:
+    """Drive the protocol engine along a drift/event timeline.
+
+    warm=True re-arbitrates incrementally from the carried lock state;
+    warm=False is the cold baseline (full re-init every step; the carry
+    still threads through so broken/churn are measured step over step).
+    Both run the engine with the same ``transactional``/``patience``
+    settings so the probe comparison is apples to apples.  Returns
+    ``(final_state, TemporalStats)`` — the state is resumable via
+    ``init_state`` after ``slice_timeline`` (see ``save_campaign``).
+    """
+    from .api import _build_tables, scheme_spec  # local: avoid import cycle
+
+    over = as_variations(variations)
+    tr = over.resolve("tr_mean", cfg)
+    sys = instantiate(cfg, units, over)
+    spec = chain_spec(cfg.s)
+    t, n = sys.laser.shape
+    kw = _protocol_kwargs(scheme)
+    if kw is None and warm:
+        raise ValueError(
+            f"scheme {scheme!r} is one-shot: it carries no protocol state, "
+            "so only cold (warm=False) re-arbitration is defined"
+        )
+    arbiter = scheme_spec(scheme).arbiter
+    state0 = cold_state(t, n) if init_state is None else init_state
+
+    def step(state, tl):
+        sys_s = apply_axis_transforms(
+            sys,
+            Variations(thermal_drift=tl.ring_drift, comb_wander=tl.laser_drift),
+            cfg,
+        )
+        vis = jnp.broadcast_to(
+            tl.lane_alive[None, None, :] & tl.ring_alive[None, :, None],
+            (t, n, n),
+        )
+        tables = _build_tables(cfg, sys_s, tr, backend, visible=vis)
+        prev_lock = state.lock
+        reval, kept = revalidate_state(
+            tables, state, tr=tr * sys_s.tr_unit, hysteresis=hysteresis
+        )
+        broken = jnp.sum(
+            ((prev_lock >= 0) & (reval.lock < 0)).astype(jnp.int32), axis=1
+        )
+        if kw is None:
+            asg = arbiter(cfg, tables, spec, backend=backend)
+            new = ProtocolState(
+                lock=asg.wl.astype(jnp.int32),
+                entry=asg.entry.astype(jnp.int32),
+                cursor=jnp.maximum(asg.entry.astype(jnp.int32), 0),
+                probes=jnp.zeros((t,), jnp.int32),
+            )
+            probes = jnp.zeros((t,), jnp.int32)
+            rounds = jnp.zeros((t,), jnp.int32)
+        else:
+            start = (reval if warm else cold_state(t, n))._replace(
+                probes=jnp.zeros((t,), jnp.int32)
+            )
+            _, stats, new = run_protocol(
+                tables, spec, backend=backend, with_stats=True,
+                with_state=True, init_state=start,
+                transactional=transactional, patience=patience, **kw,
+            )
+            probes, rounds = stats.probes, stats.worked
+            if warm:
+                # Cold fallback: a warm start is *more* constrained than a
+                # cold one (surviving locks are pinned wherever drift left
+                # them, and donors only relock red-ward), so occasionally
+                # an augmenting path exists that incremental re-arbitration
+                # cannot reach.  Trials the warm pass left unresolved rerun
+                # from scratch and pay both passes' probes/rounds — the
+                # escalation a real controller would run, and the warm path
+                # is only a win if it beats cold *including* this cost.
+                # (Trials whose warm start held no locks would rerun the
+                # identical cold procedure — nothing to escalate.)
+                unresolved = jnp.any(
+                    (new.lock < 0) & (tables.n_valid > 0), axis=1
+                ) & jnp.any(start.lock >= 0, axis=1)
+                _, cstats, cnew = run_protocol(
+                    tables, spec, backend=backend, with_stats=True,
+                    with_state=True, init_state=cold_state(t, n),
+                    transactional=transactional, patience=patience, **kw,
+                )
+                use_cold = unresolved & (cstats.locked > stats.locked)
+                new = jax.tree_util.tree_map(
+                    lambda c, w: jnp.where(
+                        use_cold.reshape((t,) + (1,) * (w.ndim - 1)), c, w
+                    ),
+                    cnew, new,
+                )
+                probes = probes + jnp.where(unresolved, cstats.probes, 0)
+                rounds = rounds + jnp.where(unresolved, cstats.worked, 0)
+        churn = jnp.sum(
+            (kept & (new.lock != prev_lock)).astype(jnp.int32), axis=1
+        )
+        # Feasibility of the live bus: every live ring matchable to a
+        # distinct live line within TR (dead rings exempt, dead lanes gone).
+        reach = (
+            reach_matrix(sys_s, tr)
+            & tl.lane_alive[None, None, :]
+            & tl.ring_alive[None, :, None]
+        )
+        match_wl, _ = max_matching(adjacency_bitmask(reach))
+        n_live = jnp.sum(tl.ring_alive.astype(jnp.int32))
+        feasible = jnp.sum((match_wl >= 0).astype(jnp.int32), axis=1) >= n_live
+        out = TemporalStats(
+            probes=probes,
+            rounds=rounds,
+            locked=jnp.sum((new.lock >= 0).astype(jnp.int32), axis=1),
+            broken=broken,
+            churn=churn,
+            feasible=feasible,
+        )
+        return new, out
+
+    return jax.lax.scan(step, state0, timeline)
+
+
+run_timeline = jax.jit(
+    run_timeline_impl,
+    static_argnames=(
+        "cfg", "scheme", "warm", "transactional", "patience", "backend"
+    ),
+)
+
+
+def save_campaign(ckpt_dir, step: int, state: ProtocolState) -> None:
+    """Checkpoint a timeline campaign's carry state after ``step`` steps
+    (``checkpoint/store.py`` is the carrier; atomic, latest-k retained)."""
+    from repro.checkpoint import store
+
+    store.save(ckpt_dir, step, state)
+
+
+def restore_campaign(
+    ckpt_dir, n_trials: int, n_ch: int, step: int | None = None
+) -> tuple[int, ProtocolState]:
+    """Load ``(step, state)`` to resume a campaign: continue with
+    ``run_timeline(..., timeline=slice_timeline(tl, step), init_state=state)``."""
+    from repro.checkpoint import store
+
+    if step is None:
+        step = store.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no campaign checkpoint under {ckpt_dir}")
+    return step, store.restore(ckpt_dir, step, cold_state(n_trials, n_ch))

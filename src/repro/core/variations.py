@@ -35,6 +35,7 @@ import warnings
 from typing import Any, Callable, Iterable, Mapping, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 
 class AxisSpec(NamedTuple):
@@ -336,4 +337,25 @@ register_axis(
     "thermal_drift", lambda cfg: 0.0,
     doc="uniform thermal red-shift of every ring resonance [nm]",
     transform=lambda sys, value, cfg: sys._replace(ring=sys.ring + value),
+)
+# Trajectory axes for the temporal layer (``core/temporal.py``): a timeline
+# step is just a ``Variations`` override re-applied per ``lax.scan`` step —
+# ``thermal_drift`` carries the per-step ring offset ((N,) broadcasts over
+# trials) and these two model the remaining drift sources.  Registered like
+# any other axis, they are also directly sweepable as static offsets.
+register_axis(
+    "comb_wander", lambda cfg: 0.0,
+    doc="uniform comb-source wander: shift of every laser line [nm]",
+    transform=lambda sys, value, cfg: sys._replace(laser=sys.laser + value),
+)
+register_axis(
+    "ring_aging", lambda cfg: 0.0,
+    doc=("differential aging tilt across the ring row [nm]: ring i "
+         "red-shifts by value * i / (N - 1)"),
+    transform=lambda sys, value, cfg: sys._replace(
+        ring=sys.ring + value * (
+            jnp.arange(sys.ring.shape[-1], dtype=sys.ring.dtype)
+            / max(1, sys.ring.shape[-1] - 1)
+        )
+    ),
 )

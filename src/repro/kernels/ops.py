@@ -77,9 +77,21 @@ def feasibility(laser, ring, fsr, tr_unit, *, s, backend="auto"):
 
 
 def perfect_matching(adj, *, backend="auto"):
-    """adj: (T, N) int32 ring->line bitmasks -> (match_wl (T, N), ok (T,))."""
+    """adj: (T, N) int32 ring->line bitmasks -> (match_wl (T, N), ok (T,)).
+
+    Multiword (T, N, W) uint32 adjacencies (N > 32) run the portable core
+    path on every backend: the Pallas matching kernel is single-word by
+    layout (one int32 lane per ring), so wide systems route to
+    ``repro.core.matching.max_matching`` rather than failing.
+    """
     backend = _resolve(backend)
-    adj_c = jnp.swapaxes(jnp.asarray(adj, jnp.int32), -1, -2)
+    adj = jnp.asarray(adj)
+    if adj.ndim >= 3 and adj.dtype == jnp.uint32:      # multiword: core path
+        from repro.core.matching import max_matching
+
+        mw, _ = max_matching(adj)
+        return mw, jnp.all(mw >= 0, axis=-1)
+    adj_c = jnp.swapaxes(adj.astype(jnp.int32), -1, -2)
     if backend == "jnp":
         mw, ok = ref.match_ref(adj_c)
         return jnp.swapaxes(mw, -1, -2), ok

@@ -9,6 +9,19 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape: tuple, axes: tuple):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax exposes them (``jax.sharding.AxisType`` landed after 0.4); older
+    versions default every axis to Auto already, so omitting the kwarg is
+    behaviorally identical."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+        )
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips).
 
@@ -22,9 +35,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         n *= s
     devs = jax.devices()
     if len(devs) == n:
-        return jax.make_mesh(
-            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-        )
+        return _make_mesh(shape, axes)
     if len(devs) > n:
         import numpy as np
 
@@ -39,11 +50,7 @@ def make_host_mesh(model_parallel: int = 1):
     """Small mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return _make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
 def make_sweep_mesh(n_devices: int | None = None):

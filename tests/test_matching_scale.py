@@ -50,6 +50,58 @@ def test_sweep_bottleneck_bit_exact_vs_kuhn_wdm32():
     )
 
 
+def _np_max_matching(adj_bool):
+    """Textbook recursive Kuhn on one trial — the multiword oracle."""
+    n = adj_bool.shape[0]
+    mr = -np.ones(n, int)
+
+    def try_ring(i, seen):
+        for k in range(n):
+            if adj_bool[i, k] and not seen[k]:
+                seen[k] = True
+                if mr[k] < 0 or try_ring(mr[k], seen):
+                    mr[k] = i
+                    return True
+        return False
+
+    return sum(try_ring(i, np.zeros(n, bool)) for i in range(n))
+
+
+def test_multiword_bitmask_matching_wdm64():
+    """N > 32 packs into (T, N, W) uint32 words; Kuhn on the multiword path
+    must agree with a numpy reference on matched counts, produce a
+    consistent matching, and agree with the existence fast path."""
+    rng = np.random.default_rng(3)
+    for n in (40, 64):
+        for density in (0.04, 0.1, 0.5):
+            reach = rng.random((6, n, n)) < density
+            adj = matching.adjacency_bitmask(jnp.asarray(reach))
+            assert adj.shape == (6, n, -(-n // 32))
+            assert adj.dtype == jnp.uint32
+            mw, mr = matching.max_matching(adj)
+            mw, mr = np.asarray(mw), np.asarray(mr)
+            counts = (mw >= 0).sum(axis=1)
+            ref = [_np_max_matching(reach[t]) for t in range(6)]
+            assert np.array_equal(counts, ref), (n, density)
+            for t in range(6):
+                for r in np.nonzero(mw[t] >= 0)[0]:
+                    assert reach[t, r, mw[t, r]]      # matched along an edge
+                    assert mr[t, mw[t, r]] == r       # two-sided consistency
+            perfect = np.asarray(matching.has_perfect_matching(jnp.asarray(reach)))
+            assert np.array_equal(counts == n, perfect), (n, density)
+
+
+def test_single_word_bitmask_layout_unchanged():
+    """N <= 32 keeps the original (T, N) int32 packing — the layout the
+    Pallas matching kernel and its parity tests consume."""
+    rng = np.random.default_rng(4)
+    reach = jnp.asarray(rng.random((5, 16, 16)) < 0.4)
+    adj = matching.adjacency_bitmask(reach)
+    assert adj.shape == (5, 16) and adj.dtype == jnp.int32
+    expect = np.asarray(reach) @ (1 << np.arange(16))
+    assert np.array_equal(np.asarray(adj), expect)
+
+
 def test_sweep_bottleneck_tie_heavy_weights():
     """Quantized weights force massive rank ties: any augmenting-path choice
     must still land on the same (unique) bottleneck value."""

@@ -1,0 +1,375 @@
+"""Temporal re-arbitration invariants (repro.core.temporal + the protocol
+engine's warm-start contract).
+
+The restartable-state refactor is only sound if:
+
+  * warm fixed point: resuming from a completed trial's state costs nothing
+    — zero probes, zero executed rounds, zero churn;
+  * cold-start equivalence: ``init_state=None`` and an explicit
+    ``cold_state`` produce bit-identical assignments and stats (the
+    pre-refactor behavior is the None spelling);
+  * lane-kill isolation: after a single lane kill, unaffected feasible
+    locks are never disturbed — under transactional re-arbitration an
+    infeasible re-lock rolls back entirely, and a feasible one (dead lane
+    paired with a freed line) re-locks only the broken ring;
+  * batch independence: per-trial probe/refund accounting is identical
+    whether a trial runs alone or inside a batch, including when resumed
+    mid-timeline from a checkpoint;
+  * resume equivalence: a timeline split at any step, checkpointed through
+    ``checkpoint/store.py`` and resumed, replays bit-identically.
+
+As in tests/test_protocol.py the checks run twice: deterministic
+parametrized cases (always on) and hypothesis variants when importable.
+"""
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on container
+    HAVE_HYPOTHESIS = False
+
+from repro.configs.wdm import DRIFT_SCENARIOS, drift_timeline
+from repro.core import (
+    ArbitrationConfig,
+    DWDMGrid,
+    SweepRequest,
+    cold_state,
+    make_timeline,
+    make_units,
+    restore_campaign,
+    revalidate_state,
+    run_protocol,
+    run_timeline,
+    save_campaign,
+    slice_timeline,
+    sweep,
+    sweep_reference,
+)
+from repro.core.protocol import ProtocolState
+from repro.core.relation import chain_spec
+from repro.core.sampling import SystemBatch, instantiate
+from repro.core.search_table import build_search_tables
+
+SETTINGS = dict(max_examples=6, deadline=None)
+
+#: deterministic (n_ch, seed, tr_mean) grid for the always-on runs
+CASES = [
+    (4, 0, 3.0),
+    (8, 1, 4.0),
+    (8, 5, 6.0),
+]
+
+
+def _system(n_ch, seed, n=3):
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=n_ch))
+    units = make_units(cfg, seed, n, n)
+    return cfg, units, instantiate(cfg, units)
+
+
+def _tables_spec(cfg, sys, tr_mean):
+    tables = build_search_tables(sys, tr_mean, max_alias=cfg.max_fsr_alias)
+    return tables, chain_spec(cfg.s)
+
+
+def _dense_system(n_ch=8, t=4):
+    """Every ring reaches every line: laser on-grid, rings centered, TR huge.
+
+    Deterministic playground for the lane-kill isolation invariant — any
+    starved ring can always see every unclaimed line, so a seeker never
+    needs a donor chain.
+    """
+    cfg = ArbitrationConfig(grid=DWDMGrid(n_ch=n_ch))
+    laser = jnp.broadcast_to(
+        jnp.arange(n_ch, dtype=jnp.float32)[None, :] * 0.8, (t, n_ch)
+    )
+    ring = jnp.zeros((t, n_ch), jnp.float32)
+    fsr = jnp.full((t, n_ch), 100.0, jnp.float32)
+    sys = SystemBatch(laser=laser, ring=ring, fsr=fsr,
+                      tr_unit=jnp.ones((t, n_ch), jnp.float32))
+    return cfg, sys
+
+
+# ------------------------------------------------------ invariant checkers --
+
+def check_cold_state_equivalence(n_ch, seed, tr_mean):
+    """init_state=None == explicit cold_state, bit for bit."""
+    cfg, _, sys = _system(n_ch, seed)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    t = sys.laser.shape[0]
+    a0, s0 = run_protocol(tables, spec, with_stats=True)
+    a1, s1, _ = run_protocol(tables, spec, with_stats=True,
+                             init_state=cold_state(t, n_ch), with_state=True)
+    for x, y in zip(jax.tree.leaves((a0, s0)), jax.tree.leaves((a1, s1))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def check_warm_fixed_point(n_ch, seed, tr_mean):
+    """Resuming a finished run is free: no probes, no executed rounds, and
+    the state (hence every lock) is unchanged."""
+    cfg, _, sys = _system(n_ch, seed)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    _, _, state = run_protocol(tables, spec, with_stats=True, with_state=True)
+    resumed = state._replace(probes=jnp.zeros_like(state.probes))
+    _, stats, state2 = run_protocol(tables, spec, with_stats=True,
+                                    with_state=True, init_state=resumed)
+    done = np.asarray(jnp.all(state.lock >= 0, axis=1))
+    assert np.all(np.asarray(stats.probes)[done] == 0)
+    assert np.all(np.asarray(stats.worked)[done] == 0)
+    np.testing.assert_array_equal(
+        np.asarray(state2.lock)[done], np.asarray(state.lock)[done]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(state2.entry)[done], np.asarray(state.entry)[done]
+    )
+
+
+def check_batch_independent_resume(n_ch, seed, tr_mean):
+    """Per-trial accounting (probes incl. sticky-halt refunds, rounds,
+    locks) is identical for a trial alone vs inside the batch, resuming
+    from a mid-run warm state either way."""
+    cfg, _, sys = _system(n_ch, seed)
+    tables, spec = _tables_spec(cfg, sys, tr_mean)
+    t = sys.laser.shape[0]
+    # a mid-run state: a short bounded run that typically leaves work undone
+    _, _, mid = run_protocol(tables, spec, with_stats=True, with_state=True,
+                             n_rounds=1)
+    mid = mid._replace(probes=jnp.zeros_like(mid.probes))
+    _, full_stats, full_state = run_protocol(
+        tables, spec, with_stats=True, with_state=True, init_state=mid,
+        transactional=True, patience=3,
+    )
+    for ti in range(t):
+        sub_tables = jax.tree.map(lambda a: a[ti:ti + 1], tables)
+        sub_mid = jax.tree.map(lambda a: a[ti:ti + 1], mid)
+        _, s, st = run_protocol(
+            sub_tables, spec, with_stats=True, with_state=True,
+            init_state=sub_mid, transactional=True, patience=3,
+        )
+        for got, want in (
+            (s.probes, full_stats.probes[ti]),
+            (s.worked, full_stats.worked[ti]),
+            (s.locked, full_stats.locked[ti]),
+        ):
+            assert int(np.asarray(got)[0]) == int(np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(st.lock)[0], np.asarray(full_state.lock)[ti]
+        )
+
+
+def check_timeline_resume_equivalence(n_ch, seed, tr_mean, split=2):
+    """A campaign checkpointed at ``split`` and resumed replays the tail
+    bit-identically (stats and final state)."""
+    cfg, units, _ = _system(n_ch, seed)
+    tl = make_timeline(4, n_ch, thermal=0.3,
+                       events=((2, "lane_kill", 1), (3, "lane_swap", 1)))
+    var = {"tr_mean": tr_mean}
+    final, stats = run_timeline(cfg, units, tl, var)
+    t = final.lock.shape[0]
+    head_state, head = run_timeline(cfg, units, slice_timeline(tl, 0, split), var)
+    with tempfile.TemporaryDirectory() as d:
+        save_campaign(d, split, head_state)
+        step, resumed = restore_campaign(d, t, n_ch)
+    assert step == split
+    for a, b in zip(jax.tree.leaves(resumed), jax.tree.leaves(head_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tail_state, tail = run_timeline(cfg, units, slice_timeline(tl, split), var,
+                                    init_state=resumed)
+    for a, b in zip(jax.tree.leaves(final), jax.tree.leaves(tail_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    rejoined = jax.tree.map(
+        lambda h, tt: np.concatenate([np.asarray(h), np.asarray(tt)]), head, tail
+    )
+    for a, b in zip(jax.tree.leaves(stats), jax.tree.leaves(rejoined)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- always-on sweeps --
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean", CASES)
+def test_cold_state_equivalence(n_ch, seed, tr_mean):
+    check_cold_state_equivalence(n_ch, seed, tr_mean)
+
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean", CASES)
+def test_warm_fixed_point(n_ch, seed, tr_mean):
+    check_warm_fixed_point(n_ch, seed, tr_mean)
+
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean", CASES[:2])
+def test_batch_independent_resume(n_ch, seed, tr_mean):
+    check_batch_independent_resume(n_ch, seed, tr_mean)
+
+
+@pytest.mark.parametrize("n_ch,seed,tr_mean", CASES[:2])
+def test_timeline_resume_equivalence(n_ch, seed, tr_mean):
+    check_timeline_resume_equivalence(n_ch, seed, tr_mean)
+
+
+def test_timeline_fixed_point_steps():
+    """A drift-free timeline after a completed arbitration never probes,
+    never churns, never breaks a lock."""
+    n_ch = 8
+    cfg, units, _ = _system(n_ch, 3)
+    tl = make_timeline(3, n_ch)
+    final, stats = run_timeline(cfg, units, tl, {"tr_mean": 6.0})
+    locked0 = np.asarray(stats.locked)[0]
+    # steps 1..: pure resume of whatever step 0 established
+    assert np.all(np.asarray(stats.probes)[1:] == 0)
+    assert np.all(np.asarray(stats.rounds)[1:] == 0)
+    assert np.all(np.asarray(stats.churn)[1:] == 0)
+    assert np.all(np.asarray(stats.broken)[1:] == 0)
+    assert np.all(np.asarray(stats.locked)[1:] == locked0[None])
+
+
+def test_lane_kill_rolls_back_not_thrash():
+    """Killing a lane with all rings live is infeasible: transactional
+    re-arbitration must roll back, leaving every unaffected lock exactly
+    where it was and exactly one ring starved."""
+    n_ch = 8
+    cfg, sys = _dense_system(n_ch)
+    t = sys.laser.shape[0]
+    tables, spec = _tables_spec(cfg, sys, 50.0)
+    _, _, state = run_protocol(tables, spec, with_stats=True, with_state=True)
+    assert np.all(np.asarray(state.lock) >= 0)  # dense: always completes
+    kill = 2
+    vis = jnp.broadcast_to(
+        (jnp.arange(n_ch) != kill)[None, None, :], (t, n_ch, n_ch)
+    )
+    tables_k = build_search_tables(sys, 50.0, visible=vis,
+                                   max_alias=cfg.max_fsr_alias)
+    reval, kept = revalidate_state(tables_k, state)
+    broken = np.asarray((state.lock == kill).sum(axis=1))
+    np.testing.assert_array_equal(broken, 1)  # dense perm: one holder each
+    start = reval._replace(probes=jnp.zeros_like(reval.probes))
+    _, stats, new = run_protocol(tables_k, spec, with_stats=True,
+                                 with_state=True, init_state=start,
+                                 transactional=True, patience=3)
+    # infeasible (8 rings, 7 lines): committed state == revalidated start
+    np.testing.assert_array_equal(np.asarray(new.lock), np.asarray(reval.lock))
+    assert np.all(np.asarray(stats.locked) == n_ch - 1)
+
+
+def test_lane_kill_feasible_relock_touches_only_broken_ring():
+    """Lane l dies, ring j (holding line f) dies too: the ring that held l
+    re-locks onto a free line; every other live lock is untouched."""
+    n_ch = 8
+    cfg, sys = _dense_system(n_ch)
+    t = sys.laser.shape[0]
+    tables, spec = _tables_spec(cfg, sys, 50.0)
+    _, _, state = run_protocol(tables, spec, with_stats=True, with_state=True)
+    lock = np.asarray(state.lock)
+    kill_lane = int(lock[0, 0])       # the line ring 0 holds (same all trials)
+    dead_ring = 3
+    assert int(lock[0, dead_ring]) != kill_lane
+    lane_alive = jnp.arange(n_ch) != kill_lane
+    ring_alive = jnp.arange(n_ch) != dead_ring
+    vis = jnp.broadcast_to(
+        lane_alive[None, None, :] & ring_alive[None, :, None], (t, n_ch, n_ch)
+    )
+    tables_k = build_search_tables(sys, 50.0, visible=vis,
+                                   max_alias=cfg.max_fsr_alias)
+    reval, kept = revalidate_state(tables_k, state)
+    start = reval._replace(probes=jnp.zeros_like(reval.probes))
+    _, stats, new = run_protocol(tables_k, spec, with_stats=True,
+                                 with_state=True, init_state=start,
+                                 transactional=True, patience=3)
+    new_lock = np.asarray(new.lock)
+    live = np.ones(n_ch, bool)
+    live[dead_ring] = False
+    unaffected = live & (lock[0] != kill_lane)
+    # dense reach: the seeker sees the freed line directly, no donor chains
+    np.testing.assert_array_equal(new_lock[:, unaffected], lock[:, unaffected])
+    relocked = live & (lock[0] == kill_lane)
+    assert np.all(new_lock[:, relocked] == lock[0, dead_ring])
+    assert np.all(np.asarray(stats.probes) > 0)
+
+
+def test_hysteresis_breaks_marginal_locks():
+    """revalidate_state with a margin clears locks whose residual sits
+    within ``hysteresis`` of the tuning-range edge, and only those."""
+    n_ch = 8
+    cfg, sys = _dense_system(n_ch, t=2)
+    tr = 2.0  # lines at 0.8 k, rings at 0: line k costs 0.8 k
+    tables, spec = _tables_spec(cfg, sys, tr)
+    _, _, state = run_protocol(tables, spec, with_stats=True, with_state=True)
+    reval0, kept0 = revalidate_state(tables, state, tr=tr * sys.tr_unit,
+                                     hysteresis=0.0)
+    np.testing.assert_array_equal(np.asarray(kept0),
+                                  np.asarray(state.lock >= 0))
+    reval, kept = revalidate_state(tables, state, tr=tr * sys.tr_unit,
+                                   hysteresis=0.5)
+    delta = np.take_along_axis(
+        np.asarray(tables.delta), np.maximum(np.asarray(state.entry), 0)[..., None], -1
+    )[..., 0]
+    held = np.asarray(state.lock) >= 0
+    expect = held & (delta >= 0.5) & (delta <= tr - 0.5)
+    np.testing.assert_array_equal(np.asarray(kept), expect)
+    assert np.any(held & ~expect)  # the margin actually bit something
+    np.testing.assert_array_equal(np.asarray(reval.lock < 0), ~expect)
+
+
+def test_drift_scenarios_resolve():
+    """Every registered drift scenario builds a timeline matching its cfg."""
+    for name in DRIFT_SCENARIOS:
+        cfg, tl = drift_timeline(name)
+        assert tl.n_ch == len(cfg.s)
+        assert tl.n_steps >= 2
+        assert bool(jnp.all(tl.lane_alive[0]))  # step 0 pristine
+
+
+def test_sweep_timeline_integration():
+    """sweep(timeline=) returns trial-mean TemporalStats grids with a
+    trailing step axis; the reference loop declines timeline requests."""
+    n_ch = 8
+    cfg, units, _ = _system(n_ch, 2)
+    tl = make_timeline(3, n_ch, thermal=0.2)
+    req = SweepRequest(cfg=cfg, units=units, scheme="protocol_lta",
+                       axes={"sigma_rlv": np.array([0.2, 0.4])},
+                       fixed={"tr_mean": 5.0}, timeline=tl)
+    res = sweep(req)
+    assert res.data.probes.shape == (2, 3)
+    assert res.data.locked.shape == (2, 3)
+    with pytest.raises(NotImplementedError):
+        sweep_reference(req)
+    with pytest.raises(ValueError):
+        SweepRequest(cfg=cfg, units=units, scheme="vtrs_ssm",
+                     axes={"sigma_rlv": np.array([0.2])}, timeline=tl)
+    with pytest.raises(ValueError):
+        SweepRequest(cfg=cfg, units=units, scheme="protocol_lta",
+                     metric="min_tr", axes={"sigma_rlv": np.array([0.2])},
+                     timeline=tl)
+
+
+# ------------------------------------------------------ hypothesis layer --
+
+if HAVE_HYPOTHESIS:
+
+    @given(n_ch=st.sampled_from([4, 8]), seed=st.integers(0, 31),
+           tr_mean=st.floats(2.0, 8.0))
+    @settings(**SETTINGS)
+    def test_hypo_warm_fixed_point(n_ch, seed, tr_mean):
+        check_warm_fixed_point(n_ch, seed, tr_mean)
+
+    @given(n_ch=st.sampled_from([4, 8]), seed=st.integers(0, 31),
+           tr_mean=st.floats(2.0, 8.0))
+    @settings(**SETTINGS)
+    def test_hypo_cold_state_equivalence(n_ch, seed, tr_mean):
+        check_cold_state_equivalence(n_ch, seed, tr_mean)
+
+    @given(n_ch=st.sampled_from([4, 8]), seed=st.integers(0, 15),
+           tr_mean=st.floats(2.0, 7.0))
+    @settings(**SETTINGS)
+    def test_hypo_batch_independent_resume(n_ch, seed, tr_mean):
+        check_batch_independent_resume(n_ch, seed, tr_mean)
+
+    @given(seed=st.integers(0, 15), tr_mean=st.floats(3.0, 7.0),
+           split=st.integers(1, 3))
+    @settings(**SETTINGS)
+    def test_hypo_timeline_resume_equivalence(seed, tr_mean, split):
+        check_timeline_resume_equivalence(4, seed, tr_mean, split=split)
