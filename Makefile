@@ -2,15 +2,17 @@
 # workflow runs — the tier-1 suite, the BENCH-gate self-test, the kernel
 # microbenches (table-build/rank-merge + matching + the WDM64 sweep smoke;
 # no figure sweeps), a tiny-grid fig18 smoke (2x2 grid, low trials) so the
-# paper-scale WDM32 path stays green, and a tiny-timeline fig20 smoke so
-# the temporal re-arbitration scan stays green — both without the full
-# bench-gate cost.
+# paper-scale WDM32 path stays green, a tiny-timeline fig20 smoke so
+# the temporal re-arbitration scan stays green, and a tiny-fabric fig21
+# smoke (6-link fabric, all three schemes + constraints-off parity) so the
+# fabric layer stays green — all without the full bench-gate cost.
 PY ?= python
 
 .PHONY: ci tier1 bench-selftest bench-kernel bench-fig18-smoke \
-        bench-fig20-smoke bench bench-gate
+        bench-fig20-smoke bench-fig21-smoke bench bench-gate
 
-ci: tier1 bench-selftest bench-kernel bench-fig18-smoke bench-fig20-smoke
+ci: tier1 bench-selftest bench-kernel bench-fig18-smoke bench-fig20-smoke \
+        bench-fig21-smoke
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -26,6 +28,9 @@ bench-fig18-smoke:
 
 bench-fig20-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.fig20_temporal_relock
+
+bench-fig21-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.fig21_fabric_yield
 
 # Regenerate the BENCH trajectory file and gate it against the committed
 # baseline (>20% per-figure / per-record slowdowns fail).  On noisy shared

@@ -1,0 +1,159 @@
+"""Fig. 21 (beyond paper) — fabric-scale yield: independent vs coupled links.
+
+The ROADMAP's flagship open item: bring up a >= 1k-link DWDM fabric (8 pods,
+28 bundles x 36 links = 1008 links, 2016 transceivers) in ONE sharded sweep
+through the engine, for the protocol-family comparison at fabric scale —
+per-link oblivious LtA with retries (``seq_retry``), the paper's best
+one-shot scheme (``vtrs_ssm``), and the multi-hop augmenting protocol
+(``protocol_lta``) — under the network-level wavelength-assignment
+constraints of ``repro.fabric``:
+
+  * ``comb_coupling = 0``: per-link-independent yield, asserted
+    BIT-IDENTICAL to arbitrating each link separately through the core
+    path (the fabric layer's parity contract);
+  * ``comb_coupling = 1``: bundle-shared comb sources — correlated laser
+    draws degrade whole bundles together, which is what separates fabric
+    yield from the iid extrapolation of per-link AFP;
+  * 2-hop ring routes scoring wavelength continuity (``route_cont``).
+
+Memory: a fabric grid point is a 2*link_chunk-trial scheme evaluation; the
+audit fields assert the whole 2016-trial point sits inside the engine's
+256 MB chunk budget (at 100k links the link axis chunks internally and the
+budget still holds per chunk).
+
+``--full`` widens the TR axis and adds the half-coupled point; the fabric
+stays 1008 links in both modes (the figure's point is the scale).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.fabric import FABRIC_1K, FABRIC_TINY
+from repro.configs.wdm import WDM8_G200, WDM16_G200
+from repro.core import SweepRequest, sweep
+from repro.core.api import oblivious_arbitrate
+from repro.core.sampling import SystemBatch, UnitSamples, instantiate
+from repro.core.sweep import _CHUNK_BUDGET, scheme_point_bytes
+from repro.core.variations import as_variations
+from repro.fabric import auto_link_chunk, bringup, make_fabric_units
+from repro.launch.mesh import make_sweep_mesh
+
+from .common import timed_steady
+
+SCHEMES = ("seq_retry", "vtrs_ssm", "protocol_lta")
+
+
+def _assert_parity(cfg, spec, tr: float, scheme: str, seed: int) -> int:
+    """Constraints-off fabric bring-up == independent per-link arbitration,
+    bit for bit (the acceptance gate).  Oracle: vmapped core instantiate
+    (L=1, R=2 per link) -> one flat oblivious_arbitrate.  Returns n_links
+    checked."""
+    res = bringup(cfg, spec, tr_mean=tr, scheme=scheme, seed=seed)
+    units = make_fabric_units(cfg, spec, seed=seed)
+    k, n = spec.n_links, cfg.grid.n_ch
+    su = UnitSamples(
+        u_go=units.go[:, None, None], u_llv=units.llv[:, None, :],
+        u_rlv=units.rlv, u_fsr=units.fsr, u_tr=units.tr,
+    )
+    var = as_variations({})
+
+    @jax.jit
+    def ref(su):
+        sysb = jax.vmap(lambda u: instantiate(cfg, u, var))(su)
+        flat = SystemBatch(*[a.reshape(2 * k, n) for a in sysb])
+        return oblivious_arbitrate(cfg, flat, tr, scheme)
+
+    asg = ref(su)
+    assert np.array_equal(
+        np.asarray(asg.wl).reshape(k, 2, n), np.asarray(res.ev.wl)
+    ), f"constraints-off parity broken for {scheme}"
+    return k
+
+
+def run(full: bool = False):
+    cfg = WDM16_G200
+    spec = FABRIC_1K
+    units = make_fabric_units(cfg, spec, seed=33)
+    mesh = make_sweep_mesh()
+
+    trs = (np.array([0.40, 0.46], np.float32) if not full else
+           np.array([0.37, 0.40, 0.43, 0.46], np.float32)) * cfg.grid.fsr
+    coupling = (np.array([0.0, 1.0], np.float32) if not full else
+                np.array([0.0, 0.5, 1.0], np.float32))
+    axes = {"comb_coupling": coupling, "tr_mean": trs}
+
+    n_trials = 2 * spec.n_links
+    link_chunk = auto_link_chunk(cfg, spec.n_links)
+    point_bytes = scheme_point_bytes(cfg, 2 * link_chunk)
+    assert spec.n_links >= 1000, spec.n_links
+    assert point_bytes <= _CHUNK_BUDGET, (
+        f"fabric point {point_bytes} B exceeds the chunk budget"
+    )
+
+    # the acceptance parity gate, on the full 1008-link fabric
+    parity_links = _assert_parity(cfg, spec, float(trs[0]), "vtrs_ssm", 33)
+
+    rows = []
+    for scheme in SCHEMES:
+        req = SweepRequest(cfg=cfg, units=units, scheme=scheme, fabric=spec,
+                           axes=axes, mesh=mesh)
+        res, engine_ms = timed_steady(sweep, req)
+        link_up = np.asarray(res.data.link_up, np.float32)
+        cafp = np.asarray(res.data.cafp, np.float32)
+        rows.append((
+            f"fig21/wdm16-1k/{scheme}",
+            {
+                "n_links": int(spec.n_links),
+                "trials_per_point": int(n_trials),
+                "link_chunk": int(link_chunk),
+                "point_bytes": int(point_bytes),
+                "chunk_budget": int(_CHUNK_BUDGET),
+                "fits_budget": bool(point_bytes <= _CHUNK_BUDGET),
+                "parity_links": int(parity_links),
+                "coupling": coupling.tolist(),
+                "tr": trs.tolist(),
+                "link_up": np.round(link_up, 4).tolist(),
+                "cafp": np.round(cafp, 4).tolist(),
+                "matched": np.round(
+                    np.asarray(res.data.matched, np.float32), 4).tolist(),
+                "route_up": np.round(
+                    np.asarray(res.data.route_up, np.float32), 4).tolist(),
+                "route_cont": np.round(
+                    np.asarray(res.data.route_cont, np.float32), 4).tolist(),
+                "bandwidth": np.round(
+                    np.asarray(res.data.bandwidth, np.float32), 4).tolist(),
+                "independent_link_up": round(float(link_up[0].max()), 4),
+                "coupled_link_up": round(float(link_up[-1].max()), 4),
+                "engine_ms": round(engine_ms, 1),
+            },
+        ))
+    return rows
+
+
+def smoke() -> dict:
+    """Tiny-fabric CI smoke (``make ci``): the whole fig21 path — fabric
+    sweep for all three schemes, constraints-off parity, route metrics —
+    on the 6-link WDM8 tiny fabric."""
+    cfg = WDM8_G200
+    spec = FABRIC_TINY
+    units = make_fabric_units(cfg, spec, seed=33)
+    _assert_parity(cfg, spec, 4.8, "vtrs_ssm", 33)
+    out = {}
+    for scheme in SCHEMES:
+        res = sweep(SweepRequest(
+            cfg=cfg, units=units, scheme=scheme, fabric=spec,
+            axes={"comb_coupling": [0.0, 1.0], "tr_mean": [4.4, 4.8]},
+        ))
+        link_up = np.asarray(res.data.link_up, np.float32)
+        route_cont = np.asarray(res.data.route_cont, np.float32)
+        assert link_up.shape == (2, 2), link_up.shape
+        assert np.all((link_up >= 0) & (link_up <= 1))
+        assert np.all((route_cont >= 0) & (route_cont <= 1))
+        out[scheme] = {"link_up": np.round(link_up, 4).tolist()}
+    print(f"fig21 smoke OK: {out}")
+    return out
+
+
+if __name__ == "__main__":
+    smoke()

@@ -88,6 +88,7 @@ def main() -> None:
         fig18_wdm32_cafp,
         fig19_lta_protocol,
         fig20_temporal_relock,
+        fig21_fabric_yield,
         kernel_bench,
         roofline_report,
     )
@@ -105,6 +106,7 @@ def main() -> None:
         fig18_wdm32_cafp,
         fig19_lta_protocol,
         fig20_temporal_relock,
+        fig21_fabric_yield,
         kernel_bench,
         roofline_report,
         beyond_lta,

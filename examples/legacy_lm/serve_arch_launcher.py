@@ -1,0 +1,61 @@
+"""LEGACY LM serving launcher (quarantined from ``repro.launch.serve``):
+``PYTHONPATH=src python examples/legacy_lm/serve_arch_launcher.py --arch <id>``.
+
+Batched request loop over the prefill/decode units of the dry-run; on host
+hardware uses the reduced same-family config.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch)
+    params = M.init_params(jax.random.key(0), cfg)
+    max_len = args.prompt_len + args.new_tokens
+    prefill = jax.jit(
+        lambda p, t, e: M.prefill(p, cfg, t, max_len, extra_embeds=e)
+    )
+    decode = jax.jit(lambda p, s, t: M.decode_step(p, cfg, s, t))
+
+    for req in range(args.requests):
+        prompts = jax.random.randint(
+            jax.random.key(10 + req), (args.batch, args.prompt_len), 0, cfg.vocab
+        )
+        extra = None
+        if cfg.frontend_len:
+            extra = 0.02 * jax.random.normal(
+                jax.random.key(99), (args.batch, cfg.frontend_len, cfg.d_model)
+            )
+        t0 = time.time()
+        logits, state = prefill(params, prompts, extra)
+        nxt = jnp.argmax(logits, -1)[:, None]
+        for _ in range(args.new_tokens):
+            logits, state = decode(params, state, nxt)
+            nxt = jnp.argmax(logits, -1)[:, None]
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        tput = args.batch * args.new_tokens / dt
+        print(f"request {req}: batch={args.batch} "
+              f"{dt*1e3:.0f} ms total, {tput:.1f} tok/s")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ from repro.models.config import ModelConfig
 from . import archs
 from .archs import ALL, smoke_variant  # noqa: F401
 from .shapes import SHAPES, SHAPES_BY_NAME, ShapeCell, applicable, microbatches_for  # noqa: F401
+from .fabric import FABRIC_CONFIGS  # noqa: F401
 from .wdm import WDM_CONFIGS  # noqa: F401
 
 REGISTRY = {cfg.name: cfg for cfg in ALL}

@@ -1,0 +1,53 @@
+"""Named fabric topologies for tests, demos and the fig21 benchmark.
+
+Each preset pairs a WDM config key with a ``FabricSpec`` (see
+``repro.fabric.spec``).  Link counts: a ``pods``-pod fabric has
+``pods*(pods-1)/2`` bundles of ``links_per_pair`` links each.
+"""
+from __future__ import annotations
+
+from repro.fabric import FabricSpec
+
+
+def ring_routes(pods: int, hops: int = 2) -> tuple:
+    """One ``hops``-hop route starting at every pod around the pod ring.
+
+    The WDM-ring scheduling topology of the related work (*Scheduling
+    Light-trails on WDM Rings*): route i traverses pods
+    ``i, i+1, ..., i+hops`` modulo ``pods`` — every hop a distinct bundle,
+    every bundle covered, so the route-continuity metric exercises the
+    whole fabric.
+    """
+    if not 1 <= hops < pods:
+        raise ValueError(f"ring routes need 1 <= hops < pods, got {hops}")
+    return tuple(
+        tuple((i + j) % pods for j in range(hops + 1)) for i in range(pods)
+    )
+
+
+# Tiny fabric for tests and the make-ci fig21 smoke: 3 bundles x 2 links,
+# shared combs per bundle, one 2-hop route (WDM8: 6 links, 12 trials).
+FABRIC_TINY = FabricSpec(
+    pods=3, links_per_pair=2, comb_group="bundle",
+    routes=ring_routes(3, 1) + ((0, 1, 2),),
+)
+
+# The fig21 headline fabric: 8 pods, 28 bundles x 36 links = 1008 links
+# (2016 transceiver trials — one 256 MB chunk at WDM16; the >= 1k-link
+# acceptance scale), bundle-shared combs, 2-hop ring routes.
+FABRIC_1K = FabricSpec(
+    pods=8, links_per_pair=36, comb_group="bundle", routes=ring_routes(8, 2),
+)
+
+# Pod-level comb sharing at 10k links (16 pods, 120 bundles x 84 links) —
+# the 10k-100k regime of the scalability argument; the link axis chunks
+# internally, so memory stays at one chunk regardless of fabric size.
+FABRIC_10K = FabricSpec(
+    pods=16, links_per_pair=84, comb_group="pod", routes=ring_routes(16, 3),
+)
+
+FABRIC_CONFIGS = {
+    "tiny-wdm8": ("wdm8-g200", FABRIC_TINY),
+    "fabric1k-wdm16": ("wdm16-g200", FABRIC_1K),
+    "fabric10k-wdm16": ("wdm16-g200", FABRIC_10K),
+}

@@ -107,6 +107,63 @@ def _shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
     )
 
 
+def chunked_map(item_fn, xs, *, chunk, mesh=None, broadcast=()):
+    """Map ``item_fn`` over ``xs``'s leading axis in vmapped chunks.
+
+    The engine's memory-bounding primitive, extracted so other batch axes
+    (the fabric layer's link axis) reuse the exact same machinery:
+    ``lax.map`` iterates chunks of size ``chunk`` and ``vmap`` runs the
+    items within a chunk, so peak memory is ``chunk`` times the per-item
+    footprint while the whole map stays one traced program.  ``broadcast``
+    pytrees are passed unchunked as leading arguments:
+    ``item_fn(*broadcast, item)``.
+
+    The tail chunk is padded by repeating the last item (numerically
+    benign; padded results are dropped).  With ``mesh`` (1-D) the chunk
+    axis is split over devices with ``shard_map`` — the chunk count is
+    rounded up to a device multiple so every device runs whole chunks,
+    which keeps results bit-identical to the unsharded path and invariant
+    to the mesh size.  Composable: with ``mesh=None`` this is vmap-safe,
+    so an outer ``chunked_map`` (grid points) may contain an inner one
+    (links per point).
+    """
+    tree = jax.tree_util
+    p = tree.tree_leaves(xs)[0].shape[0]
+    n_chunks = -(-p // chunk)
+    if mesh is not None:
+        n_dev = mesh.devices.size
+        n_chunks = -(-n_chunks // n_dev) * n_dev   # whole chunks per device
+    pad = n_chunks * chunk - p
+    if pad:
+        xs = tree.tree_map(
+            lambda a: jnp.concatenate(
+                [a, jnp.tile(a[-1:], (pad,) + (1,) * (a.ndim - 1))]
+            ),
+            xs,
+        )
+    chunks = tree.tree_map(
+        lambda a: a.reshape((n_chunks, chunk) + a.shape[1:]), xs
+    )
+
+    def run(*args):
+        *br, ch = args
+        return jax.lax.map(jax.vmap(partial(item_fn, *br)), ch)
+
+    if mesh is None:
+        out = run(*broadcast, chunks)
+    else:
+        P = jax.sharding.PartitionSpec
+        axis = mesh.axis_names[0]
+        out = _shard_map(
+            run, mesh=mesh,
+            in_specs=(P(),) * len(broadcast) + (P(axis),),
+            out_specs=P(axis), check_rep=False,
+        )(*broadcast, chunks)
+    return tree.tree_map(
+        lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:p], out
+    )
+
+
 def _check_names(names, *, metric: str) -> None:
     valid = axis_names()
     for name in names:
@@ -164,6 +221,14 @@ class SweepRequest:
             ``TemporalStats`` fields with a trailing step axis.  Requires a
             ``protocol_*`` scheme and ``metric="eval"``; warm/hysteresis
             knobs live on ``run_timeline`` itself.
+    fabric: optional ``repro.fabric.FabricSpec``.  Each grid point then
+            brings up the whole fabric (per-link scheme arbitration + the
+            network-level wavelength-assignment constraints) and the result
+            grids are ``FabricStats`` fields.  Requires a scheme,
+            ``metric="eval"``, ``units`` from
+            ``repro.fabric.make_fabric_units`` matching the spec, and no
+            timeline.  The link axis is chunked *inside* each grid point
+            against the same memory budget.
 
     Validation happens at construction, so an invalid request never reaches
     the engine (or the reference loop).
@@ -181,6 +246,7 @@ class SweepRequest:
     tr_fast: bool = True
     mesh: Any = None
     timeline: Any = None
+    fabric: Any = None
 
     def __post_init__(self):
         axes = {
@@ -193,6 +259,34 @@ class SweepRequest:
         fixed = {str(k): v for k, v in dict(fixed or {}).items()}
         object.__setattr__(self, "axes", axes)
         object.__setattr__(self, "fixed", fixed)
+        if self.fabric is not None:
+            # Fabric-specific diagnostics win over the generic metric/policy
+            # checks: a fabric request that also trips e.g. the min_tr rule
+            # should say what is wrong with the *fabric* usage.
+            if self.scheme is None:
+                raise ValueError(
+                    "fabric sweeps arbitrate every link with an oblivious "
+                    "scheme; pass scheme=..., not policy=..."
+                )
+            if self.metric != "eval":
+                raise ValueError("fabric sweeps require metric='eval'")
+            if self.timeline is not None:
+                raise ValueError(
+                    "fabric and timeline sweeps are mutually exclusive "
+                    "(temporal x fabric composition is a roadmap follow-on)"
+                )
+            from repro.fabric.sampling import FabricUnits
+
+            if not isinstance(self.units, FabricUnits):
+                raise ValueError(
+                    "fabric sweeps take FabricUnits from "
+                    "repro.fabric.make_fabric_units, not UnitSamples"
+                )
+            if self.units.n_links != self.fabric.n_links:
+                raise ValueError(
+                    f"units carry {self.units.n_links} links but the spec "
+                    f"describes {self.fabric.n_links}"
+                )
         _validate_request(
             tuple(axes), tuple(fixed),
             metric=self.metric, policy=self.policy, scheme=self.scheme,
@@ -306,7 +400,8 @@ def _auto_chunk(cfg: ArbitrationConfig, units: UnitSamples, n_points: int,
 @partial(
     jax.jit,
     static_argnames=("cfg", "policy", "scheme", "metric", "names",
-                     "fixed_names", "chunk", "backend", "mesh"),
+                     "fixed_names", "chunk", "backend", "mesh", "fabric",
+                     "link_chunk"),
 )
 def _sweep_flat(
     cfg: ArbitrationConfig,
@@ -323,20 +418,29 @@ def _sweep_flat(
     backend: str | None,
     mesh=None,
     timeline=None,     # Timeline pytree (traced) for temporal sweeps
+    fabric=None,       # FabricSpec (static) for fabric sweeps
+    link_chunk: int = 0,
 ):
     """Chunked vmap over flat grid points; one compilation for the grid.
 
-    With ``mesh`` (a 1-D ``jax.sharding.Mesh``), the chunk axis is split
-    over the mesh devices with ``shard_map`` — each device runs the same
-    per-chunk program on its slice of the chunk list, so results are
-    bit-identical to the unsharded engine and invariant to the mesh size
-    (the chunking contract extended to devices).
+    All chunking/sharding mechanics live in ``chunked_map``: the grid
+    points are its mapped axis, and ``units``/``fixed_values``/``timeline``
+    broadcast to every point.  With ``mesh`` the chunk axis is split over
+    devices — bit-identical to the unsharded engine and invariant to the
+    mesh size (the chunking contract extended to devices).
     """
 
     def eval_point(units, fixed_values, tl, vals):
         over = {fn: fixed_values[i] for i, fn in enumerate(fixed_names)}
         over.update({name: vals[i] for i, name in enumerate(names)})
         var = Variations(**over)
+        if fabric is not None:
+            from repro.fabric.bringup import fabric_stats_impl
+
+            return fabric_stats_impl(
+                cfg, units, fabric, var,
+                scheme=scheme, backend=backend, link_chunk=link_chunk,
+            )
         if tl is not None:
             from .temporal import run_timeline_impl
 
@@ -359,33 +463,9 @@ def _sweep_flat(
             cfg, units, scheme, variations=var, backend=backend
         )
 
-    def run_chunks(units, fixed_values, timeline, chunks):
-        # chunks (C, chunk, K) -> C-leading tree
-        return jax.lax.map(
-            jax.vmap(partial(eval_point, units, fixed_values, timeline)), chunks
-        )
-
-    p = points.shape[0]
-    n_chunks = -(-p // chunk)
-    if mesh is not None:
-        n_dev = mesh.devices.size
-        n_chunks = -(-n_chunks // n_dev) * n_dev   # whole chunks per device
-    pad = n_chunks * chunk - p
-    # Padded points repeat the last row: numerically benign, results dropped.
-    padded = jnp.concatenate([points, jnp.tile(points[-1:], (pad, 1))]) if pad else points
-    chunks = padded.reshape(n_chunks, chunk, -1)
-    if mesh is None:
-        out = run_chunks(units, fixed_values, timeline, chunks)
-    else:
-        P = jax.sharding.PartitionSpec
-        axis = mesh.axis_names[0]
-        out = _shard_map(
-            run_chunks, mesh=mesh,
-            in_specs=(P(), P(), P(), P(axis)), out_specs=P(axis),
-            check_rep=False,
-        )(units, fixed_values, timeline, chunks)
-    return jax.tree_util.tree_map(
-        lambda a: a.reshape((n_chunks * chunk,) + a.shape[2:])[:p], out
+    return chunked_map(
+        eval_point, points, chunk=chunk, mesh=mesh,
+        broadcast=(units, fixed_values, timeline),
     )
 
 
@@ -432,7 +512,21 @@ def sweep(request: SweepRequest) -> SweepResult:
         tr_idx = None
         run_names = names
 
-    chunk = request.chunk_size or _auto_chunk(cfg, units, points.shape[0], scheme)
+    if request.fabric is not None:
+        # Budget the *link* axis first (one fabric point is a 2*link_chunk-
+        # trial scheme evaluation), then fit grid points over it.
+        from repro.fabric.bringup import auto_link_chunk
+
+        link_chunk = auto_link_chunk(cfg, request.fabric.n_links)
+        per_point = scheme_point_bytes(cfg, 2 * link_chunk)
+        chunk = request.chunk_size or int(
+            np.clip(_CHUNK_BUDGET // max(per_point, 1), 1, points.shape[0])
+        )
+    else:
+        link_chunk = 0
+        chunk = request.chunk_size or _auto_chunk(
+            cfg, units, points.shape[0], scheme
+        )
     fixed_names = tuple(request.fixed)
     fixed_values = jnp.asarray(
         [float(request.fixed[k]) for k in fixed_names], jnp.float32
@@ -442,6 +536,7 @@ def sweep(request: SweepRequest) -> SweepResult:
         policy=policy, scheme=scheme, metric=metric, names=run_names,
         fixed_names=fixed_names, chunk=chunk, backend=request.backend,
         mesh=request.mesh, timeline=request.timeline,
+        fabric=request.fabric, link_chunk=link_chunk,
     )
     if tr_idx is not None:
         afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
@@ -507,6 +602,12 @@ def sweep_reference(request: SweepRequest) -> SweepResult:
             "sweep_reference has no temporal path; run_timeline is itself "
             "the per-point primitive a timeline sweep maps — compare "
             "against direct run_timeline calls instead"
+        )
+    if request.fabric is not None:
+        raise NotImplementedError(
+            "sweep_reference has no fabric path; the per-link oracle is a "
+            "vmapped core instantiate + one flat oblivious_arbitrate "
+            "(asserted bit-identical in tests/test_fabric.py)"
         )
     names, points, shape = _grid_points(request.axes)
     outs = []

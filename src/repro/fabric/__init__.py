@@ -1,0 +1,33 @@
+"""Fabric-scale arbitration: per-link schemes + network-level constraints.
+
+See ``spec`` (topology), ``sampling`` (per-link draws, comb coupling),
+``bringup`` (chunked/sharded bring-up, ``FabricStats``).  Sweep whole
+fabrics over variation grids with ``SweepRequest(fabric=...)``.
+"""
+from .bringup import (
+    FabricResult,
+    FabricStats,
+    LinkEval,
+    aggregate_stats,
+    auto_link_chunk,
+    bringup,
+    fabric_stats_impl,
+    state_from_assignment,
+)
+from .sampling import FabricUnits, instantiate_link, make_fabric_units
+from .spec import FabricSpec
+
+__all__ = [
+    "FabricResult",
+    "FabricSpec",
+    "FabricStats",
+    "FabricUnits",
+    "LinkEval",
+    "aggregate_stats",
+    "auto_link_chunk",
+    "bringup",
+    "fabric_stats_impl",
+    "instantiate_link",
+    "make_fabric_units",
+    "state_from_assignment",
+]

@@ -1,0 +1,330 @@
+"""Fabric bring-up: per-link arbitration composed with network constraints.
+
+Every link is two N-ring transceivers sharing one comb's light: bring-up
+runs the chosen arbitration scheme on both endpoints (one T=2 evaluation
+per link, vmapped over link chunks through the sweep engine's
+``chunked_map``), then composes the per-link outcomes with the
+network-level wavelength-assignment constraints of the RWA-style related
+work (PAPERS.md):
+
+  * **endpoint-matched spectral orderings** — a link is *up* only when both
+    ends arbitrate successfully; among up links, ends whose lane -> line
+    maps are LtC-clean either already agree on the barrel shift
+    (``matched``) or need a one-time electrical remap at one end
+    (``reconciled``);
+  * **shared-comb coupling** — links in one comb group draw correlated
+    laser variations (``comb_coupling`` axis; ``fabric.sampling``), so a
+    bad comb draw degrades a whole bundle together;
+  * **per-route wavelength continuity** — a route (pod sequence) is *up*
+    when every hop's bundle has a fully-arbitrated link, and *continuous*
+    when one wavelength channel is captured at both ends of a usable link
+    on every hop (the Multi-Path-RWA continuity constraint, any-link-per-
+    bundle form).
+
+``fabric_stats_impl`` is the sweep engine's per-grid-point body
+(``SweepRequest(fabric=...)``); ``bringup`` is the standalone entry that
+additionally returns per-link records and live endpoint lock state for
+warm re-arbitration (``optics/interconnect.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import _build_tables, _ideal_success, scheme_spec
+from repro.core.grid import ArbitrationConfig
+from repro.core.outcomes import classify
+from repro.core.protocol import ProtocolState
+from repro.core.relation import chain_spec
+from repro.core.sampling import SystemBatch
+from repro.core.sweep import _CHUNK_BUDGET, chunked_map, scheme_point_bytes
+from repro.core.variations import Variations, as_variations
+
+from .sampling import FabricUnits, instantiate_link, make_fabric_units
+from .spec import FabricSpec
+
+
+class LinkEval(NamedTuple):
+    """Per-link bring-up record (leading axis = links once stacked)."""
+
+    alg: jax.Array      # ()    bool: both ends arbitrated successfully
+    ideal: jax.Array    # ()    bool: ideal policy succeeds at both ends
+    lanes: jax.Array    # ()    int32 usable lanes (N when ``alg``)
+    zero: jax.Array     # (2,)  bool per-end zero-lock
+    dup: jax.Array      # (2,)  bool per-end dup-lock
+    order: jax.Array    # (2,)  bool per-end order error (scheme policy)
+    ltc_ok: jax.Array   # (2,)  bool per-end LtC-clean (uniform barrel shift)
+    shift: jax.Array    # (2,)  int32 per-end barrel shift (ring 0's line)
+    ch_up: jax.Array    # (N,)  bool: channel captured at BOTH ends
+    wl: jax.Array       # (2, N) int32 per-end locked line ids (-1 starved)
+    entry: jax.Array    # (2, N) int32 per-end locked table entries
+    system: Any = None  # SystemBatch (2, N) when requested (warm restarts)
+
+
+class FabricStats(NamedTuple):
+    """Fabric-level yield metrics (scalars; grids under the sweep engine).
+
+    ``route_up``/``route_cont`` are 1.0 when the spec declares no routes
+    (vacuously satisfied constraints).
+    """
+
+    link_up: jax.Array     # fraction of links with both ends arbitrated
+    afp: jax.Array         # fabric AFP: P(ideal fails on either end)
+    cafp: jax.Array        # P(link fails & ideal fine on both ends) (Eq. 6)
+    matched: jax.Array     # up links whose ends agree on the barrel shift
+    reconciled: jax.Array  # up links needing a one-time shift reconciliation
+    bandwidth: jax.Array   # mean usable-lane fraction over links
+    route_up: jax.Array    # routes with >= 1 fully-up link on every hop
+    route_cont: jax.Array  # routes with a continuity wavelength on every hop
+
+
+def _eval_link(
+    cfg: ArbitrationConfig,
+    spec: FabricSpec,
+    scheme: str,
+    backend: str | None,
+    with_system: bool,
+    variations: Variations,
+    link_units: FabricUnits,
+) -> LinkEval:
+    """Arbitrate one link's two endpoints and classify the outcomes."""
+    n = cfg.grid.n_ch
+    s = jnp.asarray(cfg.s)
+    sspec = scheme_spec(scheme)
+    sys = instantiate_link(cfg, spec, link_units, variations)
+    tr = variations.resolve("tr_mean", cfg)
+    tables = _build_tables(cfg, sys, tr, backend)
+    assign = sspec.arbiter(cfg, tables, chain_spec(cfg.s), backend=backend)
+    out = classify(assign, s, policy=sspec.policy)
+    ideal_ok = _ideal_success(cfg, sys, sspec.policy, tr, backend)
+
+    # LtC-cleanliness is reported for every scheme (LtA fabrics still need
+    # it for the spectral-ordering metrics); for ltc-policy schemes it
+    # coincides with ``out.success``.
+    ltc = classify(assign, s, policy="ltc")
+    shift = (assign.wl[:, 0] - s[0]) % n
+
+    onehot = jax.nn.one_hot(jnp.clip(assign.wl, 0, n - 1), n, dtype=jnp.int32)
+    counts = jnp.sum(onehot * (assign.wl >= 0)[..., None], axis=1)  # (2, N)
+    distinct = jnp.sum((counts > 0).astype(jnp.int32), axis=1)      # (2,)
+    locked = jnp.sum((assign.wl >= 0).astype(jnp.int32), axis=1)    # (2,)
+    # A lane carries data when its ring locked a *unique* line: every dup
+    # costs one extra lane beyond the distinct count (old interconnect
+    # heuristic, now per endpoint); an order error is a crossbar remap,
+    # no lane loss — and indeed 2*N - N = N below.
+    end_lanes = jnp.clip(2 * distinct - locked, 0, n)
+
+    link_alg = out.success[0] & out.success[1]
+    lanes = jnp.where(link_alg, n, jnp.minimum(end_lanes[0], end_lanes[1]))
+    return LinkEval(
+        alg=link_alg,
+        ideal=ideal_ok[0] & ideal_ok[1],
+        lanes=lanes.astype(jnp.int32),
+        zero=out.zero_lock,
+        dup=out.dup_lock,
+        order=out.order_err,
+        ltc_ok=ltc.success,
+        shift=shift.astype(jnp.int32),
+        ch_up=(counts[0] > 0) & (counts[1] > 0),
+        wl=assign.wl.astype(jnp.int32),
+        entry=assign.entry.astype(jnp.int32),
+        system=sys if with_system else None,
+    )
+
+
+def aggregate_stats(cfg: ArbitrationConfig, spec: FabricSpec,
+                    ev: LinkEval) -> FabricStats:
+    """Reduce stacked per-link records to fabric-level ``FabricStats``."""
+    n = cfg.grid.n_ch
+    f32 = lambda x: x.astype(jnp.float32)
+    alg, ideal = ev.alg, ev.ideal
+    ltc_both = ev.ltc_ok[:, 0] & ev.ltc_ok[:, 1]
+    shift_eq = ev.shift[:, 0] == ev.shift[:, 1]
+
+    if spec.routes:
+        link_pair = jnp.asarray(spec.link_pair())
+        pair_up = (
+            jnp.zeros((spec.n_pairs,), jnp.int32)
+            .at[link_pair].add(alg.astype(jnp.int32))
+        ) > 0
+        usable = ev.lanes > 0
+        avail = (
+            jnp.zeros((spec.n_pairs, n), jnp.int32)
+            .at[link_pair].add((ev.ch_up & usable[:, None]).astype(jnp.int32))
+        ) > 0
+        hops = spec.route_hops()                      # (R, H) host-side
+        valid = jnp.asarray(hops >= 0)
+        safe = jnp.asarray(np.clip(hops, 0, None))
+        r_up = jnp.all(jnp.where(valid, pair_up[safe], True), axis=1)
+        cont_c = jnp.all(
+            jnp.where(valid[:, :, None], avail[safe], True), axis=1
+        )                                             # (R, N)
+        route_up = jnp.mean(f32(r_up))
+        route_cont = jnp.mean(f32(jnp.any(cont_c, axis=1)))
+    else:
+        route_up = jnp.float32(1.0)
+        route_cont = jnp.float32(1.0)
+
+    return FabricStats(
+        link_up=jnp.mean(f32(alg)),
+        afp=1.0 - jnp.mean(f32(ideal)),
+        cafp=jnp.mean(f32(~alg & ideal)),
+        matched=jnp.mean(f32(alg & ltc_both & shift_eq)),
+        reconciled=jnp.mean(f32(alg & ltc_both & ~shift_eq)),
+        bandwidth=jnp.mean(f32(ev.lanes) / n),
+        route_up=route_up,
+        route_cont=route_cont,
+    )
+
+
+def auto_link_chunk(cfg: ArbitrationConfig, n_links: int,
+                    budget: int = _CHUNK_BUDGET) -> int:
+    """Largest link-chunk whose T=2*chunk table working set fits ``budget``.
+
+    Uses the same ``scheme_point_bytes`` accounting the sweep engine budgets
+    grid chunks with (a chunk of K links is one 2K-trial scheme evaluation),
+    so fabric memory cannot drift from the engine's contract.
+    """
+    if scheme_point_bytes(cfg, 2 * n_links) <= budget:
+        return n_links
+    lo, hi = 1, n_links
+    while hi - lo > 1:  # invariant: lo fits, hi does not
+        mid = (lo + hi) // 2
+        if scheme_point_bytes(cfg, 2 * mid) <= budget:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def fabric_stats_impl(
+    cfg: ArbitrationConfig,
+    units: FabricUnits,
+    spec: FabricSpec,
+    variations: Variations,
+    *,
+    scheme: str,
+    backend: str | None = None,
+    link_chunk: int,
+) -> FabricStats:
+    """Un-jitted fabric evaluation body: the sweep engine's per-grid-point
+    primitive for ``SweepRequest(fabric=...)`` (vmap-safe; link chunking is
+    an inner ``chunked_map``, so one grid point's live set is one link
+    chunk's tables)."""
+    ev = chunked_map(
+        partial(_eval_link, cfg, spec, scheme, backend, False),
+        units, chunk=link_chunk, broadcast=(variations,),
+    )
+    return aggregate_stats(cfg, spec, ev)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "spec", "scheme", "backend", "link_chunk", "mesh"),
+)
+def _bringup_flat(cfg, spec, units, variations, *, scheme, backend,
+                  link_chunk, mesh):
+    ev = chunked_map(
+        partial(_eval_link, cfg, spec, scheme, backend, True),
+        units, chunk=link_chunk, mesh=mesh, broadcast=(variations,),
+    )
+    return ev, aggregate_stats(cfg, spec, ev)
+
+
+def state_from_assignment(wl, entry) -> ProtocolState:
+    """One-shot ``Assignment`` fields -> a protocol-invariant-safe state.
+
+    The protocol engine requires dup-lock freedom (``_line_holder`` assumes
+    at most one holder per line), but one-shot schemes can emit duplicate
+    locks on failed trials.  Sanitize: per duplicated line the lowest-
+    indexed ring keeps the lock, later claimants are starved (their warm
+    re-arbitration relocks them red-ward).  Probes start at zero.
+    """
+    wl = jnp.asarray(wl, jnp.int32)
+    entry = jnp.asarray(entry, jnp.int32)
+    t, n = wl.shape
+    held = wl >= 0
+    eq = (wl[:, :, None] == jnp.arange(n)[None, None, :]) & held[:, :, None]
+    first_holder = jnp.argmax(eq, axis=1).astype(jnp.int32)      # (T, L)
+    mine = jnp.take_along_axis(
+        first_holder, jnp.clip(wl, 0, n - 1), axis=1
+    )
+    keep = held & (mine == jnp.arange(n, dtype=jnp.int32)[None, :])
+    lock = jnp.where(keep, wl, -1)
+    ent = jnp.where(keep, entry, -1)
+    return ProtocolState(
+        lock=lock,
+        entry=ent,
+        cursor=jnp.maximum(ent, 0),
+        probes=jnp.zeros((t,), jnp.int32),
+    )
+
+
+@dataclasses.dataclass
+class FabricResult:
+    """Standalone bring-up output: per-link records + warm-restart state.
+
+    ``ev`` fields are numpy-stacked over links; ``system`` is the flat
+    (2*K, N) instantiated batch (row 2k = link k's tx end, 2k+1 rx) and
+    ``state`` the matching live, dup-sanitized endpoint lock state —
+    together exactly what ``optics.interconnect.rearbitrate`` needs to
+    warm-restart the protocol engine instead of re-drawing thermals.
+    """
+
+    spec: FabricSpec
+    scheme: str
+    variations: Variations
+    units: FabricUnits
+    ev: LinkEval
+    stats: FabricStats
+    system: SystemBatch
+    state: ProtocolState
+
+
+def bringup(
+    cfg: ArbitrationConfig,
+    spec: FabricSpec,
+    *,
+    tr_mean: float | None = None,
+    scheme: str = "vtrs_ssm",
+    seed: int = 0,
+    variations=None,
+    backend: str | None = None,
+    mesh=None,
+    link_chunk: int | None = None,
+) -> FabricResult:
+    """Arbitrate a whole fabric in one jitted, chunked, mesh-shardable call.
+
+    ``mesh`` (1-D, e.g. ``repro.launch.mesh.make_sweep_mesh()``) splits the
+    link-chunk axis over devices with ``shard_map`` — bit-identical to the
+    unsharded path.  ``link_chunk`` defaults to the auto budget fit.
+    """
+    var = as_variations(variations)
+    if tr_mean is not None:
+        var = var.replace(tr_mean=tr_mean)
+    units = make_fabric_units(cfg, spec, seed)
+    chunk = link_chunk or auto_link_chunk(cfg, spec.n_links)
+    ev, stats = _bringup_flat(
+        cfg, spec, units, var,
+        scheme=scheme, backend=backend, link_chunk=chunk, mesh=mesh,
+    )
+    k, n = spec.n_links, cfg.grid.n_ch
+    system = SystemBatch(
+        laser=ev.system.laser.reshape(2 * k, n),
+        ring=ev.system.ring.reshape(2 * k, n),
+        fsr=ev.system.fsr.reshape(2 * k, n),
+        tr_unit=ev.system.tr_unit.reshape(2 * k, n),
+    )
+    state = state_from_assignment(
+        ev.wl.reshape(2 * k, n), ev.entry.reshape(2 * k, n)
+    )
+    return FabricResult(
+        spec=spec, scheme=scheme, variations=var, units=units,
+        ev=ev._replace(system=None), stats=stats,
+        system=system, state=state,
+    )

@@ -1,0 +1,133 @@
+"""Per-link Monte-Carlo sampling for fabric bring-up.
+
+One fabric draw is *per-link*, not a laser x ring cross product: link k has
+its own comb sample (grid offset + per-line local variation, shared by both
+endpoint transceivers — the two ends see the same physical light) and two
+independent ring-row samples (one per endpoint).  ``instantiate_link``
+reproduces ``repro.core.sampling.instantiate``'s Eq. 3-4 math exactly for
+an (L=1 laser, R=2 rings) cross product, which is what makes constraints-off
+fabric bring-up bit-identical to independent per-link arbitration (the
+fig21 acceptance parity; asserted in tests/test_fabric.py).
+
+Shared-comb coupling blends each link's private laser draws with its comb
+group's draws: ``u_eff = (1 - c) * u_private + c * u_group`` with ``c`` the
+``comb_coupling`` variation axis.  Both endpoints are exact by construction:
+c = 0 reproduces the private draw bit-for-bit (``1*u + 0*g``), c = 1 the
+group draw (``0*u + 1*g``) — so links in a comb group degrade *together*
+at full coupling, and the uncoupled limit stays a valid independence
+baseline.  For ``comb_group="link"`` the group draws alias the private
+draws and the blend is skipped entirely (spec is jit-static).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grid import ArbitrationConfig
+from repro.core.sampling import SystemBatch
+from repro.core.variations import Variations, apply_axis_transforms
+
+from .spec import FabricSpec
+
+
+class FabricUnits(NamedTuple):
+    """Unit uniform deviates in [-1, 1] for every link of a fabric.
+
+    Laser draws are per link (both endpoints share the comb); ring draws
+    are per endpoint (axis 1: 0 = tx-side transceiver, 1 = rx-side).
+    ``g_go``/``g_llv`` are the link's comb-*group* draws, pre-gathered to
+    link order (for ``comb_group="link"`` they alias ``go``/``llv``).
+    """
+
+    go: jax.Array     # (K,)       grid offset per link comb
+    llv: jax.Array    # (K, N)     laser local variation per link comb
+    g_go: jax.Array   # (K,)       comb-group grid offset, gathered per link
+    g_llv: jax.Array  # (K, N)     comb-group local variation, per link
+    rlv: jax.Array    # (K, 2, N)  ring local variation per endpoint
+    fsr: jax.Array    # (K, 2, N)  FSR variation per endpoint
+    tr: jax.Array     # (K, 2, N)  tuning-range variation per endpoint
+
+    @property
+    def n_links(self) -> int:
+        return self.go.shape[0]
+
+
+def make_fabric_units(
+    cfg: ArbitrationConfig, spec: FabricSpec, seed: int
+) -> FabricUnits:
+    """Draw genuinely independent per-link/per-endpoint unit samples.
+
+    (This replaces the old interconnect ``seed``/``seed+1`` re-draw splice,
+    which crossed an n_links-laser batch with an n_links-ring batch and kept
+    only the first n_links of the n_links^2 trials — every link shared
+    laser sample 0.)
+    """
+    n = cfg.grid.n_ch
+    k = spec.n_links
+    ks = jax.random.split(jax.random.key(seed), 7)
+    u = lambda key, shape: jax.random.uniform(key, shape, jnp.float32, -1.0, 1.0)
+    go = u(ks[0], (k,))
+    llv = u(ks[1], (k, n))
+    if spec.comb_group == "link":
+        g_go, g_llv = go, llv  # blend is the identity; see instantiate_link
+    else:
+        group = jnp.asarray(spec.link_group())
+        g_go = u(ks[2], (spec.n_groups,))[group]
+        g_llv = u(ks[3], (spec.n_groups, n))[group]
+    return FabricUnits(
+        go=go, llv=llv, g_go=g_go, g_llv=g_llv,
+        rlv=u(ks[4], (k, 2, n)),
+        fsr=u(ks[5], (k, 2, n)),
+        tr=u(ks[6], (k, 2, n)),
+    )
+
+
+def instantiate_link(
+    cfg: ArbitrationConfig,
+    spec: FabricSpec,
+    units: FabricUnits,
+    variations: Variations,
+) -> SystemBatch:
+    """One link's unit draws -> a T=2 ``SystemBatch`` (one trial per end).
+
+    ``units`` here is a single-link slice (leading K axis removed — the
+    bring-up engine vmaps this over link chunks).  Math is Eq. 3-4 exactly
+    as ``core.sampling.instantiate`` computes it for L=1, R=2: both trials
+    share the link's one laser row, each gets its own ring row.
+    """
+    grid = cfg.grid
+    s_go = variations.resolve("sigma_go", cfg)
+    s_llv = variations.resolve("sigma_llv_frac", cfg) * grid.grid_spacing
+    s_rlv = variations.resolve("sigma_rlv", cfg)
+    s_fsr = variations.resolve("sigma_fsr_frac", cfg)
+    s_tr = variations.resolve("sigma_tr_frac", cfg)
+    fsr0 = variations.resolve("fsr_mean", cfg)
+
+    if spec.comb_group == "link":
+        u_go, u_llv = units.go, units.llv
+    else:
+        c = variations.resolve("comb_coupling", cfg)
+        u_go = (1.0 - c) * units.go + c * units.g_go
+        u_llv = (1.0 - c) * units.llv + c * units.g_llv
+
+    # Lasers: lambda_i = grid_i + Delta_gO + Delta_lLV,i           (Eq. 3)
+    laser = (
+        jnp.asarray(grid.laser_grid())[None, :]
+        + s_go * u_go
+        + s_llv * u_llv[None, :]
+    )  # (1, N); u_go is scalar here (the link's comb offset)
+    # Rings: lambda_i = grid(r_i) - lambda_rB + Delta_rLV,i        (Eq. 4)
+    ring = jnp.asarray(grid.ring_grid(cfg.r))[None, :] + s_rlv * units.rlv
+    fsr = fsr0 * (1.0 + s_fsr * units.fsr)       # (2, N)
+    tr_unit = 1.0 + s_tr * units.tr              # (2, N)
+
+    n = laser.shape[1]
+    sys = SystemBatch(
+        laser=jnp.broadcast_to(laser, (2, n)),
+        ring=ring,
+        fsr=fsr,
+        tr_unit=tr_unit,
+    )
+    return apply_axis_transforms(sys, variations, cfg)

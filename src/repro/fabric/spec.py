@@ -1,0 +1,157 @@
+"""Declarative fabric topology: pods, link bundles, comb groups, routes.
+
+A ``FabricSpec`` describes a DWDM fabric the way the network-level related
+work frames it (*Scheduling Light-trails on WDM Rings*, *Multi-Path RWA* —
+PAPERS.md): pods connected by *bundles* of point-to-point DWDM links, each
+link a pair of N-ring transceivers sharing one comb's light, with routes as
+pod sequences subject to per-hop availability and wavelength-continuity
+constraints.  The spec is a frozen, hashable dataclass — it rides the sweep
+engine's jit-static argument tuple exactly like ``ArbitrationConfig`` — and
+all derived topology arrays (link -> pod pair, comb group, route hop maps)
+are host-side numpy, computed once and cached on first use.
+
+Comb-source sharing is the fabric-level coupling knob: links in one comb
+group draw *correlated* laser variations, blended by the ``comb_coupling``
+variation axis registered below (0 = fully private draws, the constraints-
+off limit that is bit-identical to independent per-link arbitration; 1 =
+identical group draws).  ``comb_group`` picks the sharing topology:
+
+  "link"    one comb per link (no coupling; mixing is the identity)
+  "bundle"  all links of a pod pair share one comb
+  "pod"     all bundles out of the lower-numbered pod share one comb
+  "fabric"  a single comb bank drives every link
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.variations import axis_names, register_axis
+
+_COMB_GROUPS = ("link", "bundle", "pod", "fabric")
+
+
+def _coupling_check(v: float) -> None:
+    if not 0.0 <= v <= 1.0:
+        raise ValueError(
+            f"axis 'comb_coupling' must be in [0, 1], got {v}"
+        )
+
+
+# Fabric-level variation axis, registered through the PR-3 extension
+# contract: one call makes it a valid ``Variations`` key and a sweepable
+# ``SweepRequest`` axis with no engine edits.  No ``transform`` hook — the
+# fabric sampler consumes it directly when blending comb-group draws
+# (a per-link quantity, invisible to the single-transceiver sampler).
+if "comb_coupling" not in axis_names():  # idempotent under module reload
+    register_axis(
+        "comb_coupling", lambda cfg: 0.0,
+        doc=("shared-comb coupling strength in [0, 1]: laser variation "
+             "draws blend (1-c)*private + c*group within a comb group"),
+        validate=_coupling_check,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FabricSpec:
+    """A complete fabric topology description (hashable, jit-static).
+
+    pods:           number of pods; every unordered pod pair gets a bundle.
+    links_per_pair: links (transceiver pairs) per pod-pair bundle.
+    comb_group:     comb-source sharing topology (see module docstring).
+    routes:         tuple of routes, each a tuple of >= 2 pod ids whose
+                    consecutive pairs name the bundles the route traverses.
+                    Route metrics (``FabricStats.route_up`` /
+                    ``route_cont``) are vacuously 1.0 when empty.
+    """
+
+    pods: int = 2
+    links_per_pair: int = 8
+    comb_group: str = "link"
+    routes: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "routes",
+                           tuple(tuple(int(p) for p in r) for r in self.routes))
+        if self.pods < 2:
+            raise ValueError(f"a fabric needs >= 2 pods, got {self.pods}")
+        if self.links_per_pair < 1:
+            raise ValueError(
+                f"links_per_pair must be >= 1, got {self.links_per_pair}"
+            )
+        if self.comb_group not in _COMB_GROUPS:
+            raise ValueError(
+                f"unknown comb_group {self.comb_group!r}; valid: {_COMB_GROUPS}"
+            )
+        for route in self.routes:
+            if len(route) < 2:
+                raise ValueError(f"route {route} needs >= 2 pods")
+            for a, b in zip(route, route[1:]):
+                if a == b:
+                    raise ValueError(f"route {route} repeats pod {a}")
+                if not (0 <= a < self.pods and 0 <= b < self.pods):
+                    raise ValueError(
+                        f"route {route} names a pod outside 0..{self.pods - 1}"
+                    )
+
+    # ---------------------------------------------------------- topology
+    @property
+    def pairs(self) -> tuple:
+        """Unordered pod pairs (a < b), bundle index order."""
+        return tuple(
+            (a, b)
+            for a in range(self.pods)
+            for b in range(a + 1, self.pods)
+        )
+
+    @property
+    def n_pairs(self) -> int:
+        return self.pods * (self.pods - 1) // 2
+
+    @property
+    def n_links(self) -> int:
+        return self.n_pairs * self.links_per_pair
+
+    def link_pair(self) -> np.ndarray:
+        """(n_links,) int: bundle (pod-pair) index of each link."""
+        return np.repeat(np.arange(self.n_pairs), self.links_per_pair)
+
+    def link_pods(self) -> tuple:
+        """((n_links,) src pod, (n_links,) dst pod) with src < dst."""
+        pairs = np.asarray(self.pairs, np.int64).reshape(-1, 2)
+        lp = self.link_pair()
+        return pairs[lp, 0], pairs[lp, 1]
+
+    def link_in_pair(self) -> np.ndarray:
+        """(n_links,) int: index of each link within its bundle."""
+        return np.tile(np.arange(self.links_per_pair), self.n_pairs)
+
+    # -------------------------------------------------------- comb groups
+    def link_group(self) -> np.ndarray:
+        """(n_links,) int: comb group of each link (see ``n_groups``)."""
+        if self.comb_group == "link":
+            return np.arange(self.n_links)
+        if self.comb_group == "bundle":
+            return self.link_pair()
+        if self.comb_group == "pod":
+            return self.link_pods()[0]
+        return np.zeros(self.n_links, np.int64)  # "fabric"
+
+    @property
+    def n_groups(self) -> int:
+        return int(self.link_group().max()) + 1
+
+    # ------------------------------------------------------------- routes
+    @property
+    def max_hops(self) -> int:
+        return max((len(r) - 1 for r in self.routes), default=0)
+
+    def route_hops(self) -> np.ndarray:
+        """(n_routes, max_hops) int: bundle index per hop, -1 padding."""
+        pair_index = {p: i for i, p in enumerate(self.pairs)}
+        hops = np.full((len(self.routes), max(self.max_hops, 1)), -1, np.int64)
+        for ri, route in enumerate(self.routes):
+            for hi, (a, b) in enumerate(zip(route, route[1:])):
+                hops[ri, hi] = pair_index[(min(a, b), max(a, b))]
+        return hops

@@ -1,59 +1,24 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+"""Pointer stub: the LM-era serving launcher moved to the legacy quarantine.
 
-Batched request loop over the prefill/decode units of the dry-run; on host
-hardware uses the reduced same-family config.
+The generic-LM request loop that used to live here (``--arch`` configs,
+``repro.models`` prefill/decode) is seed scaffolding unrelated to the
+wavelength-arbitration reproduction; it now lives at
+``examples/legacy_lm/serve_arch_launcher.py`` with the rest of the
+quarantined LM stack (see ``examples/legacy_lm/README.md``).
+
+This module is reserved for the ROADMAP "arbitration as a service" item:
+a request loop whose units are arbitration evaluations (sweep requests,
+fabric bring-ups) rather than LM tokens.
 """
 from __future__ import annotations
 
-import argparse
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ARCH_IDS, get_smoke
-from repro.models import model as M
-
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="internlm2-1.8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=48)
-    ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--requests", type=int, default=3)
-    args = ap.parse_args()
-
-    cfg = get_smoke(args.arch)
-    params = M.init_params(jax.random.key(0), cfg)
-    max_len = args.prompt_len + args.new_tokens
-    prefill = jax.jit(
-        lambda p, t, e: M.prefill(p, cfg, t, max_len, extra_embeds=e)
+    raise SystemExit(
+        "repro.launch.serve: the LM serving launcher moved to "
+        "examples/legacy_lm/serve_arch_launcher.py (run it directly); "
+        "this entry point is reserved for arbitration-as-a-service."
     )
-    decode = jax.jit(lambda p, s, t: M.decode_step(p, cfg, s, t))
-
-    for req in range(args.requests):
-        prompts = jax.random.randint(
-            jax.random.key(10 + req), (args.batch, args.prompt_len), 0, cfg.vocab
-        )
-        extra = None
-        if cfg.frontend_len:
-            extra = 0.02 * jax.random.normal(
-                jax.random.key(99), (args.batch, cfg.frontend_len, cfg.d_model)
-            )
-        t0 = time.time()
-        logits, state = prefill(params, prompts, extra)
-        nxt = jnp.argmax(logits, -1)[:, None]
-        for _ in range(args.new_tokens):
-            logits, state = decode(params, state, nxt)
-            nxt = jnp.argmax(logits, -1)[:, None]
-        jax.block_until_ready(logits)
-        dt = time.time() - t0
-        tput = args.batch * args.new_tokens / dt
-        print(f"request {req}: batch={args.batch} "
-              f"{dt*1e3:.0f} ms total, {tput:.1f} tok/s")
-    print("OK")
 
 
 if __name__ == "__main__":

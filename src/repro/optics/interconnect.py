@@ -2,8 +2,12 @@
 link-initialization feature of the multi-pod fabric (DESIGN.md §2).
 
 Every inter-pod edge of the production mesh is a bundle of microring DWDM
-transceivers (paper §II).  Bring-up runs the wavelength-oblivious arbiter
-(VT-RS/SSM by default) on every transceiver; outcomes become `LinkHealth`:
+transceivers (paper §II).  This module is now a thin runtime wrapper over
+the fabric subsystem (``repro.fabric``): ``bringup`` arbitrates every link
+in ONE jitted, link-chunked call (per-link draws genuinely independent —
+the old ``seed``/``seed+1`` re-draw splice crossed an n_links-laser batch
+with an n_links-ring batch and kept the first n_links of n_links^2 trials,
+so every link shared laser sample 0), and outcomes become ``LinkHealth``:
 
   * usable lanes  (zero/dup-locked channels are dead lanes)
   * spectral ordering + the barrel-shift remap cost (LtC) feeding the
@@ -11,28 +15,32 @@ transceivers (paper §II).  Bring-up runs the wavelength-oblivious arbiter
   * effective per-link bandwidth, consumed by the collective scheduler and
     the roofline collective term
 
-Failures do not kill the job: LtC re-arbitration (barrel shift) runs
-in-place; persistent lane loss degrades bandwidth and triggers straggler
-mitigation instead (runtime/trainer.py).
+Failures do not kill the job: ``rearbitrate`` *warm-restarts* the protocol
+engine from the live lock state carried in the bring-up handle
+(``run_protocol(init_state=revalidate_state(...), transactional=True)``,
+the PR-7 temporal machinery) — surviving locks are kept, starved rings
+re-seek, and a transactional round can only improve a link.  Persistent
+lane loss degrades bandwidth and triggers straggler mitigation instead
+(runtime/trainer.py).
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    ArbitrationConfig,
-    classify,
-    evaluate_scheme,
-    make_units,
-    oblivious_arbitrate,
-)
-from repro.core import ideal
-from repro.core.sampling import instantiate
+from repro.core import ArbitrationConfig, classify, evaluate_scheme, make_units
+from repro.core.api import _build_tables, scheme_spec
+from repro.core.protocol import ProtocolState, revalidate_state, run_protocol
+from repro.core.relation import chain_spec
+from repro.core.sampling import SystemBatch
+from repro.core.ssm import Assignment
+from repro.fabric import FabricSpec
+from repro.fabric import bringup as fabric_bringup
 
 LINK_GBPS_PER_LANE = 6.25  # 50 Gb/s/lane optical -> 6.25 GB/s
 
@@ -57,10 +65,27 @@ class LinkHealth:
 
 
 @dataclasses.dataclass
+class FabricHandle:
+    """Live physical state carried from bring-up for warm re-arbitration.
+
+    ``system`` holds the instantiated optics (row 2k = link k's tx end,
+    2k+1 rx) and ``state`` the dup-sanitized endpoint lock state — enough
+    to rebuild search tables and resume the protocol engine without
+    re-drawing thermals (re-arbitration happens on the SAME hardware).
+    """
+
+    spec: FabricSpec
+    system: SystemBatch
+    state: ProtocolState
+    tr_mean: float
+
+
+@dataclasses.dataclass
 class FabricState:
     links: List[LinkHealth]
     scheme: str
     tr_mean: float
+    handle: Optional[FabricHandle] = None
 
     @property
     def min_link_bandwidth(self) -> float:
@@ -78,20 +103,44 @@ class FabricState:
         return [l for l in self.links if l.degraded]
 
 
-def _arbitrate_batch(cfg: ArbitrationConfig, seed: int, n_links: int,
-                     tr_mean: float, scheme: str):
-    """Run the oblivious arbiter on n_links sampled transceivers at once
-    (each link draws an independent laser x ring-row pair)."""
-    units = make_units(cfg, seed=seed, n_laser=n_links, n_ring=1)
-    # cross product gives n_links trials (one ring row per laser here);
-    # re-draw rings per link for full independence
-    units2 = make_units(cfg, seed=seed + 1, n_laser=1, n_ring=n_links)
-    units = units._replace(u_rlv=units2.u_rlv, u_fsr=units2.u_fsr, u_tr=units2.u_tr)
-    sys = instantiate(cfg, units)
-    assign = oblivious_arbitrate(cfg, sys, tr_mean, scheme)
-    out = classify(assign, jnp.asarray(cfg.s), policy="ltc")
-    shift = (assign.wl[:, 0] - jnp.asarray(cfg.s)[0]) % cfg.grid.n_ch
-    return out, np.asarray(shift), np.asarray(assign.wl)
+def _link_summaries(cfg: ArbitrationConfig, wl: np.ndarray,
+                    policy: str) -> tuple:
+    """(K, 2, N) locked lines -> per-link (ok, lanes, shift, failure).
+
+    The same lane accounting as the fabric layer: a lane carries data when
+    its ring locked a unique line (every dup costs one extra lane), an
+    order error is a crossbar remap with no lane loss, and a link is up
+    only when BOTH ends succeed under the scheme's policy.
+    """
+    n = cfg.grid.n_ch
+    s = jnp.asarray(cfg.s)
+    k = wl.shape[0]
+    flat = jnp.asarray(wl.reshape(2 * k, n))
+    asg = Assignment(entry=jnp.zeros_like(flat), wl=flat,
+                     delta=jnp.zeros(flat.shape, jnp.float32))
+    out = classify(asg, s, policy=policy)
+    shift = np.asarray((flat[:, 0] - s[0]) % n).reshape(k, 2)
+    succ = np.asarray(out.success).reshape(k, 2)
+    zero = np.asarray(out.zero_lock).reshape(k, 2)
+    dup = np.asarray(out.dup_lock).reshape(k, 2)
+    order = np.asarray(out.order_err).reshape(k, 2)
+
+    locked = wl >= 0
+    distinct = np.array([
+        [len({int(v) for v in wl[i, e] if v >= 0}) for e in range(2)]
+        for i in range(k)
+    ])
+    end_lanes = np.clip(2 * distinct - locked.sum(axis=2), 0, n)
+    link_ok = succ.all(axis=1)
+    lanes = np.where(link_ok, n, end_lanes.min(axis=1))
+    failure = [
+        None if link_ok[i] else
+        "zero_lock" if zero[i].any() else
+        "dup_lock" if dup[i].any() else
+        "order_err" if order[i].any() else None
+        for i in range(k)
+    ]
+    return link_ok, lanes, shift[:, 1], failure
 
 
 def bringup(
@@ -103,67 +152,144 @@ def bringup(
     scheme: str = "vtrs_ssm",
     seed: int = 0,
 ) -> FabricState:
-    """Arbitrate every inter-pod transceiver; returns fabric health."""
-    links: List[LinkHealth] = []
-    pairs = [(a, b) for a in range(pods) for b in range(pods) if a < b]
-    for pi, (a, b) in enumerate(pairs):
-        out, shift, wl = _arbitrate_batch(
-            cfg, seed + 101 * pi, links_per_pod_pair, tr_mean, scheme
+    """Arbitrate every inter-pod transceiver; returns fabric health.
+
+    One fabric-layer call (jitted, link-chunked); per-link comb and ring
+    draws are independent (``comb_group="link"`` — the runtime models
+    per-link comb sources; couple them via ``repro.fabric`` directly).
+    The returned state carries a ``FabricHandle`` so ``rearbitrate`` can
+    warm-restart the protocol engine on the same physical draws.
+    """
+    spec = FabricSpec(pods=pods, links_per_pair=links_per_pod_pair,
+                      comb_group="link")
+    res = fabric_bringup(cfg, spec, tr_mean=tr_mean, scheme=scheme, seed=seed)
+    n = cfg.grid.n_ch
+    wl = np.asarray(res.ev.wl)
+    _, lanes, shift, failure = _link_summaries(
+        cfg, wl, scheme_spec(scheme).policy
+    )
+    src, dst = spec.link_pods()
+    tix = spec.link_in_pair()
+    links = [
+        LinkHealth(
+            src_pod=int(src[k]), dst_pod=int(dst[k]), transceiver=int(tix[k]),
+            lanes_total=n, lanes_up=int(lanes[k]),
+            spectral_shift=int(shift[k]), failure=failure[k],
         )
-        succ = np.asarray(out.success)
-        zl = np.asarray(out.zero_lock)
-        dl = np.asarray(out.dup_lock)
-        oe = np.asarray(out.order_err)
-        for t in range(links_per_pod_pair):
-            if succ[t]:
-                lanes_up, fail = cfg.grid.n_ch, None
-            else:
-                # lanes that did lock a unique line still carry data;
-                # order errors cost remap but keep lanes alive.
-                lanes = wl[t]
-                good = len({int(k) for k in lanes if k >= 0})
-                dup_loss = len([k for k in lanes if k >= 0]) - good
-                lanes_up = max(0, good - dup_loss)
-                fail = (
-                    "zero_lock" if zl[t] else
-                    "dup_lock" if dl[t] else
-                    "order_err" if oe[t] else None
-                )
-                if fail == "order_err":
-                    lanes_up = cfg.grid.n_ch  # crossbar remap, no lane loss
-            links.append(
-                LinkHealth(
-                    src_pod=a, dst_pod=b, transceiver=t,
-                    lanes_total=cfg.grid.n_ch, lanes_up=int(lanes_up),
-                    spectral_shift=int(shift[t]), failure=fail,
-                )
-            )
-    return FabricState(links=links, scheme=scheme, tr_mean=tr_mean)
+        for k in range(spec.n_links)
+    ]
+    handle = FabricHandle(spec=spec, system=res.system, state=res.state,
+                          tr_mean=tr_mean)
+    return FabricState(links=links, scheme=scheme, tr_mean=tr_mean,
+                       handle=handle)
 
 
-def rearbitrate(state: FabricState, cfg: ArbitrationConfig, *, seed: int,
+@partial(jax.jit, static_argnames=("cfg",))
+def _warm_repair(cfg: ArbitrationConfig, system: SystemBatch, tr_mean,
+                 state: ProtocolState):
+    """One warm protocol pass on the live fabric state.
+
+    Tables are rebuilt from the stored optics (drift-free here; the
+    temporal layer owns drifting tables), carried locks are revalidated
+    and re-anchored, and a transactional protocol run repairs starved
+    rings — committing per trial only if it strictly improves the lock
+    count, so link health is monotone under repair.
+    """
+    tables = _build_tables(cfg, system, tr_mean, None)
+    st, _ = revalidate_state(tables, state)
+    return run_protocol(
+        tables, chain_spec(cfg.s),
+        init_state=st, with_state=True, transactional=True, patience=4,
+    )
+
+
+def rearbitrate(state: FabricState, cfg: ArbitrationConfig, *, seed: int = 0,
                 max_rounds: int = 3) -> Tuple[FabricState, int]:
-    """Re-run arbitration on degraded links (fresh thermal state => fresh
-    draw).  Returns (new_state, rounds_used)."""
+    """Warm re-arbitration of degraded links from live lock state.
+
+    Runs the protocol engine with ``init_state=`` the handle's carried
+    locks (revalidated against rebuilt tables) instead of a cold re-draw —
+    healthy lanes keep their locks (no spectral churn), starved rings
+    re-seek with multi-hop augmenting, and transactional commits make
+    every round monotone.  Degraded ``LinkHealth`` records are re-derived
+    from the post-repair state; rounds stop early once a pass changes
+    nothing (the warm repair is deterministic).  Returns
+    ``(new_state, rounds_used)``.
+
+    ``seed`` is accepted for API compatibility; the warm path is
+    deterministic and only a legacy handle-less state uses it (cold
+    re-draw of degraded links, the pre-fabric behaviour).
+    """
+    if state.handle is None:
+        return _cold_rearbitrate(state, cfg, seed=seed, max_rounds=max_rounds)
+
+    handle = state.handle
+    links = list(state.links)
+    n = cfg.grid.n_ch
+    policy = scheme_spec(state.scheme).policy
+    proto = handle.state
+    rounds = 0
+    for _ in range(max_rounds):
+        degraded = [i for i, l in enumerate(links) if l.degraded]
+        if not degraded:
+            break
+        rounds += 1
+        _, proto = _warm_repair(cfg, handle.system, handle.tr_mean, proto)
+        wl = np.asarray(proto.lock).reshape(-1, 2, n)
+        _, lanes, shift, failure = _link_summaries(cfg, wl, policy)
+        changed = False
+        for i in degraded:
+            l = links[i]
+            new_lanes = max(int(lanes[i]), l.lanes_up)  # monotone guard
+            new_fail = failure[i] if new_lanes < l.lanes_total else None
+            if (new_lanes, new_fail, int(shift[i])) != (
+                    l.lanes_up, l.failure, l.spectral_shift):
+                links[i] = dataclasses.replace(
+                    l, lanes_up=new_lanes, spectral_shift=int(shift[i]),
+                    failure=new_fail,
+                )
+                changed = True
+        if not changed:
+            break
+    new_handle = dataclasses.replace(handle, state=proto)
+    return (
+        FabricState(links=links, scheme=state.scheme, tr_mean=state.tr_mean,
+                    handle=new_handle),
+        rounds,
+    )
+
+
+def _cold_rearbitrate(state: FabricState, cfg: ArbitrationConfig, *,
+                      seed: int, max_rounds: int) -> Tuple[FabricState, int]:
+    """Legacy path for handle-less states: fresh independent draws for the
+    degraded links (delegated to the fabric sampler — a 2-pod bundle of
+    exactly the degraded count), committing successes only."""
     rounds = 0
     links = list(state.links)
+    policy = scheme_spec(state.scheme).policy
     for r in range(max_rounds):
         degraded = [i for i, l in enumerate(links) if l.degraded]
         if not degraded:
             break
         rounds += 1
-        out, shift, wl = _arbitrate_batch(
-            cfg, seed + 31 * r, len(degraded), state.tr_mean, state.scheme
+        spec = FabricSpec(pods=2, links_per_pair=len(degraded),
+                          comb_group="link")
+        res = fabric_bringup(cfg, spec, tr_mean=state.tr_mean,
+                             scheme=state.scheme, seed=seed + 31 * r)
+        ok, _, shift, _ = _link_summaries(
+            cfg, np.asarray(res.ev.wl), policy
         )
-        succ = np.asarray(out.success)
         for j, i in enumerate(degraded):
-            if succ[j]:
+            if ok[j]:
                 l = links[i]
                 links[i] = dataclasses.replace(
                     l, lanes_up=l.lanes_total, spectral_shift=int(shift[j]),
                     failure=None,
                 )
-    return FabricState(links=links, scheme=state.scheme, tr_mean=state.tr_mean), rounds
+    return (
+        FabricState(links=links, scheme=state.scheme, tr_mean=state.tr_mean),
+        rounds,
+    )
 
 
 def expected_failure_rates(cfg: ArbitrationConfig, tr_mean: float,

@@ -1,0 +1,249 @@
+"""Fabric-layer invariants: parity, coupling, routes, sharding, warm repair.
+
+The load-bearing guarantee is *constraints-off parity*: with
+``comb_coupling = 0`` (or per-link combs) a fabric bring-up must be
+bit-identical to independent per-link arbitration through the core path —
+``repro.fabric`` adds a network layer, never a different per-link
+semantics.  The oracle is a jitted vmap of ``core.sampling.instantiate``
+(L=1 laser, R=2 rings per link) feeding one flat ``oblivious_arbitrate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fabric import FABRIC_TINY, ring_routes
+from repro.configs.wdm import WDM8_G200
+from repro.core import SweepRequest, sweep
+from repro.core.api import oblivious_arbitrate
+from repro.core.sampling import SystemBatch, UnitSamples, instantiate
+from repro.core.variations import as_variations, axis_names
+from repro.fabric import (
+    FabricSpec,
+    bringup,
+    instantiate_link,
+    make_fabric_units,
+    state_from_assignment,
+)
+from repro.launch.mesh import make_sweep_mesh
+
+CFG = WDM8_G200
+TR = 5.0
+
+
+def _reference_arbitrate(cfg, spec, units, tr, scheme):
+    """Independent per-link oracle: vmapped core instantiate -> one flat
+    oblivious_arbitrate.  Jitted so XLA fusion matches the fabric path."""
+    var = as_variations({})
+    k, n = spec.n_links, cfg.grid.n_ch
+    su = UnitSamples(
+        u_go=units.go[:, None, None], u_llv=units.llv[:, None, :],
+        u_rlv=units.rlv, u_fsr=units.fsr, u_tr=units.tr,
+    )
+
+    @jax.jit
+    def ref(su):
+        sysb = jax.vmap(lambda u: instantiate(cfg, u, var))(su)
+        flat = SystemBatch(*[a.reshape(2 * k, n) for a in sysb])
+        return flat, oblivious_arbitrate(cfg, flat, tr, scheme)
+
+    return ref(su)
+
+
+def test_spec_validation_and_topology():
+    spec = FabricSpec(pods=4, links_per_pair=3, comb_group="pod",
+                      routes=((0, 1, 2), (3, 0)))
+    assert spec.n_pairs == 6 and spec.n_links == 18
+    assert spec.pairs[0] == (0, 1) and spec.pairs[-1] == (2, 3)
+    np.testing.assert_array_equal(
+        spec.link_pair(), np.repeat(np.arange(6), 3))
+    src, dst = spec.link_pods()
+    assert np.all(src < dst)
+    # pod grouping keys on the lower-numbered pod
+    np.testing.assert_array_equal(spec.link_group(), src)
+    hops = spec.route_hops()
+    assert hops.shape == (2, 2)
+    assert hops[0, 0] == spec.pairs.index((0, 1))
+    assert hops[1].tolist() == [spec.pairs.index((0, 3)), -1]
+
+    with pytest.raises(ValueError, match="pods"):
+        FabricSpec(pods=1)
+    with pytest.raises(ValueError, match="comb_group"):
+        FabricSpec(comb_group="rack")
+    with pytest.raises(ValueError, match="repeats"):
+        FabricSpec(pods=3, routes=((0, 0),))
+    with pytest.raises(ValueError, match="outside"):
+        FabricSpec(pods=3, routes=((0, 7),))
+    with pytest.raises(ValueError, match="hops"):
+        ring_routes(4, 4)
+
+
+@pytest.mark.parametrize("scheme", ["vtrs_ssm", "seq_retry"])
+@pytest.mark.parametrize("comb_group", ["link", "bundle"])
+def test_constraints_off_parity_bit_identical(scheme, comb_group):
+    """Zero coupling == independent per-link arbitration, bit for bit."""
+    spec = FabricSpec(pods=3, links_per_pair=4, comb_group=comb_group)
+    res = bringup(CFG, spec, tr_mean=TR, scheme=scheme, seed=3)
+    units = make_fabric_units(CFG, spec, seed=3)
+    flat, asg = _reference_arbitrate(CFG, spec, units, TR, scheme)
+    k, n = spec.n_links, CFG.grid.n_ch
+    for a, b in zip(flat, res.system):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(asg.wl).reshape(k, 2, n), np.asarray(res.ev.wl))
+    np.testing.assert_array_equal(
+        np.asarray(asg.entry).reshape(k, 2, n), np.asarray(res.ev.entry))
+
+
+def test_comb_group_correlation():
+    """c=1: all links of a comb group see the SAME laser row (and both ends
+    of any link always share theirs); c=0 keeps private draws distinct."""
+    spec = FabricSpec(pods=2, links_per_pair=4, comb_group="bundle")
+    units = make_fabric_units(CFG, spec, seed=9)
+
+    def lasers(coupling):
+        var = as_variations({"comb_coupling": coupling})
+        sys = jax.vmap(lambda u: instantiate_link(CFG, spec, u, var))(units)
+        return np.asarray(sys.laser)  # (K, 2, N)
+
+    full = lasers(1.0)
+    np.testing.assert_array_equal(full[:, 0], full[:, 1])  # shared comb
+    for k in range(1, spec.n_links):
+        np.testing.assert_array_equal(full[0, 0], full[k, 0])  # shared group
+    off = lasers(0.0)
+    np.testing.assert_array_equal(off[:, 0], off[:, 1])
+    assert not np.array_equal(off[0, 0], off[1, 0])  # private draws differ
+    # c=0 is bit-identical to the unblended per-link sampler
+    link_spec = FabricSpec(pods=2, links_per_pair=4, comb_group="link")
+    link_units = make_fabric_units(CFG, link_spec, seed=9)
+    var = as_variations({})
+    ref = jax.vmap(lambda u: instantiate_link(CFG, link_spec, u, var))(
+        link_units)
+    np.testing.assert_array_equal(off, np.asarray(ref.laser))
+
+
+def test_route_metrics_match_numpy_reference():
+    spec = FABRIC_TINY
+    res = bringup(CFG, spec, tr_mean=4.0, scheme="vtrs_ssm", seed=11)
+    alg = np.asarray(res.ev.alg)
+    lanes = np.asarray(res.ev.lanes)
+    ch_up = np.asarray(res.ev.ch_up)
+    lp = spec.link_pair()
+    hops = spec.route_hops()
+    r_up, r_cont = [], []
+    for route in hops:
+        hs = [h for h in route if h >= 0]
+        r_up.append(all(alg[lp == h].any() for h in hs))
+        avail = [
+            np.any(ch_up[(lp == h) & (lanes > 0)], axis=0) for h in hs
+        ]
+        r_cont.append(bool(np.logical_and.reduce(avail).any()))
+    assert float(res.stats.route_up) == pytest.approx(np.mean(r_up))
+    assert float(res.stats.route_cont) == pytest.approx(np.mean(r_cont))
+    # scalar invariants
+    up = alg.mean()
+    assert float(res.stats.link_up) == pytest.approx(up)
+    assert float(res.stats.matched + res.stats.reconciled) <= up + 1e-6
+    assert float(res.stats.bandwidth) >= float(
+        res.stats.link_up) - 1e-6  # up links run all lanes
+
+
+def test_fabric_sweep_grid_mesh_and_chunking():
+    spec = FABRIC_TINY
+    units = make_fabric_units(CFG, spec, seed=3)
+    req = SweepRequest(
+        cfg=CFG, units=units, scheme="vtrs_ssm", fabric=spec,
+        axes={"comb_coupling": [0.0, 1.0], "tr_mean": [4.0, 5.0]},
+    )
+    res = sweep(req)
+    assert res.axis_names == ("comb_coupling", "tr_mean")
+    for leaf in jax.tree_util.tree_leaves(res.data):
+        assert leaf.shape == (2, 2)
+    link_up = np.asarray(res.data.link_up)
+    assert np.all((link_up >= 0) & (link_up <= 1))
+    # grid point (coupling=0, tr) equals a standalone bring-up's stats
+    ref = bringup(CFG, spec, tr_mean=4.0, scheme="vtrs_ssm", seed=3)
+    for field, grid in res.data._asdict().items():
+        assert float(np.asarray(grid)[0, 0]) == float(
+            getattr(ref.stats, field)), field
+    # mesh-sharded and point-chunked runs are bit-identical
+    for variant in (req.replace(mesh=make_sweep_mesh()),
+                    req.replace(chunk_size=1)):
+        alt = sweep(variant)
+        for a, b in zip(jax.tree_util.tree_leaves(res.data),
+                        jax.tree_util.tree_leaves(alt.data)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # internal link chunking is invariant too
+    r1 = bringup(CFG, spec, tr_mean=4.0, scheme="vtrs_ssm", seed=3,
+                 link_chunk=1)
+    np.testing.assert_array_equal(np.asarray(r1.ev.wl), np.asarray(ref.ev.wl))
+    # ... and mesh-sharded standalone bring-up as well
+    rm = bringup(CFG, spec, tr_mean=4.0, scheme="vtrs_ssm", seed=3,
+                 mesh=make_sweep_mesh())
+    np.testing.assert_array_equal(np.asarray(rm.ev.wl), np.asarray(ref.ev.wl))
+
+
+def test_sweep_request_fabric_validation():
+    spec = FABRIC_TINY
+    units = make_fabric_units(CFG, spec, seed=0)
+    ok = dict(cfg=CFG, units=units, fabric=spec, axes={"tr_mean": [5.0]})
+    assert "comb_coupling" in axis_names()
+    with pytest.raises(ValueError, match="scheme"):
+        SweepRequest(policy="ltc", **ok)
+    with pytest.raises(ValueError, match="metric"):
+        SweepRequest(scheme="vtrs_ssm", metric="min_tr", cfg=CFG,
+                     units=units, fabric=spec, axes={"sigma_rlv": [1.0]})
+    with pytest.raises(ValueError, match="FabricUnits"):
+        SweepRequest(scheme="vtrs_ssm", cfg=CFG, fabric=spec,
+                     units=jnp.zeros(3), axes={"tr_mean": [5.0]})
+    other = FabricSpec(pods=2, links_per_pair=1)
+    with pytest.raises(ValueError, match="links"):
+        SweepRequest(scheme="vtrs_ssm", cfg=CFG, units=units, fabric=other,
+                     axes={"tr_mean": [5.0]})
+
+
+def test_state_from_assignment_sanitizes_dups():
+    wl = jnp.asarray([[2, 2, -1, 3], [1, 3, 3, 3]], jnp.int32)
+    entry = jnp.asarray([[0, 1, -1, 2], [4, 0, 1, 2]], jnp.int32)
+    st = state_from_assignment(wl, entry)
+    np.testing.assert_array_equal(
+        np.asarray(st.lock), [[2, -1, -1, 3], [1, 3, -1, -1]])
+    np.testing.assert_array_equal(
+        np.asarray(st.entry), [[0, -1, -1, 2], [4, 0, -1, -1]])
+    assert np.all(np.asarray(st.cursor) >= 0)
+    np.testing.assert_array_equal(np.asarray(st.probes), [0, 0])
+
+
+def test_interconnect_warm_rearbitrate_monotone_and_heals():
+    from repro.optics.interconnect import bringup as ic_bringup
+    from repro.optics.interconnect import rearbitrate
+
+    fab = ic_bringup(2, 8, CFG, tr_mean=4.6, scheme="vtrs_ssm", seed=0)
+    assert fab.handle is not None and len(fab.links) == 8
+    healthy = {
+        i: (l.lanes_up, l.spectral_shift)
+        for i, l in enumerate(fab.links) if not l.degraded
+    }
+    fab2, rounds = rearbitrate(fab, CFG, seed=1)
+    assert fab2.bandwidth_fraction >= fab.bandwidth_fraction
+    assert rounds <= 3
+    for i, (lanes, shift) in healthy.items():
+        # warm repair never touches healthy links (no spectral churn)
+        assert (fab2.links[i].lanes_up, fab2.links[i].spectral_shift) \
+            == (lanes, shift)
+    # injected record-level degradation (the trainer's link-event pattern)
+    # heals from the carried live state
+    l = fab2.links[0]
+    fab2.links[0] = dataclasses.replace(
+        l, lanes_up=max(0, l.lanes_up - 2), failure="zero_lock")
+    fab3, _ = rearbitrate(fab2, CFG, seed=2)
+    assert fab3.links[0].lanes_up >= l.lanes_up
+    # handle-less states fall back to the legacy cold path and stay monotone
+    cold = dataclasses.replace(fab, handle=None)
+    cold2, _ = rearbitrate(cold, CFG, seed=5)
+    assert cold2.bandwidth_fraction >= cold.bandwidth_fraction
+    assert cold2.handle is None
