@@ -3,16 +3,19 @@
 # microbenches (table-build/rank-merge + matching + the WDM64 sweep smoke;
 # no figure sweeps), a tiny-grid fig18 smoke (2x2 grid, low trials) so the
 # paper-scale WDM32 path stays green, a tiny-timeline fig20 smoke so
-# the temporal re-arbitration scan stays green, and a tiny-fabric fig21
+# the temporal re-arbitration scan stays green, a tiny-fabric fig21
 # smoke (6-link fabric, all three schemes + constraints-off parity) so the
-# fabric layer stays green — all without the full bench-gate cost.
+# fabric layer stays green, and a tiny-fabric fig22 chaos smoke (no-fault
+# parity + kill-and-heal warm/cold gates) so the temporal x fabric
+# composition stays green — all without the full bench-gate cost.
 PY ?= python
 
 .PHONY: ci tier1 bench-selftest bench-kernel bench-fig18-smoke \
-        bench-fig20-smoke bench-fig21-smoke bench bench-gate
+        bench-fig20-smoke bench-fig21-smoke bench-fig22-smoke bench \
+        bench-gate
 
 ci: tier1 bench-selftest bench-kernel bench-fig18-smoke bench-fig20-smoke \
-        bench-fig21-smoke
+        bench-fig21-smoke bench-fig22-smoke
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -31,6 +34,9 @@ bench-fig20-smoke:
 
 bench-fig21-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.fig21_fabric_yield
+
+bench-fig22-smoke:
+	PYTHONPATH=src:. $(PY) -m benchmarks.fig22_fabric_chaos
 
 # Regenerate the BENCH trajectory file and gate it against the committed
 # baseline (>20% per-figure / per-record slowdowns fail).  On noisy shared

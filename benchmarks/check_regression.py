@@ -182,6 +182,33 @@ def self_test() -> int:
     ok, notes = compare(timeout_payload, payload(f=(1000.0, 100.0)))
     checks.append(("timed-out baseline treated as missing",
                    ok == [] and len(notes) == 2))
+    # fig22 chaos records carry warm_ms/cold_ms steady timings; the gate
+    # must behave in BOTH diff directions: a slower candidate fails, a
+    # faster one (or a baseline predating fig22) never does.
+    def f22(warm_ms, cold_ms):
+        return {
+            "schema": "bench.v1", "full": False,
+            "records": [{
+                "figure": "fig22_fabric_chaos",
+                "name": "fig22/mid-linkflap/vtrs_ssm",
+                "module_wall_ms": 2000.0,
+                "derived": {"warm_wins_probes": True,
+                            "warm_ms": warm_ms, "cold_ms": cold_ms},
+            }],
+        }
+
+    bad, _ = compare(f22(100.0, 400.0), f22(150.0, 400.0))
+    checks.append(("fig22 warm_ms slowdown flagged",
+                   [(r["kind"], r["name"]) for r in bad]
+                   == [("record", "fig22/mid-linkflap/vtrs_ssm:warm_ms")]))
+    ok, _ = compare(f22(150.0, 400.0), f22(100.0, 380.0))
+    checks.append(("fig22 speedup passes", ok == []))
+    ok, notes = compare(payload(f=(1000.0, 100.0)), f22(100.0, 400.0))
+    checks.append(("fig22 absent from old baseline is note-only",
+                   ok == [] and any("fig22" in n for n in notes)))
+    ok, notes = compare(f22(100.0, 400.0), payload(f=(1000.0, 100.0)))
+    checks.append(("fig22 dropped from candidate is note-only",
+                   ok == [] and any("fig22" in n for n in notes)))
     prior = os.environ.get("BENCH_GATE_THRESHOLD")
     try:
         os.environ["BENCH_GATE_THRESHOLD"] = "0.5"

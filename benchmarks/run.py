@@ -89,6 +89,7 @@ def main() -> None:
         fig19_lta_protocol,
         fig20_temporal_relock,
         fig21_fabric_yield,
+        fig22_fabric_chaos,
         kernel_bench,
         roofline_report,
     )
@@ -107,6 +108,7 @@ def main() -> None:
         fig19_lta_protocol,
         fig20_temporal_relock,
         fig21_fabric_yield,
+        fig22_fabric_chaos,
         kernel_bench,
         roofline_report,
         beyond_lta,

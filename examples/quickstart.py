@@ -158,3 +158,33 @@ print(
     f"(sigma x TR grids over whole fabrics: SweepRequest(fabric=...); "
     f"benchmarks/fig21_fabric_yield.py runs 1008 links per point)"
 )
+
+# Fabric chaos (beyond-paper Fig. 22): the temporal and fabric axes
+# compose.  A FabricTimeline carries correlated drift plus fault events —
+# here a link killed at step 1 and healed at step 3 — and
+# run_fabric_timeline scans every link's protocol state through it:
+# disturbed links warm re-lock, undisturbed links spend nothing, and a
+# link that comes back from a full outage cold-restarts its arbitration.
+from repro.fabric import (
+    make_fabric_timeline,
+    make_fabric_units,
+    run_fabric_timeline,
+)
+
+tl_f = make_fabric_timeline(
+    FABRIC_TINY, 5, cfg.grid.n_ch,
+    events=((1, "link_kill", 2), (3, "link_heal", 2)),
+)
+units_f = make_fabric_units(cfg, FABRIC_TINY, seed=0)
+_, chaos = run_fabric_timeline(cfg, units_f, FABRIC_TINY, tl_f,
+                               scheme="vtrs_ssm")
+bw = np.asarray(chaos.fabric.bandwidth)
+probes = np.asarray(chaos.probes).mean(axis=1)
+print(f"\n{'step':>4s} {'bandwidth':>10s} {'mean probes':>12s}")
+for s in range(tl_f.n_steps):
+    print(f"{s:4d} {float(bw[s]):10.3f} {float(probes[s]):12.1f}")
+print(
+    "kill-and-heal: bandwidth dips while the link is down and recovers on\n"
+    "heal; survivors never spend a probe (benchmarks/fig22_fabric_chaos.py\n"
+    "runs comb outages, pod heating and ring death with warm-vs-cold gates)"
+)

@@ -225,10 +225,22 @@ class SweepRequest:
             brings up the whole fabric (per-link scheme arbitration + the
             network-level wavelength-assignment constraints) and the result
             grids are ``FabricStats`` fields.  Requires a scheme,
-            ``metric="eval"``, ``units`` from
-            ``repro.fabric.make_fabric_units`` matching the spec, and no
-            timeline.  The link axis is chunked *inside* each grid point
-            against the same memory budget.
+            ``metric="eval"`` and ``units`` from
+            ``repro.fabric.make_fabric_units`` matching the spec.  The link
+            axis is chunked *inside* each grid point against the same
+            memory budget.
+
+    Composition precedence: with BOTH ``fabric`` and ``timeline`` set, the
+    fabric wins the dispatch and the timeline must be a fabric-scoped
+    ``repro.fabric.FabricTimeline`` matching the spec's link count and the
+    config's channel count — each grid point then runs the full chaos scan
+    (``run_fabric_timeline`` defaults: warm, transactional) and the result
+    grids are link-mean ``FabricChaosStats`` fields with a trailing step
+    axis.  A per-transceiver ``Timeline`` has no link addressing, and a
+    ``FabricTimeline`` without ``fabric=`` has no topology — both
+    combinations are rejected at construction.  Any scheme is accepted
+    (bring-up uses the scheme's arbiter; re-lock always runs the protocol
+    engine), unlike transceiver timelines which need ``protocol_*``.
 
     Validation happens at construction, so an invalid request never reaches
     the engine (or the reference loop).
@@ -271,10 +283,25 @@ class SweepRequest:
             if self.metric != "eval":
                 raise ValueError("fabric sweeps require metric='eval'")
             if self.timeline is not None:
-                raise ValueError(
-                    "fabric and timeline sweeps are mutually exclusive "
-                    "(temporal x fabric composition is a roadmap follow-on)"
-                )
+                from repro.fabric.chaos import FabricTimeline
+
+                if not isinstance(self.timeline, FabricTimeline):
+                    raise ValueError(
+                        "fabric sweeps compose with a fabric-scoped "
+                        "FabricTimeline (repro.fabric.make_fabric_timeline); "
+                        "a per-transceiver Timeline has no link addressing "
+                        f"at fabric scale (got {type(self.timeline).__name__})"
+                    )
+                if self.timeline.n_links != self.fabric.n_links:
+                    raise ValueError(
+                        f"timeline spans {self.timeline.n_links} links but "
+                        f"the fabric spec describes {self.fabric.n_links}"
+                    )
+                if self.timeline.n_ch != len(self.cfg.s):
+                    raise ValueError(
+                        f"timeline has {self.timeline.n_ch} channels but "
+                        f"cfg has {len(self.cfg.s)}"
+                    )
             from repro.fabric.sampling import FabricUnits
 
             if not isinstance(self.units, FabricUnits):
@@ -304,7 +331,15 @@ class SweepRequest:
                 f"sweep meshes are 1-D (the chunk axis); got axes "
                 f"{self.mesh.axis_names}"
             )
-        if self.timeline is not None:
+        if self.timeline is not None and self.fabric is None:
+            from repro.fabric.chaos import FabricTimeline
+
+            if isinstance(self.timeline, FabricTimeline):
+                raise ValueError(
+                    "a FabricTimeline carries per-link faults but no "
+                    "topology; pass the matching fabric=FabricSpec(...) "
+                    "alongside it"
+                )
             if self.scheme is None or not self.scheme.startswith("protocol_"):
                 raise ValueError(
                     "timeline sweeps run incremental re-arbitration and "
@@ -435,6 +470,18 @@ def _sweep_flat(
         over.update({name: vals[i] for i, name in enumerate(names)})
         var = Variations(**over)
         if fabric is not None:
+            if tl is not None:
+                from repro.fabric.chaos import (
+                    run_fabric_timeline_impl,
+                    summarize_chaos,
+                )
+
+                _, cs = run_fabric_timeline_impl(
+                    cfg, units, fabric, tl, var,
+                    scheme=scheme, backend=backend, link_chunk=link_chunk,
+                )
+                # link-mean per step: grids stay axis-shaped + (S,) trailing
+                return summarize_chaos(cs)
             from repro.fabric.bringup import fabric_stats_impl
 
             return fabric_stats_impl(

@@ -192,6 +192,63 @@ def _protocol_kwargs(scheme: str) -> dict | None:
     return dict(spec.params)
 
 
+def protocol_relock(
+    tables,
+    spec,
+    start: ProtocolState,
+    *,
+    warm: bool,
+    backend: str | None = None,
+    transactional: bool = True,
+    patience: int | None = 4,
+    kw: dict | None = None,
+) -> tuple[ProtocolState, jax.Array, jax.Array]:
+    """One re-lock pass of the protocol engine from ``start``.
+
+    Returns ``(new_state, probes, rounds)``.  With ``warm=True`` the pass
+    includes the cold-fallback escalation: a warm start is *more*
+    constrained than a cold one (surviving locks are pinned wherever drift
+    left them, and donors only relock red-ward), so occasionally an
+    augmenting path exists that incremental re-arbitration cannot reach.
+    Trials the warm pass left unresolved rerun from scratch and pay both
+    passes' probes/rounds — the escalation a real controller would run, and
+    the warm path is only a win if it beats cold *including* this cost.
+    (Trials whose warm start held no locks would rerun the identical cold
+    procedure — nothing to escalate.)
+
+    Shared by the per-transceiver timeline scan (``run_timeline_impl``) and
+    the fabric chaos scan (``repro.fabric.chaos``) so the escalation
+    semantics cannot drift between the two layers.
+    """
+    t, n = start.lock.shape
+    kw = kw or {}
+    _, stats, new = run_protocol(
+        tables, spec, backend=backend, with_stats=True,
+        with_state=True, init_state=start,
+        transactional=transactional, patience=patience, **kw,
+    )
+    probes, rounds = stats.probes, stats.worked
+    if warm:
+        unresolved = jnp.any(
+            (new.lock < 0) & (tables.n_valid > 0), axis=1
+        ) & jnp.any(start.lock >= 0, axis=1)
+        _, cstats, cnew = run_protocol(
+            tables, spec, backend=backend, with_stats=True,
+            with_state=True, init_state=cold_state(t, n),
+            transactional=transactional, patience=patience, **kw,
+        )
+        use_cold = unresolved & (cstats.locked > stats.locked)
+        new = jax.tree_util.tree_map(
+            lambda c, w: jnp.where(
+                use_cold.reshape((t,) + (1,) * (w.ndim - 1)), c, w
+            ),
+            cnew, new,
+        )
+        probes = probes + jnp.where(unresolved, cstats.probes, 0)
+        rounds = rounds + jnp.where(unresolved, cstats.worked, 0)
+    return new, probes, rounds
+
+
 def run_timeline_impl(
     cfg,
     units: UnitSamples,
@@ -264,40 +321,10 @@ def run_timeline_impl(
             start = (reval if warm else cold_state(t, n))._replace(
                 probes=jnp.zeros((t,), jnp.int32)
             )
-            _, stats, new = run_protocol(
-                tables, spec, backend=backend, with_stats=True,
-                with_state=True, init_state=start,
-                transactional=transactional, patience=patience, **kw,
+            new, probes, rounds = protocol_relock(
+                tables, spec, start, warm=warm, backend=backend,
+                transactional=transactional, patience=patience, kw=kw,
             )
-            probes, rounds = stats.probes, stats.worked
-            if warm:
-                # Cold fallback: a warm start is *more* constrained than a
-                # cold one (surviving locks are pinned wherever drift left
-                # them, and donors only relock red-ward), so occasionally
-                # an augmenting path exists that incremental re-arbitration
-                # cannot reach.  Trials the warm pass left unresolved rerun
-                # from scratch and pay both passes' probes/rounds — the
-                # escalation a real controller would run, and the warm path
-                # is only a win if it beats cold *including* this cost.
-                # (Trials whose warm start held no locks would rerun the
-                # identical cold procedure — nothing to escalate.)
-                unresolved = jnp.any(
-                    (new.lock < 0) & (tables.n_valid > 0), axis=1
-                ) & jnp.any(start.lock >= 0, axis=1)
-                _, cstats, cnew = run_protocol(
-                    tables, spec, backend=backend, with_stats=True,
-                    with_state=True, init_state=cold_state(t, n),
-                    transactional=transactional, patience=patience, **kw,
-                )
-                use_cold = unresolved & (cstats.locked > stats.locked)
-                new = jax.tree_util.tree_map(
-                    lambda c, w: jnp.where(
-                        use_cold.reshape((t,) + (1,) * (w.ndim - 1)), c, w
-                    ),
-                    cnew, new,
-                )
-                probes = probes + jnp.where(unresolved, cstats.probes, 0)
-                rounds = rounds + jnp.where(unresolved, cstats.worked, 0)
         churn = jnp.sum(
             (kept & (new.lock != prev_lock)).astype(jnp.int32), axis=1
         )

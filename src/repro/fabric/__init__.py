@@ -1,8 +1,10 @@
 """Fabric-scale arbitration: per-link schemes + network-level constraints.
 
-See ``spec`` (topology), ``sampling`` (per-link draws, comb coupling),
-``bringup`` (chunked/sharded bring-up, ``FabricStats``).  Sweep whole
-fabrics over variation grids with ``SweepRequest(fabric=...)``.
+See ``spec`` (topology, routes + fallbacks), ``sampling`` (per-link draws,
+comb coupling), ``bringup`` (chunked/sharded bring-up, ``FabricStats``),
+``chaos`` (fault-injection timelines + warm re-lock across the fabric).
+Sweep whole fabrics over variation grids with ``SweepRequest(fabric=...)``;
+compose drift/fault timelines with ``SweepRequest(fabric=..., timeline=...)``.
 """
 from .bringup import (
     FabricResult,
@@ -12,15 +14,26 @@ from .bringup import (
     auto_link_chunk,
     bringup,
     fabric_stats_impl,
+    link_record,
     state_from_assignment,
+)
+from .chaos import (
+    FabricChaosStats,
+    FabricTimeline,
+    make_fabric_timeline,
+    run_fabric_timeline,
+    run_fabric_timeline_impl,
+    summarize_chaos,
 )
 from .sampling import FabricUnits, instantiate_link, make_fabric_units
 from .spec import FabricSpec
 
 __all__ = [
+    "FabricChaosStats",
     "FabricResult",
     "FabricSpec",
     "FabricStats",
+    "FabricTimeline",
     "FabricUnits",
     "LinkEval",
     "aggregate_stats",
@@ -28,6 +41,11 @@ __all__ = [
     "bringup",
     "fabric_stats_impl",
     "instantiate_link",
+    "link_record",
+    "make_fabric_timeline",
     "make_fabric_units",
+    "run_fabric_timeline",
+    "run_fabric_timeline_impl",
     "state_from_assignment",
+    "summarize_chaos",
 ]

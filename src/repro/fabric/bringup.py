@@ -42,6 +42,7 @@ from repro.core.outcomes import classify
 from repro.core.protocol import ProtocolState
 from repro.core.relation import chain_spec
 from repro.core.sampling import SystemBatch
+from repro.core.ssm import Assignment
 from repro.core.sweep import _CHUNK_BUDGET, chunked_map, scheme_point_bytes
 from repro.core.variations import Variations, as_variations
 
@@ -69,8 +70,12 @@ class LinkEval(NamedTuple):
 class FabricStats(NamedTuple):
     """Fabric-level yield metrics (scalars; grids under the sweep engine).
 
-    ``route_up``/``route_cont`` are 1.0 when the spec declares no routes
-    (vacuously satisfied constraints).
+    Route metrics are 1.0 when the spec declares no routes (vacuously
+    satisfied constraints).  ``route_up``/``route_cont`` score the primary
+    routes only; the ``*_served`` / ``route_bandwidth`` degraded-mode
+    metrics score each route by its best alternative (primary or declared
+    fallback), so a comb/link failure reports a bandwidth floor instead of
+    a binary fabric death.
     """
 
     link_up: jax.Array     # fraction of links with both ends arbitrated
@@ -81,38 +86,41 @@ class FabricStats(NamedTuple):
     bandwidth: jax.Array   # mean usable-lane fraction over links
     route_up: jax.Array    # routes with >= 1 fully-up link on every hop
     route_cont: jax.Array  # routes with a continuity wavelength on every hop
+    route_served: jax.Array      # routes with ANY alternative fully up
+    route_cont_served: jax.Array # ... with a continuity wavelength on any alt
+    route_bandwidth: jax.Array   # mean over routes of best-alt bottleneck
+                                 # usable-lane fraction (max link per hop)
 
 
-def _eval_link(
+def link_record(
     cfg: ArbitrationConfig,
-    spec: FabricSpec,
-    scheme: str,
-    backend: str | None,
-    with_system: bool,
-    variations: Variations,
-    link_units: FabricUnits,
+    policy: str,
+    wl: jax.Array,
+    entry: jax.Array,
+    ideal_ok: jax.Array,
+    system=None,
 ) -> LinkEval:
-    """Arbitrate one link's two endpoints and classify the outcomes."""
+    """Classify one link's (2, N) locked-line map into a ``LinkEval``.
+
+    Shared by one-shot bring-up (``_eval_link``) and the chaos timeline
+    (``fabric.chaos``), which re-derives records from the live protocol
+    state each step — same lane accounting, bit for bit.
+    """
     n = cfg.grid.n_ch
     s = jnp.asarray(cfg.s)
-    sspec = scheme_spec(scheme)
-    sys = instantiate_link(cfg, spec, link_units, variations)
-    tr = variations.resolve("tr_mean", cfg)
-    tables = _build_tables(cfg, sys, tr, backend)
-    assign = sspec.arbiter(cfg, tables, chain_spec(cfg.s), backend=backend)
-    out = classify(assign, s, policy=sspec.policy)
-    ideal_ok = _ideal_success(cfg, sys, sspec.policy, tr, backend)
+    asg = Assignment(entry=entry, wl=wl, delta=jnp.zeros(wl.shape, jnp.float32))
+    out = classify(asg, s, policy=policy)
 
     # LtC-cleanliness is reported for every scheme (LtA fabrics still need
     # it for the spectral-ordering metrics); for ltc-policy schemes it
     # coincides with ``out.success``.
-    ltc = classify(assign, s, policy="ltc")
-    shift = (assign.wl[:, 0] - s[0]) % n
+    ltc = classify(asg, s, policy="ltc")
+    shift = (wl[:, 0] - s[0]) % n
 
-    onehot = jax.nn.one_hot(jnp.clip(assign.wl, 0, n - 1), n, dtype=jnp.int32)
-    counts = jnp.sum(onehot * (assign.wl >= 0)[..., None], axis=1)  # (2, N)
-    distinct = jnp.sum((counts > 0).astype(jnp.int32), axis=1)      # (2,)
-    locked = jnp.sum((assign.wl >= 0).astype(jnp.int32), axis=1)    # (2,)
+    onehot = jax.nn.one_hot(jnp.clip(wl, 0, n - 1), n, dtype=jnp.int32)
+    counts = jnp.sum(onehot * (wl >= 0)[..., None], axis=1)    # (2, N)
+    distinct = jnp.sum((counts > 0).astype(jnp.int32), axis=1)  # (2,)
+    locked = jnp.sum((wl >= 0).astype(jnp.int32), axis=1)       # (2,)
     # A lane carries data when its ring locked a *unique* line: every dup
     # costs one extra lane beyond the distinct count (old interconnect
     # heuristic, now per endpoint); an order error is a crossbar remap,
@@ -131,8 +139,30 @@ def _eval_link(
         ltc_ok=ltc.success,
         shift=shift.astype(jnp.int32),
         ch_up=(counts[0] > 0) & (counts[1] > 0),
-        wl=assign.wl.astype(jnp.int32),
-        entry=assign.entry.astype(jnp.int32),
+        wl=wl.astype(jnp.int32),
+        entry=entry.astype(jnp.int32),
+        system=system,
+    )
+
+
+def _eval_link(
+    cfg: ArbitrationConfig,
+    spec: FabricSpec,
+    scheme: str,
+    backend: str | None,
+    with_system: bool,
+    variations: Variations,
+    link_units: FabricUnits,
+) -> LinkEval:
+    """Arbitrate one link's two endpoints and classify the outcomes."""
+    sspec = scheme_spec(scheme)
+    sys = instantiate_link(cfg, spec, link_units, variations)
+    tr = variations.resolve("tr_mean", cfg)
+    tables = _build_tables(cfg, sys, tr, backend)
+    assign = sspec.arbiter(cfg, tables, chain_spec(cfg.s), backend=backend)
+    ideal_ok = _ideal_success(cfg, sys, sspec.policy, tr, backend)
+    return link_record(
+        cfg, sspec.policy, assign.wl, assign.entry, ideal_ok,
         system=sys if with_system else None,
     )
 
@@ -166,9 +196,39 @@ def aggregate_stats(cfg: ArbitrationConfig, spec: FabricSpec,
         )                                             # (R, N)
         route_up = jnp.mean(f32(r_up))
         route_cont = jnp.mean(f32(jnp.any(cont_c, axis=1)))
+
+        # Degraded-mode scoring: every route evaluated over its alternative
+        # set (primary + declared fallbacks), scored by its best survivor.
+        # Computed additively — the primary-only metrics above are
+        # untouched, so fabrics without fallbacks report
+        # route_served == route_up bit for bit.
+        a_hops, a_valid = spec.route_alternatives()   # (R, A, H), (R, A)
+        av = jnp.asarray(a_valid)
+        vh = jnp.asarray(a_hops >= 0)
+        sh = jnp.asarray(np.clip(a_hops, 0, None))
+        pair_bw = (
+            jnp.zeros((spec.n_pairs,), jnp.float32)
+            .at[link_pair].max(f32(ev.lanes) / n)
+        )                                             # best link per bundle
+        a_up = jnp.all(jnp.where(vh, pair_up[sh], True), axis=2)   # (R, A)
+        a_cont = jnp.any(
+            jnp.all(jnp.where(vh[:, :, :, None], avail[sh], True), axis=2),
+            axis=2,
+        )                                             # (R, A)
+        a_bw = jnp.min(
+            jnp.where(vh, pair_bw[sh], jnp.float32(np.inf)), axis=2
+        )                                             # (R, A) hop bottleneck
+        route_served = jnp.mean(f32(jnp.any(a_up & av, axis=1)))
+        route_cont_served = jnp.mean(f32(jnp.any(a_cont & av, axis=1)))
+        route_bandwidth = jnp.mean(
+            jnp.max(jnp.where(av, a_bw, 0.0), axis=1)
+        )
     else:
         route_up = jnp.float32(1.0)
         route_cont = jnp.float32(1.0)
+        route_served = jnp.float32(1.0)
+        route_cont_served = jnp.float32(1.0)
+        route_bandwidth = jnp.float32(1.0)
 
     return FabricStats(
         link_up=jnp.mean(f32(alg)),
@@ -179,6 +239,9 @@ def aggregate_stats(cfg: ArbitrationConfig, spec: FabricSpec,
         bandwidth=jnp.mean(f32(ev.lanes) / n),
         route_up=route_up,
         route_cont=route_cont,
+        route_served=route_served,
+        route_cont_served=route_cont_served,
+        route_bandwidth=route_bandwidth,
     )
 
 
@@ -190,9 +253,18 @@ def auto_link_chunk(cfg: ArbitrationConfig, n_links: int,
     grid chunks with (a chunk of K links is one 2K-trial scheme evaluation),
     so fabric memory cannot drift from the engine's contract.
     """
+    if n_links < 1:
+        raise ValueError(f"n_links must be >= 1, got {n_links}")
     if scheme_point_bytes(cfg, 2 * n_links) <= budget:
         return n_links
-    lo, hi = 1, n_links
+    if scheme_point_bytes(cfg, 2) > budget:
+        # Degenerate floor: even a single link overflows the budget (tiny
+        # budgets, huge configs).  One link per chunk is the smallest unit
+        # the engine can evaluate; the caller pays the overage knowingly
+        # rather than the bisection asserting on an invariant that never
+        # held ("lo fits").
+        return 1
+    lo, hi = 1, n_links  # n_links >= 2 here: the full fabric did not fit
     while hi - lo > 1:  # invariant: lo fits, hi does not
         mid = (lo + hi) // 2
         if scheme_point_bytes(cfg, 2 * mid) <= budget:

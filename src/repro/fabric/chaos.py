@@ -1,0 +1,513 @@
+"""Fabric-scale fault injection: chaos timelines + warm re-lock at 1000 links.
+
+The temporal x fabric bridge the ROADMAP left open: a ``FabricTimeline``
+carries *fabric-scoped* drift and fault events — per-pod thermal ramps,
+comb-group-correlated laser wander, link kill/flap, comb-source failure
+(every link drawing that comb's light loses its lines together), and ring
+death on a chosen endpoint — and ``run_fabric_timeline`` steps every link's
+``ProtocolState`` through it with the PR-7 temporal machinery:
+
+1. per step, every link's drifted optics rebuild their search tables
+   against the *live* bus (dead lanes/rings/links masked via the tables'
+   ``visible`` hook),
+2. carried locks revalidate with hysteresis (``protocol.revalidate_state``),
+3. *disturbed* links warm-restart the protocol engine (transactional
+   make-before-break commits, per-link cold-fallback escalation —
+   ``core.temporal.protocol_relock``, the exact escalation the
+   single-transceiver timeline runs); undisturbed links keep their carried
+   state verbatim and spend nothing,
+4. per-step ``FabricStats`` aggregate the re-derived link records,
+   including the degraded-mode route metrics (``route_served`` /
+   ``route_bandwidth``) that turn a comb failure into a bandwidth floor
+   instead of a binary fabric death.
+
+Step 0 is the bring-up: the scheme's own arbiter runs on the step-0 bus
+exactly as ``fabric.bringup`` does — with zero drift and no events the
+step-0 records are bit-identical to a single-shot ``bringup`` (the
+no-fault parity gate; an all-True visibility mask is ``ok & True`` in the
+table builder).  Steps >= 1 re-lock with the protocol engine in both modes
+(warm resumes carried state; cold re-arbitrates from scratch — the
+baseline), matching ``optics.interconnect``'s repair model: the scheme
+governs bring-up, the protocol engine governs repair.
+
+The link axis rides ``chunked_map`` inside a ``lax.scan`` over steps, so a
+WDM16 1008-link fabric stays inside the 256 MB chunk budget and
+mesh-shards; ``SweepRequest(fabric=..., timeline=...)`` maps whole chaos
+timelines over variation grids.  Benchmarked in
+``benchmarks/fig22_fabric_chaos.py``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import _build_tables, _ideal_success, scheme_spec
+from repro.core.grid import ArbitrationConfig
+from repro.core.matching import adjacency_bitmask, max_matching
+from repro.core.protocol import ProtocolState, cold_state, revalidate_state
+from repro.core.reach import reach_matrix
+from repro.core.relation import chain_spec
+from repro.core.sweep import chunked_map
+from repro.core.temporal import _protocol_kwargs, _ramp, protocol_relock
+from repro.core.variations import (
+    Variations,
+    apply_axis_transforms,
+    as_variations,
+)
+
+from .bringup import (
+    FabricStats,
+    aggregate_stats,
+    auto_link_chunk,
+    link_record,
+    state_from_assignment,
+)
+from .sampling import FabricUnits, instantiate_link
+from .spec import FabricSpec
+
+
+class FabricTimeline(NamedTuple):
+    """A fabric-scoped drift/event trajectory over S steps and K links.
+
+    Drift offsets are in nm and *absolute* relative to the undrifted
+    system (not per-step increments); liveness is per step.  ``disturbed``
+    is host-precomputed: a link is disturbed at step s when any of its
+    drift or liveness fields changed vs step s-1 (step 0 compares against
+    the pristine zero-drift, all-alive fabric) — the warm scan restarts
+    only disturbed links.
+    """
+
+    ring_drift: jax.Array   # (S, K, 2, N) per-endpoint ring offsets
+    laser_drift: jax.Array  # (S, K, N) per-link comb-line offsets
+    lane_alive: jax.Array   # (S, K, N) bool: laser line on the link's bus
+    ring_alive: jax.Array   # (S, K, 2, N) bool: ring controller powered
+    link_alive: jax.Array   # (S, K) bool: link (fiber/port) administratively up
+    disturbed: jax.Array    # (S, K) bool: anything above changed this step
+
+    @property
+    def n_steps(self) -> int:
+        return self.ring_drift.shape[0]
+
+    @property
+    def n_links(self) -> int:
+        return self.ring_drift.shape[1]
+
+    @property
+    def n_ch(self) -> int:
+        return self.ring_drift.shape[3]
+
+
+_EVENT_ARITY = {
+    "link_kill": 1, "link_heal": 1, "link_flap": 2,
+    "comb_kill": 1, "comb_heal": 1,
+    "lane_kill": 2, "lane_heal": 2,
+    "ring_kill": 3, "ring_heal": 3,
+}
+
+
+def _check_index(kind: str, what: str, v: int, hi: int) -> int:
+    v = int(v)
+    if not 0 <= v < hi:
+        raise ValueError(
+            f"event {kind!r} references {what} {v}, outside 0..{hi - 1} "
+            f"for this fabric"
+        )
+    return v
+
+
+def make_fabric_timeline(
+    spec: FabricSpec,
+    n_steps: int,
+    n_ch: int,
+    *,
+    thermal=None,
+    pod_thermal=None,
+    comb=None,
+    events: Sequence[tuple] = (),
+) -> FabricTimeline:
+    """Deterministic host-side fabric timeline builder.
+
+    thermal:     fabric-wide ring red-shift profile [nm] — scalar (linear
+                 ramp to that value), (K, 2) ``(step, value)`` breakpoints,
+                 or (S,) — applied to every endpoint (``core.temporal._ramp``
+                 forms).
+    pod_thermal: mapping pod id -> profile (same forms); each endpoint
+                 follows its *own* pod's ramp (link k's end 0 sits in the
+                 lower-numbered pod), added on top of ``thermal``.  This is
+                 the correlated-across-links knob: every link touching a hot
+                 pod drifts together.
+    comb:        laser-line wander [nm] — ``(amplitude, period)`` for a
+                 sinusoid phase-staggered per comb *group* (links sharing a
+                 comb wander identically; distinct groups are offset by
+                 1/n_groups of a period), or the ``_ramp`` forms (uniform
+                 across groups).
+    events:      fault events ``(step, kind, *args)``; liveness changes
+                 persist from ``step`` onward and later events override
+                 earlier ones (kill then heal is an outage window):
+
+                   ("link_kill", link) / ("link_heal", link)
+                   ("link_flap", link, down_steps)  — kill + auto-heal
+                   ("comb_kill", group) / ("comb_heal", group) — every link
+                       in comb group ``group`` loses/regains ALL laser lines
+                   ("lane_kill", link, ch) / ("lane_heal", link, ch)
+                   ("ring_kill", link, end, ch) / ("ring_heal", ...)
+
+                 Out-of-range links/groups/endpoints/channels raise
+                 ``ValueError`` (events cannot reference lanes absent from
+                 the fabric spec).
+    """
+    if n_steps < 1:
+        raise ValueError(f"a timeline needs >= 1 step, got {n_steps}")
+    k = spec.n_links
+    group = spec.link_group()
+    src, dst = spec.link_pods()
+
+    # ------------------------------------------------------------- drift
+    base = _ramp(n_steps, thermal)                        # (S,)
+    pod_t = np.zeros((n_steps, spec.pods), np.float32)
+    for pod, prof in dict(pod_thermal or {}).items():
+        pod = int(pod)
+        if not 0 <= pod < spec.pods:
+            raise ValueError(
+                f"pod_thermal names pod {pod}, outside 0..{spec.pods - 1}"
+            )
+        pod_t[:, pod] = _ramp(n_steps, prof)
+    end_pods = np.stack([src, dst], axis=1)               # (K, 2)
+    ring_drift = np.broadcast_to(
+        (base[:, None, None] + pod_t[:, end_pods])[..., None],
+        (n_steps, k, 2, n_ch),
+    ).astype(np.float32).copy()
+
+    if isinstance(comb, tuple) and len(comb) == 2 and np.ndim(comb[0]) == 0:
+        amp, period = comb
+        steps = np.arange(n_steps, dtype=np.float32)
+        phase = (
+            np.arange(spec.n_groups, dtype=np.float32) / max(1, spec.n_groups)
+        )
+        g_t = np.float32(amp) * np.sin(
+            2.0 * np.pi * (steps[:, None] / np.float32(period) + phase[None, :])
+        ).astype(np.float32)                              # (S, G)
+    else:
+        g_t = np.broadcast_to(
+            _ramp(n_steps, comb)[:, None], (n_steps, spec.n_groups)
+        )
+    laser_drift = np.broadcast_to(
+        g_t[:, group][..., None], (n_steps, k, n_ch)
+    ).astype(np.float32).copy()
+
+    # ------------------------------------------------------------ events
+    lane = np.ones((n_steps, k, n_ch), bool)
+    ring = np.ones((n_steps, k, 2, n_ch), bool)
+    link = np.ones((n_steps, k), bool)
+    for ev in events:
+        step, kind, *args = ev
+        if kind not in _EVENT_ARITY:
+            raise ValueError(
+                f"unknown event kind {kind!r}; valid: "
+                f"{tuple(_EVENT_ARITY)}"
+            )
+        if len(args) != _EVENT_ARITY[kind]:
+            raise ValueError(
+                f"event {kind!r} takes {_EVENT_ARITY[kind]} argument(s), "
+                f"got {args}"
+            )
+        step = int(step)
+        if not 0 <= step < n_steps:
+            raise ValueError(
+                f"event {ev} at step {step}, outside 0..{n_steps - 1}"
+            )
+        if kind in ("link_kill", "link_heal"):
+            l = _check_index(kind, "link", args[0], k)
+            link[step:, l] = kind.endswith("heal")
+        elif kind == "link_flap":
+            l = _check_index(kind, "link", args[0], k)
+            down = int(args[1])
+            if down < 1:
+                raise ValueError(f"link_flap needs down_steps >= 1, got {down}")
+            link[step:step + down, l] = False
+        elif kind in ("comb_kill", "comb_heal"):
+            g = _check_index(kind, "comb group", args[0], spec.n_groups)
+            lane[step:, group == g, :] = kind.endswith("heal")
+        elif kind in ("lane_kill", "lane_heal"):
+            l = _check_index(kind, "link", args[0], k)
+            ch = _check_index(kind, "channel", args[1], n_ch)
+            lane[step:, l, ch] = kind.endswith("heal")
+        else:  # ring_kill / ring_heal
+            l = _check_index(kind, "link", args[0], k)
+            end = _check_index(kind, "endpoint", args[1], 2)
+            ch = _check_index(kind, "channel", args[2], n_ch)
+            ring[step:, l, end, ch] = kind.endswith("heal")
+
+    # --------------------------------------------------------- disturbed
+    def changed(arr, pristine) -> np.ndarray:
+        flat = arr.reshape(n_steps, k, -1)
+        prev = np.concatenate(
+            [np.full_like(flat[:1], pristine), flat[:-1]], axis=0
+        )
+        return (flat != prev).any(axis=2)
+
+    disturbed = (
+        changed(ring_drift, 0.0) | changed(laser_drift, 0.0)
+        | changed(lane, True) | changed(ring, True) | changed(link, True)
+    )
+    return FabricTimeline(
+        ring_drift=jnp.asarray(ring_drift),
+        laser_drift=jnp.asarray(laser_drift),
+        lane_alive=jnp.asarray(lane),
+        ring_alive=jnp.asarray(ring),
+        link_alive=jnp.asarray(link),
+        disturbed=jnp.asarray(disturbed),
+    )
+
+
+class FabricChaosStats(NamedTuple):
+    """Per-step output of one ``run_fabric_timeline`` call.
+
+    ``fabric`` leaves are (S,) scalars-per-step (incl. the degraded-mode
+    route metrics); per-link fields are (S, K).  ``probes``/``rounds``
+    count only each step's incremental spend (step 0 is bring-up: zero —
+    one-shot arbiters do not report probes, and both warm and cold modes
+    share it).  ``feasible`` marks links whose live bus still admits a
+    complete matching at both ends (dead rings exempt, dead lanes/links
+    gone).
+    """
+
+    fabric: FabricStats     # (S,) leaves
+    wl: jax.Array           # (S, K, 2, N) int32 committed locks per step
+    probes: jax.Array       # (S, K) int32, summed over both endpoints
+    rounds: jax.Array       # (S, K) int32, max over both endpoints
+    locked: jax.Array       # (S, K) int32 locked rings (0..2N)
+    broken: jax.Array       # (S, K) int32 locks broken at revalidation
+    churn: jax.Array        # (S, K) int32 surviving locks that moved anyway
+    feasible: jax.Array     # (S, K) bool
+
+
+class _LinkStep(NamedTuple):
+    """Per-link scalar accounting for one step (stacked to (K,) / (S, K))."""
+
+    probes: jax.Array
+    rounds: jax.Array
+    locked: jax.Array
+    broken: jax.Array
+    churn: jax.Array
+    feasible: jax.Array
+
+
+def _drifted_system(cfg, spec, variations, link_units, tlk):
+    """Instantiate one link's optics and apply the step's drift offsets
+    through the registered variation transforms (the same hooks static
+    sweeps use — drift composes additively with any swept drift axis)."""
+    sys = instantiate_link(cfg, spec, link_units, variations)
+    return apply_axis_transforms(
+        sys,
+        Variations(thermal_drift=tlk.ring_drift, comb_wander=tlk.laser_drift),
+        cfg,
+    )
+
+
+def _visibility(tlk, n: int):
+    """(2, N_ring, N_wl) bool: line visible to ring = lane alive & ring
+    alive & link alive (a dead link sees an empty bus: all locks break and
+    empty tables never spend probes — killed links are not re-locked)."""
+    return jnp.broadcast_to(
+        tlk.lane_alive[None, None, :]
+        & tlk.ring_alive[:, :, None]
+        & tlk.link_alive,
+        (2, n, n),
+    )
+
+
+def _link_feasible(sys, tr, tlk):
+    """Live-bus feasibility of one link: every live ring on BOTH endpoints
+    matchable to a distinct live line within TR, and the link itself up."""
+    reach = (
+        reach_matrix(sys, tr)
+        & tlk.lane_alive[None, None, :]
+        & tlk.ring_alive[:, :, None]
+    )
+    match_wl, _ = max_matching(adjacency_bitmask(reach))
+    n_live = jnp.sum(tlk.ring_alive.astype(jnp.int32), axis=1)   # (2,)
+    end_ok = jnp.sum((match_wl >= 0).astype(jnp.int32), axis=1) >= n_live
+    return end_ok[0] & end_ok[1] & tlk.link_alive
+
+
+def _chaos_bringup_link(cfg, spec, scheme, backend, variations, item):
+    """Step-0 bring-up of one link: the scheme's own arbiter on the step-0
+    bus.  With zero drift and no events this is ``bringup._eval_link`` bit
+    for bit (zero drift offsets add +0.0; the all-True visibility mask is
+    ``ok & True`` in the table builder)."""
+    link_units, tlk = item
+    n = cfg.grid.n_ch
+    sspec = scheme_spec(scheme)
+    tr = variations.resolve("tr_mean", cfg)
+    sys = _drifted_system(cfg, spec, variations, link_units, tlk)
+    tables = _build_tables(cfg, sys, tr, backend, visible=_visibility(tlk, n))
+    assign = sspec.arbiter(cfg, tables, chain_spec(cfg.s), backend=backend)
+    ideal_ok = _ideal_success(cfg, sys, sspec.policy, tr, backend)
+    rec = link_record(cfg, sspec.policy, assign.wl, assign.entry, ideal_ok)
+    state = state_from_assignment(assign.wl, assign.entry)
+    return state, rec, _link_feasible(sys, tr, tlk)
+
+
+def _chaos_relock_link(cfg, spec, scheme, backend, warm, transactional,
+                       patience, hysteresis, variations, item):
+    """One step of one link: rebuild tables on the live drifted bus,
+    revalidate carried locks, re-lock with the protocol engine.
+
+    Warm mode resumes the carried state and gates on disturbance: an
+    undisturbed link's tables are identical to the previous step's, so its
+    carried state is already a fixed point — it is kept verbatim with zero
+    spend (this is what "warm-restarts only disturbed links" means; it
+    also stops the engine from re-seeking a link's permanently starved
+    rings every quiet step).  Cold mode re-arbitrates every link from
+    scratch each step — the baseline.  Both modes run the protocol engine
+    (for one-shot bring-up schemes too: the scheme governs bring-up, the
+    engine governs repair, exactly as ``optics.interconnect``).
+    """
+    link_units, tlk, st = item
+    n = cfg.grid.n_ch
+    sspec = scheme_spec(scheme)
+    kw = _protocol_kwargs(scheme) or {}
+    tr = variations.resolve("tr_mean", cfg)
+    sys = _drifted_system(cfg, spec, variations, link_units, tlk)
+    tables = _build_tables(cfg, sys, tr, backend, visible=_visibility(tlk, n))
+    prev_lock = st.lock
+    reval, kept = revalidate_state(
+        tables, st, tr=tr * sys.tr_unit, hysteresis=hysteresis
+    )
+    broken_e = (prev_lock >= 0) & (reval.lock < 0)
+    cold0 = cold_state(2, n)
+    if warm:
+        # A link with no surviving locks has nothing warm to resume: its
+        # stale red-ward cursors would re-lock a shifted arrangement after
+        # a full outage (e.g. comb heal).  Resume survivors, else restart.
+        none_kept = ~jnp.any(reval.lock >= 0)
+        start = jax.tree_util.tree_map(
+            lambda r, c: jnp.where(none_kept, c, r), reval, cold0
+        )
+    else:
+        start = cold0
+    start = start._replace(probes=jnp.zeros((2,), jnp.int32))
+    new, probes, rounds = protocol_relock(
+        tables, chain_spec(cfg.s), start, warm=warm, backend=backend,
+        transactional=transactional, patience=patience, kw=kw,
+    )
+    if warm:
+        act = tlk.disturbed | jnp.any(broken_e)
+        sel = jax.tree_util.tree_map(
+            lambda nw, old: jnp.where(act, nw, old), new, st
+        )
+        probes = jnp.where(act, probes, 0)
+        rounds = jnp.where(act, rounds, 0)
+    else:
+        sel = new
+    ideal_ok = _ideal_success(cfg, sys, sspec.policy, tr, backend)
+    rec = link_record(cfg, sspec.policy, sel.lock, sel.entry, ideal_ok)
+    per = _LinkStep(
+        probes=jnp.sum(probes).astype(jnp.int32),
+        rounds=jnp.max(rounds).astype(jnp.int32),
+        locked=jnp.sum((sel.lock >= 0).astype(jnp.int32)),
+        broken=jnp.sum(broken_e.astype(jnp.int32)),
+        churn=jnp.sum((kept & (sel.lock != prev_lock)).astype(jnp.int32)),
+        feasible=_link_feasible(sys, tr, tlk),
+    )
+    return sel, rec, per
+
+
+def run_fabric_timeline_impl(
+    cfg: ArbitrationConfig,
+    units: FabricUnits,
+    spec: FabricSpec,
+    timeline: FabricTimeline,
+    variations=None,
+    *,
+    scheme: str = "vtrs_ssm",
+    warm: bool = True,
+    transactional: bool = True,
+    patience: int | None = 4,
+    hysteresis=0.0,
+    backend: str | None = None,
+    link_chunk: int = 0,
+    mesh=None,
+) -> tuple[ProtocolState, FabricChaosStats]:
+    """Drive every link of a fabric along a chaos timeline.
+
+    Step 0 brings the fabric up with ``scheme``'s arbiter on the step-0
+    bus; steps >= 1 are a ``lax.scan`` whose carry is the per-link
+    ``ProtocolState`` pytree, each step one ``chunked_map`` over link
+    chunks (``link_chunk=0`` auto-fits the 256 MB budget; ``mesh`` shards
+    the chunk axis).  Returns ``(final_state, FabricChaosStats)`` with the
+    state flattened to the (2K, N) interconnect layout (row 2k = link k's
+    tx end).
+    """
+    var = as_variations(variations)
+    k, n = spec.n_links, cfg.grid.n_ch
+    if timeline.n_links != k or timeline.n_ch != n:
+        raise ValueError(
+            f"timeline is ({timeline.n_links} links, {timeline.n_ch} ch) "
+            f"but the fabric needs ({k}, {n})"
+        )
+    chunk = link_chunk or auto_link_chunk(cfg, k)
+    tree = jax.tree_util
+
+    tl0 = tree.tree_map(lambda a: a[0], timeline)
+    st0, ev0, feas0 = chunked_map(
+        partial(_chaos_bringup_link, cfg, spec, scheme, backend),
+        (units, tl0), chunk=chunk, mesh=mesh, broadcast=(var,),
+    )
+    stats0 = aggregate_stats(cfg, spec, ev0)
+    zeros_k = jnp.zeros((k,), jnp.int32)
+    per0 = _LinkStep(
+        probes=zeros_k, rounds=zeros_k,
+        locked=jnp.sum((st0.lock >= 0).astype(jnp.int32), axis=(1, 2)),
+        broken=zeros_k, churn=zeros_k, feasible=feas0,
+    )
+
+    def body(st, tl_s):
+        st_new, rec, per = chunked_map(
+            partial(_chaos_relock_link, cfg, spec, scheme, backend, warm,
+                    transactional, patience, hysteresis),
+            (units, tl_s, st), chunk=chunk, mesh=mesh, broadcast=(var,),
+        )
+        return st_new, (aggregate_stats(cfg, spec, rec), rec.wl, per)
+
+    rest = tree.tree_map(lambda a: a[1:], timeline)
+    st_f, (stats_r, wl_r, per_r) = jax.lax.scan(body, st0, rest)
+
+    cat = lambda a0, ar: jnp.concatenate([a0[None], ar], axis=0)
+    chaos = FabricChaosStats(
+        fabric=tree.tree_map(cat, stats0, stats_r),
+        wl=cat(ev0.wl, wl_r),
+        **tree.tree_map(cat, per0, per_r)._asdict(),
+    )
+    state = ProtocolState(
+        lock=st_f.lock.reshape(2 * k, n),
+        entry=st_f.entry.reshape(2 * k, n),
+        cursor=st_f.cursor.reshape(2 * k, n),
+        probes=st_f.probes.reshape(2 * k),
+    )
+    return state, chaos
+
+
+run_fabric_timeline = jax.jit(
+    run_fabric_timeline_impl,
+    static_argnames=("cfg", "spec", "scheme", "warm", "transactional",
+                     "patience", "backend", "link_chunk", "mesh"),
+)
+
+
+def summarize_chaos(cs: FabricChaosStats) -> FabricChaosStats:
+    """Reduce per-link fields to link means — the (S,)-leaved form a chaos
+    grid point returns under ``SweepRequest(fabric=..., timeline=...)``
+    (``wl`` is dropped: per-step lock maps do not aggregate)."""
+    mean = lambda a: jnp.mean(a.astype(jnp.float32), axis=1)
+    return cs._replace(
+        wl=None,
+        probes=mean(cs.probes), rounds=mean(cs.rounds),
+        locked=mean(cs.locked), broken=mean(cs.broken),
+        churn=mean(cs.churn), feasible=mean(cs.feasible),
+    )

@@ -64,16 +64,40 @@ class FabricSpec:
                     consecutive pairs name the bundles the route traverses.
                     Route metrics (``FabricStats.route_up`` /
                     ``route_cont``) are vacuously 1.0 when empty.
+    fallbacks:      optional per-route alternatives for graceful
+                    degradation: empty, or one tuple per primary route,
+                    each a (possibly empty) tuple of alternative routes
+                    sharing the primary's endpoints.  The degraded-mode
+                    metrics (``FabricStats.route_served`` /
+                    ``route_cont_served`` / ``route_bandwidth``) score a
+                    route by its best alternative; the primary-only
+                    ``route_up`` / ``route_cont`` metrics ignore them.
     """
 
     pods: int = 2
     links_per_pair: int = 8
     comb_group: str = "link"
     routes: tuple = ()
+    fallbacks: tuple = ()
+
+    def _check_route(self, route) -> None:
+        if len(route) < 2:
+            raise ValueError(f"route {route} needs >= 2 pods")
+        for a, b in zip(route, route[1:]):
+            if a == b:
+                raise ValueError(f"route {route} repeats pod {a}")
+            if not (0 <= a < self.pods and 0 <= b < self.pods):
+                raise ValueError(
+                    f"route {route} names a pod outside 0..{self.pods - 1}"
+                )
 
     def __post_init__(self):
         object.__setattr__(self, "routes",
                            tuple(tuple(int(p) for p in r) for r in self.routes))
+        object.__setattr__(self, "fallbacks", tuple(
+            tuple(tuple(int(p) for p in alt) for alt in alts)
+            for alts in self.fallbacks
+        ))
         if self.pods < 2:
             raise ValueError(f"a fabric needs >= 2 pods, got {self.pods}")
         if self.links_per_pair < 1:
@@ -85,14 +109,19 @@ class FabricSpec:
                 f"unknown comb_group {self.comb_group!r}; valid: {_COMB_GROUPS}"
             )
         for route in self.routes:
-            if len(route) < 2:
-                raise ValueError(f"route {route} needs >= 2 pods")
-            for a, b in zip(route, route[1:]):
-                if a == b:
-                    raise ValueError(f"route {route} repeats pod {a}")
-                if not (0 <= a < self.pods and 0 <= b < self.pods):
+            self._check_route(route)
+        if self.fallbacks and len(self.fallbacks) != len(self.routes):
+            raise ValueError(
+                f"fallbacks must be empty or one tuple per route: got "
+                f"{len(self.fallbacks)} for {len(self.routes)} routes"
+            )
+        for route, alts in zip(self.routes, self.fallbacks):
+            for alt in alts:
+                self._check_route(alt)
+                if (alt[0], alt[-1]) != (route[0], route[-1]):
                     raise ValueError(
-                        f"route {route} names a pod outside 0..{self.pods - 1}"
+                        f"fallback {alt} does not share route {route}'s "
+                        f"endpoints ({route[0]}, {route[-1]})"
                     )
 
     # ---------------------------------------------------------- topology
@@ -155,3 +184,31 @@ class FabricSpec:
             for hi, (a, b) in enumerate(zip(route, route[1:])):
                 hops[ri, hi] = pair_index[(min(a, b), max(a, b))]
         return hops
+
+    def route_alternatives(self) -> tuple:
+        """Per-route alternative sets for the degraded-mode metrics.
+
+        Returns ``(hops, valid)``: ``hops`` is (n_routes, n_alts, max_hops)
+        int with bundle index per hop (-1 padding), alternative 0 always the
+        primary route; ``valid`` is (n_routes, n_alts) bool marking real
+        alternatives (routes with fewer fallbacks are padded with invalid
+        rows).  With no fallbacks declared every route has exactly its
+        primary (``hops[:, :1] == route_hops()[:, None]``).
+        """
+        pair_index = {p: i for i, p in enumerate(self.pairs)}
+        alts_per = [
+            (route,) + (self.fallbacks[ri] if self.fallbacks else ())
+            for ri, route in enumerate(self.routes)
+        ]
+        n_alts = max((len(a) for a in alts_per), default=1)
+        max_h = max(
+            (len(r) - 1 for alts in alts_per for r in alts), default=1
+        )
+        hops = np.full((len(self.routes), n_alts, max(max_h, 1)), -1, np.int64)
+        valid = np.zeros((len(self.routes), n_alts), bool)
+        for ri, alts in enumerate(alts_per):
+            for ai, route in enumerate(alts):
+                valid[ri, ai] = True
+                for hi, (a, b) in enumerate(zip(route, route[1:])):
+                    hops[ri, ai, hi] = pair_index[(min(a, b), max(a, b))]
+        return hops, valid

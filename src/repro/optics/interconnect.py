@@ -72,12 +72,17 @@ class FabricHandle:
     2k+1 rx) and ``state`` the dup-sanitized endpoint lock state — enough
     to rebuild search tables and resume the protocol engine without
     re-drawing thermals (re-arbitration happens on the SAME hardware).
+    ``link_alive`` (None = all up) marks links whose fiber/port is dead
+    (``inject_link_failure``): warm repair masks them out of the rebuilt
+    tables, so their locks break and are never re-locked until the mask
+    clears.
     """
 
     spec: FabricSpec
     system: SystemBatch
     state: ProtocolState
     tr_mean: float
+    link_alive: Optional[np.ndarray] = None
 
 
 @dataclasses.dataclass
@@ -186,21 +191,54 @@ def bringup(
 
 @partial(jax.jit, static_argnames=("cfg",))
 def _warm_repair(cfg: ArbitrationConfig, system: SystemBatch, tr_mean,
-                 state: ProtocolState):
+                 state: ProtocolState, visible=None):
     """One warm protocol pass on the live fabric state.
 
     Tables are rebuilt from the stored optics (drift-free here; the
     temporal layer owns drifting tables), carried locks are revalidated
     and re-anchored, and a transactional protocol run repairs starved
     rings — committing per trial only if it strictly improves the lock
-    count, so link health is monotone under repair.
+    count, so link health is monotone under repair.  ``visible`` ((2K, N)
+    bool, None = all) masks dead links' lines out of the rebuilt tables:
+    their locks break at revalidation and an empty table never re-locks
+    (dead fiber cannot carry light, let alone an arbitration).
     """
-    tables = _build_tables(cfg, system, tr_mean, None)
+    tables = _build_tables(cfg, system, tr_mean, None, visible=visible)
     st, _ = revalidate_state(tables, state)
     return run_protocol(
         tables, chain_spec(cfg.s),
         init_state=st, with_state=True, transactional=True, patience=4,
     )
+
+
+def inject_link_failure(state: FabricState, links) -> FabricState:
+    """Mark links as hard-down (fiber cut / port death) in a handle-carrying
+    fabric state.
+
+    The returned state records zero lanes and ``failure="link_down"`` for
+    each killed link, and the handle's ``link_alive`` mask makes every
+    subsequent ``rearbitrate`` treat their buses as empty — killed links
+    are never re-locked, and surviving links repair exactly as before.
+    Idempotent; a fresh ``bringup`` (or a healed mask) clears it.
+    """
+    if state.handle is None:
+        raise ValueError("inject_link_failure needs a handle-carrying state "
+                         "(bringup output), not a legacy record-only state")
+    ids = [int(i) for i in np.atleast_1d(np.asarray(links, np.int64))]
+    n_links = len(state.links)
+    for i in ids:
+        if not 0 <= i < n_links:
+            raise ValueError(f"link {i} outside 0..{n_links - 1}")
+    alive = (np.ones(n_links, bool) if state.handle.link_alive is None
+             else state.handle.link_alive.copy())
+    alive[ids] = False
+    new_links = list(state.links)
+    for i in ids:
+        new_links[i] = dataclasses.replace(
+            new_links[i], lanes_up=0, failure="link_down")
+    handle = dataclasses.replace(state.handle, link_alive=alive)
+    return FabricState(links=new_links, scheme=state.scheme,
+                       tr_mean=state.tr_mean, handle=handle)
 
 
 def rearbitrate(state: FabricState, cfg: ArbitrationConfig, *, seed: int = 0,
@@ -229,12 +267,22 @@ def rearbitrate(state: FabricState, cfg: ArbitrationConfig, *, seed: int = 0,
     policy = scheme_spec(state.scheme).policy
     proto = handle.state
     rounds = 0
+    alive = handle.link_alive
+    visible = None
+    if alive is not None and not alive.all():
+        visible = jnp.asarray(
+            np.repeat(alive, 2)[:, None] & np.ones((1, n), bool)
+        )
+    dead = set() if alive is None else {int(i) for i in np.flatnonzero(~alive)}
     for _ in range(max_rounds):
-        degraded = [i for i, l in enumerate(links) if l.degraded]
+        degraded = [i for i, l in enumerate(links)
+                    if l.degraded and i not in dead]
         if not degraded:
             break
         rounds += 1
-        _, proto = _warm_repair(cfg, handle.system, handle.tr_mean, proto)
+        _, proto = _warm_repair(
+            cfg, handle.system, handle.tr_mean, proto, visible
+        )
         wl = np.asarray(proto.lock).reshape(-1, 2, n)
         _, lanes, shift, failure = _link_summaries(cfg, wl, policy)
         changed = False

@@ -6,6 +6,10 @@ bit-identical to independent per-link arbitration through the core path —
 ``repro.fabric`` adds a network layer, never a different per-link
 semantics.  The oracle is a jitted vmap of ``core.sampling.instantiate``
 (L=1 laser, R=2 rings per link) feeding one flat ``oblivious_arbitrate``.
+
+As in tests/test_protocol.py the structural invariants run twice:
+deterministic parametrized cases (always on) and hypothesis variants when
+importable.
 """
 from __future__ import annotations
 
@@ -16,6 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on container
+    HAVE_HYPOTHESIS = False
+
 from repro.configs.fabric import FABRIC_TINY, ring_routes
 from repro.configs.wdm import WDM8_G200
 from repro.core import SweepRequest, sweep
@@ -24,12 +34,15 @@ from repro.core.sampling import SystemBatch, UnitSamples, instantiate
 from repro.core.variations import as_variations, axis_names
 from repro.fabric import (
     FabricSpec,
+    auto_link_chunk,
     bringup,
     instantiate_link,
     make_fabric_units,
     state_from_assignment,
 )
 from repro.launch.mesh import make_sweep_mesh
+
+SETTINGS = dict(max_examples=6, deadline=None)
 
 CFG = WDM8_G200
 TR = 5.0
@@ -80,6 +93,41 @@ def test_spec_validation_and_topology():
         FabricSpec(pods=3, routes=((0, 7),))
     with pytest.raises(ValueError, match="hops"):
         ring_routes(4, 4)
+
+
+def test_fallback_validation_and_alternatives():
+    spec = FabricSpec(pods=4, routes=((0, 1, 2), (2, 3)),
+                      fallbacks=(((0, 3, 2),), ()))
+    hops, valid = spec.route_alternatives()
+    assert hops.shape == (2, 2, 2) and valid.shape == (2, 2)
+    # alternative 0 is always the primary route
+    np.testing.assert_array_equal(hops[:, 0], spec.route_hops())
+    np.testing.assert_array_equal(valid, [[True, True], [True, False]])
+    pi = spec.pairs.index
+    assert hops[0, 1].tolist() == [pi((0, 3)), pi((2, 3))]
+
+    with pytest.raises(ValueError, match="one tuple per route"):
+        FabricSpec(pods=4, routes=((0, 1, 2), (2, 3)),
+                   fallbacks=(((0, 3, 2),),))
+    with pytest.raises(ValueError, match="endpoints"):
+        FabricSpec(pods=4, routes=((0, 1, 2),), fallbacks=(((0, 3),),))
+    with pytest.raises(ValueError, match="repeats"):
+        FabricSpec(pods=4, routes=((0, 1, 2),), fallbacks=(((0, 0, 2),),))
+    # no fallbacks: every route has exactly its primary
+    hops0, valid0 = FABRIC_TINY.route_alternatives()
+    assert hops0.shape[1] == 1 and valid0.all()
+
+
+def test_auto_link_chunk_degenerate():
+    with pytest.raises(ValueError, match="n_links"):
+        auto_link_chunk(CFG, 0)
+    # a single-link fabric always fits trivially
+    assert auto_link_chunk(CFG, 1) == 1
+    # a budget too small for even one link floors at one link per chunk
+    # instead of tripping the bisection's "lo fits" invariant
+    assert auto_link_chunk(CFG, 8, budget=1) == 1
+    # plenty of budget: the whole fabric is one chunk
+    assert auto_link_chunk(CFG, 8) == 8
 
 
 @pytest.mark.parametrize("scheme", ["vtrs_ssm", "seq_retry"])
@@ -205,6 +253,38 @@ def test_sweep_request_fabric_validation():
         SweepRequest(scheme="vtrs_ssm", cfg=CFG, units=units, fabric=other,
                      axes={"tr_mean": [5.0]})
 
+    # --- fabric x timeline composition rules -----------------------------
+    from repro.core.temporal import make_timeline
+    from repro.fabric.chaos import make_fabric_timeline
+
+    n = CFG.grid.n_ch
+    ftl = make_fabric_timeline(spec, 2, n)
+    # the valid composition constructs
+    SweepRequest(scheme="vtrs_ssm", timeline=ftl, **ok)
+    # a per-transceiver Timeline has no link addressing at fabric scale
+    with pytest.raises(ValueError, match="FabricTimeline"):
+        SweepRequest(scheme="vtrs_ssm", timeline=make_timeline(2, n), **ok)
+    # a FabricTimeline without the topology it indexes into
+    with pytest.raises(ValueError, match="topology"):
+        SweepRequest(scheme="vtrs_ssm", cfg=CFG, units=units,
+                     axes={"tr_mean": [5.0]}, timeline=ftl)
+    # link-count and channel-count mismatches name both sides
+    with pytest.raises(ValueError, match="links"):
+        SweepRequest(
+            scheme="vtrs_ssm", timeline=make_fabric_timeline(
+                FabricSpec(pods=2, links_per_pair=1), 2, n), **ok)
+    with pytest.raises(ValueError, match="channels"):
+        SweepRequest(scheme="vtrs_ssm",
+                     timeline=make_fabric_timeline(spec, 2, n + 1), **ok)
+    # events cannot reference lanes/links absent from the fabric spec
+    with pytest.raises(ValueError, match="outside"):
+        make_fabric_timeline(spec, 2, n,
+                             events=((0, "link_kill", spec.n_links),))
+    with pytest.raises(ValueError, match="outside"):
+        make_fabric_timeline(spec, 2, n, events=((0, "lane_kill", 0, n),))
+    with pytest.raises(ValueError, match="unknown event"):
+        make_fabric_timeline(spec, 2, n, events=((0, "pod_kill", 0),))
+
 
 def test_state_from_assignment_sanitizes_dups():
     wl = jnp.asarray([[2, 2, -1, 3], [1, 3, 3, 3]], jnp.int32)
@@ -247,3 +327,116 @@ def test_interconnect_warm_rearbitrate_monotone_and_heals():
     cold2, _ = rearbitrate(cold, CFG, seed=5)
     assert cold2.bandwidth_fraction >= cold.bandwidth_fraction
     assert cold2.handle is None
+
+
+def test_interconnect_rearbitrate_under_link_death():
+    from repro.optics.interconnect import bringup as ic_bringup
+    from repro.optics.interconnect import inject_link_failure, rearbitrate
+
+    fab = ic_bringup(2, 6, CFG, tr_mean=4.6, scheme="vtrs_ssm", seed=0)
+    with pytest.raises(ValueError, match="outside"):
+        inject_link_failure(fab, [6])
+    with pytest.raises(ValueError, match="handle"):
+        inject_link_failure(dataclasses.replace(fab, handle=None), [0])
+
+    hurt = inject_link_failure(fab, [2])
+    assert hurt.links[2].lanes_up == 0
+    assert hurt.links[2].failure == "link_down"
+    assert not hurt.handle.link_alive[2] and hurt.handle.link_alive[[0, 1]].all()
+    before = {i: l.lanes_up for i, l in enumerate(fab.links)}
+
+    fab2, _ = rearbitrate(hurt, CFG, seed=1)
+    # the killed link is never re-locked: record still down, and its carried
+    # endpoint lock rows are fully broken (empty masked bus)
+    assert fab2.links[2].lanes_up == 0
+    assert fab2.links[2].failure == "link_down"
+    lock = np.asarray(fab2.handle.state.lock).reshape(-1, 2, CFG.grid.n_ch)
+    assert (lock[2] < 0).all()
+    # survivors repair monotonically and keep at least their old lanes
+    for i, l in enumerate(fab2.links):
+        if i != 2:
+            assert l.lanes_up >= before[i]
+
+    # the handle stays reusable: a second injection + repair round composes
+    hurt2 = inject_link_failure(fab2, [4])
+    assert not hurt2.handle.link_alive[2]  # first failure persists
+    fab3, _ = rearbitrate(hurt2, CFG, seed=2)
+    assert fab3.links[4].lanes_up == 0 and fab3.links[2].lanes_up == 0
+    for i, l in enumerate(fab3.links):
+        if i not in (2, 4):
+            assert l.lanes_up >= fab2.links[i].lanes_up
+    # injection is idempotent
+    again = inject_link_failure(fab3, [2])
+    assert again.links[2].lanes_up == 0
+    np.testing.assert_array_equal(again.handle.link_alive,
+                                  fab3.handle.link_alive)
+
+
+# --------------------------------------------------- property-check layer --
+# Structural invariants shared by the deterministic parametrized tests
+# below and the hypothesis layer (when installed): degraded-mode route
+# metrics always dominate the primary-only ones, and the fallback table is
+# primary-first by construction.
+
+def check_degraded_metrics_dominate(pods, links_per_pair, seed, tr_mean):
+    routes = ring_routes(pods, 1)
+    fallbacks = tuple(
+        (tuple((i + j) % pods for j in (0, pods - 1, 1)),) if pods > 2 else ()
+        for i in range(len(routes))
+    )
+    spec = FabricSpec(pods=pods, links_per_pair=links_per_pair,
+                      comb_group="bundle", routes=routes,
+                      fallbacks=fallbacks if pods > 2 else ())
+    res = bringup(CFG, spec, tr_mean=tr_mean, scheme="vtrs_ssm", seed=seed)
+    s = res.stats
+    assert float(s.route_served) >= float(s.route_up) - 1e-6
+    assert float(s.route_cont_served) >= float(s.route_cont) - 1e-6
+    assert 0.0 <= float(s.route_bandwidth) <= 1.0 + 1e-6
+    # no-fallback spec: served metrics coincide with the primary-only ones
+    bare = dataclasses.replace(spec, fallbacks=())
+    ref = bringup(CFG, bare, tr_mean=tr_mean, scheme="vtrs_ssm", seed=seed)
+    assert float(ref.stats.route_served) == float(ref.stats.route_up)
+    assert float(ref.stats.route_cont_served) == float(ref.stats.route_cont)
+
+
+def check_alternatives_primary_first(pods, n_fallbacks):
+    route = tuple(range(pods))
+    alts = tuple(
+        (0,) + tuple(range(pods - 2, 0, -1)) + (pods - 1,)
+        for _ in range(n_fallbacks)
+    )
+    spec = FabricSpec(pods=pods, routes=(route,), fallbacks=(alts,))
+    hops, valid = spec.route_alternatives()
+    assert hops.shape[:2] == (1, 1 + n_fallbacks)
+    np.testing.assert_array_equal(hops[:, 0, : pods - 1],
+                                  spec.route_hops()[:, : pods - 1])
+    assert valid.all()
+
+
+@pytest.mark.parametrize("pods,links_per_pair,seed,tr_mean", [
+    (2, 2, 0, 4.0), (3, 2, 7, 5.0), (4, 1, 3, 4.5),
+])
+def test_degraded_metrics_dominate(pods, links_per_pair, seed, tr_mean):
+    check_degraded_metrics_dominate(pods, links_per_pair, seed, tr_mean)
+
+
+@pytest.mark.parametrize("pods,n_fallbacks", [(3, 1), (4, 2), (5, 3)])
+def test_alternatives_primary_first(pods, n_fallbacks):
+    check_alternatives_primary_first(pods, n_fallbacks)
+
+
+# ------------------------------------------------------ hypothesis layer --
+
+if HAVE_HYPOTHESIS:
+
+    @given(pods=st.integers(2, 4), links_per_pair=st.integers(1, 3),
+           seed=st.integers(0, 31), tr_mean=st.floats(3.0, 7.0))
+    @settings(**SETTINGS)
+    def test_hypo_degraded_metrics_dominate(pods, links_per_pair, seed,
+                                            tr_mean):
+        check_degraded_metrics_dominate(pods, links_per_pair, seed, tr_mean)
+
+    @given(pods=st.integers(3, 6), n_fallbacks=st.integers(1, 3))
+    @settings(**SETTINGS)
+    def test_hypo_alternatives_primary_first(pods, n_fallbacks):
+        check_alternatives_primary_first(pods, n_fallbacks)

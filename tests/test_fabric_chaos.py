@@ -1,0 +1,199 @@
+"""Fabric chaos invariants: no-fault parity, fault semantics, warm wins.
+
+The load-bearing guarantee is *no-fault parity*: a zero-drift, zero-event
+``FabricTimeline`` must reproduce a single-shot ``fabric.bringup`` bit for
+bit at step 0 (the all-True visibility mask is ``ok & True`` in the table
+builder), keep every lock a zero-cost warm fixed point on later steps, and
+report identical ``FabricStats`` — the chaos layer adds faults, never a
+different no-fault semantics.  On top of that: killed links are never
+re-locked while dead, heal-after-kill recovers pre-fault bandwidth, comb
+failure takes a whole comb group down together, warm re-lock beats cold on
+probes without locking less, and the link axis is chunk/mesh invariant.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.fabric import CHAOS_SCENARIOS, FABRIC_TINY, chaos_timeline
+from repro.configs.wdm import WDM8_G200
+from repro.core import SweepRequest, sweep
+from repro.fabric import (
+    bringup,
+    make_fabric_timeline,
+    make_fabric_units,
+    run_fabric_timeline,
+)
+from repro.launch.mesh import make_sweep_mesh
+
+CFG = WDM8_G200
+SPEC = FABRIC_TINY
+N = CFG.grid.n_ch
+
+
+def _run(tl, *, warm=True, seed=0, **kw):
+    units = make_fabric_units(CFG, SPEC, seed)
+    return run_fabric_timeline(CFG, units, SPEC, tl, scheme="vtrs_ssm",
+                               warm=warm, **kw)
+
+
+def test_no_fault_parity_bit_identical():
+    tl = make_fabric_timeline(SPEC, 3, N)
+    assert not np.asarray(tl.disturbed).any()
+    st, cs = _run(tl)
+    ref = bringup(CFG, SPEC, scheme="vtrs_ssm", seed=0)
+    # step 0 records are the single-shot bring-up, bit for bit
+    np.testing.assert_array_equal(np.asarray(cs.wl[0]), np.asarray(ref.ev.wl))
+    for field in cs.fabric._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(cs.fabric, field)[0]),
+            np.asarray(getattr(ref.stats, field)), err_msg=field)
+    # every later step is a zero-cost warm fixed point: no spend, no churn,
+    # same locks, same stats
+    assert np.asarray(cs.probes[1:]).sum() == 0
+    assert np.asarray(cs.broken[1:]).sum() == 0
+    assert np.asarray(cs.churn[1:]).sum() == 0
+    for s in range(1, 3):
+        np.testing.assert_array_equal(np.asarray(cs.wl[s]),
+                                      np.asarray(cs.wl[0]))
+        for field in cs.fabric._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(cs.fabric, field)[s]),
+                np.asarray(getattr(cs.fabric, field)[0]), err_msg=field)
+    # the final state is the bring-up state in the (2K, N) handle layout
+    np.testing.assert_array_equal(np.asarray(st.lock),
+                                  np.asarray(ref.state.lock))
+
+
+def test_link_kill_isolation_and_heal_recovery():
+    tl = make_fabric_timeline(
+        SPEC, 5, N, events=((1, "link_kill", 2), (3, "link_heal", 2)))
+    _, cs = _run(tl)
+    wl = np.asarray(cs.wl)
+    # dead steps: the killed link's bus is empty — all locks break, nothing
+    # re-locks, no probes are wasted seeking an empty table
+    for s in (1, 2):
+        assert (wl[s, 2] < 0).all()
+        assert not np.asarray(cs.feasible[s, 2])
+    assert np.asarray(cs.probes[2, 2]) == 0  # already dead, nothing to do
+    # survivors never notice: locks and stats identical to step 0
+    other = [k for k in range(SPEC.n_links) if k != 2]
+    for s in (1, 2):
+        np.testing.assert_array_equal(wl[s, other], wl[0, other])
+        assert np.asarray(cs.probes[s, other]).sum() == 0
+    # heal: the link re-locks and fabric bandwidth recovers to pre-fault
+    assert np.asarray(cs.locked[3, 2]) == 2 * N
+    bw = np.asarray(cs.fabric.bandwidth)
+    assert bw[1] < bw[0]
+    np.testing.assert_allclose(bw[3:], bw[0], rtol=1e-6)
+
+
+def test_comb_kill_takes_group_down_together():
+    # FABRIC_TINY groups by bundle: comb group 0 = both links of pair (0,1)
+    tl = make_fabric_timeline(SPEC, 3, N, events=((1, "comb_kill", 0),))
+    _, cs = _run(tl)
+    group = SPEC.link_group()
+    wl = np.asarray(cs.wl)
+    dead = np.flatnonzero(group == 0)
+    assert len(dead) == SPEC.links_per_pair
+    assert (wl[1:, dead] < 0).all()       # every link on the comb, together
+    alive = np.flatnonzero(group != 0)
+    np.testing.assert_array_equal(wl[1][alive], wl[0][alive])
+    # ideal-blind afp is untouched by liveness; feasibility is not
+    assert not np.asarray(cs.feasible)[1:, dead].any()
+    np.testing.assert_array_equal(np.asarray(cs.fabric.afp[1]),
+                                  np.asarray(cs.fabric.afp[0]))
+
+
+def test_ring_kill_degrades_without_relock_storm():
+    tl = make_fabric_timeline(SPEC, 3, N, events=((1, "ring_kill", 0, 1, 4),))
+    _, cs = _run(tl)
+    wl = np.asarray(cs.wl)
+    # only the dead ring's lock breaks; the other 2N-1 rings keep theirs
+    assert wl[1, 0, 1, 4] < 0
+    keep = wl[0].copy(); keep[0, 1, 4] = -1
+    np.testing.assert_array_equal(wl[1], keep)
+    assert np.asarray(cs.locked[1, 0]) == 2 * N - 1
+    # a dead ring does not make the link infeasible (matching exempts it)
+    assert np.asarray(cs.feasible[1, 0])
+    # undisturbed links spend nothing
+    assert np.asarray(cs.probes[1, 1:]).sum() == 0
+
+
+def test_disturbed_gating_scopes_spend_to_hot_pods():
+    # pod 2 ramps; only links touching pod 2 may spend probes
+    sp = CFG.grid.grid_spacing
+    tl = make_fabric_timeline(SPEC, 4, N, pod_thermal={2: 0.5 * sp})
+    _, cs = _run(tl)
+    src, dst = SPEC.link_pods()
+    cold_pod = np.flatnonzero((src != 2) & (dst != 2))
+    hot = np.flatnonzero((src == 2) | (dst == 2))
+    assert np.asarray(cs.probes)[1:, cold_pod].sum() == 0
+    assert np.asarray(tl.disturbed)[1:, hot].all()
+    # hot links keep full lock counts through the ramp (warm re-lock)
+    assert (np.asarray(cs.locked)[1:, hot] == 2 * N).all()
+
+
+def test_warm_beats_cold_on_chaos_scenario():
+    cfg, spec, tl = chaos_timeline("tiny-flap")
+    assert (cfg, spec) == (CFG, SPEC)
+    units = make_fabric_units(cfg, spec, 0)
+    _, w = run_fabric_timeline(cfg, units, spec, tl, scheme="vtrs_ssm",
+                               warm=True)
+    _, c = run_fabric_timeline(cfg, units, spec, tl, scheme="vtrs_ssm",
+                               warm=False)
+    feas = np.asarray(w.feasible[1:])
+    wp = np.asarray(w.probes[1:], np.float64)
+    cp = np.asarray(c.probes[1:], np.float64)
+    assert (wp * feas).sum() < (cp * feas).sum()
+    assert np.asarray(w.locked[-1]).sum() >= np.asarray(c.locked[-1]).sum()
+
+
+def test_link_chunk_and_mesh_invariance():
+    cfg, spec, tl = chaos_timeline("tiny-flap")
+    units = make_fabric_units(cfg, spec, 0)
+    ref = run_fabric_timeline(cfg, units, spec, tl, scheme="vtrs_ssm")
+    for kw in ({"link_chunk": 1}, {"mesh": make_sweep_mesh()}):
+        alt = run_fabric_timeline(cfg, units, spec, tl, scheme="vtrs_ssm",
+                                  **kw)
+        for a, b in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(alt)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chaos_sweep_grid_shapes_and_scenarios_resolve():
+    tl = make_fabric_timeline(SPEC, 2, N, events=((1, "link_kill", 0),))
+    units = make_fabric_units(CFG, SPEC, 0)
+    req = SweepRequest(cfg=CFG, units=units, scheme="vtrs_ssm", fabric=SPEC,
+                       timeline=tl, axes={"tr_mean": [4.0, 5.0]})
+    res = sweep(req)
+    assert res.data.wl is None  # per-step lock maps do not aggregate
+    assert np.asarray(res.data.fabric.bandwidth).shape == (2, 2)
+    assert np.asarray(res.data.probes).shape == (2, 2)
+    assert np.asarray(res.data.feasible).dtype == np.float32  # link means
+    # every registered scenario resolves to a consistent (cfg, spec, tl)
+    for name in CHAOS_SCENARIOS:
+        cfg, spec, stl = chaos_timeline(name)
+        assert stl.n_links == spec.n_links
+        assert stl.n_ch == cfg.grid.n_ch
+
+
+def test_timeline_builder_validation():
+    with pytest.raises(ValueError, match=">= 1 step"):
+        make_fabric_timeline(SPEC, 0, N)
+    with pytest.raises(ValueError, match="argument"):
+        make_fabric_timeline(SPEC, 2, N, events=((0, "link_kill", 0, 1),))
+    with pytest.raises(ValueError, match="down_steps"):
+        make_fabric_timeline(SPEC, 2, N, events=((0, "link_flap", 0, 0),))
+    with pytest.raises(ValueError, match="outside"):
+        make_fabric_timeline(SPEC, 2, N, events=((5, "link_kill", 0),))
+    with pytest.raises(ValueError, match="comb group"):
+        make_fabric_timeline(SPEC, 2, N, events=((0, "comb_kill", 99),))
+    with pytest.raises(ValueError, match="pod_thermal"):
+        make_fabric_timeline(SPEC, 2, N, pod_thermal={7: 1.0})
+    # a timeline built for one fabric cannot drive another
+    other_units = make_fabric_units(CFG, SPEC, 0)
+    tl = make_fabric_timeline(SPEC, 2, N + 2)
+    with pytest.raises(ValueError, match="channels|needs"):
+        run_fabric_timeline(CFG, other_units, SPEC, tl)
