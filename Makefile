@@ -5,17 +5,19 @@
 # paper-scale WDM32 path stays green, a tiny-timeline fig20 smoke so
 # the temporal re-arbitration scan stays green, a tiny-fabric fig21
 # smoke (6-link fabric, all three schemes + constraints-off parity) so the
-# fabric layer stays green, and a tiny-fabric fig22 chaos smoke (no-fault
+# fabric layer stays green, a tiny-fabric fig22 chaos smoke (no-fault
 # parity + kill-and-heal warm/cold gates) so the temporal x fabric
-# composition stays green — all without the full bench-gate cost.
+# composition stays green, and an obs smoke (trace-enabled protocol run +
+# manifest write + report render) so the observability layer stays green —
+# all without the full bench-gate cost.
 PY ?= python
 
 .PHONY: ci tier1 bench-selftest bench-kernel bench-fig18-smoke \
-        bench-fig20-smoke bench-fig21-smoke bench-fig22-smoke bench \
-        bench-gate
+        bench-fig20-smoke bench-fig21-smoke bench-fig22-smoke obs-smoke \
+        bench bench-gate
 
 ci: tier1 bench-selftest bench-kernel bench-fig18-smoke bench-fig20-smoke \
-        bench-fig21-smoke bench-fig22-smoke
+        bench-fig21-smoke bench-fig22-smoke obs-smoke
 
 tier1:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -37,6 +39,12 @@ bench-fig21-smoke:
 
 bench-fig22-smoke:
 	PYTHONPATH=src:. $(PY) -m benchmarks.fig22_fabric_chaos
+
+# End-to-end observability gate: a trace-enabled tiny WDM8 protocol run
+# (taxonomy), a recorded sweep (spans + memory watermark), a chaos health
+# matrix — written to a run manifest and rendered back via repro.obs.report.
+obs-smoke:
+	PYTHONPATH=src $(PY) -m repro.obs.smoke
 
 # Regenerate the BENCH trajectory file and gate it against the committed
 # baseline (>20% per-figure / per-record slowdowns fail).  On noisy shared

@@ -98,7 +98,14 @@ def _record_times(payload: dict) -> Dict[str, float]:
 def compare(old: dict, new: dict, threshold: float = DEFAULT_THRESHOLD
             ) -> Tuple[List[dict], List[str]]:
     """Returns (regressions, notes).  A regression dict has ``kind``
-    ("figure" | "record"), ``name``, ``old_ms``, ``new_ms``, ``ratio``."""
+    ("figure" | "record"), ``name``, ``old_ms``, ``new_ms``, ``ratio``.
+    Regressions come sorted by magnitude (worst ratio first), so the
+    failure message leads with the record that actually moved.  Records
+    are free to carry fields this gate does not know (the obs layer adds
+    top-level ``manifest``/``phases`` and ``derived.phase``): only
+    ``figure``/``name``/``module_wall_ms``/``derived.*_ms`` are read, so
+    old baselines without them — and new candidates with them — diff
+    cleanly in both directions (asserted in ``--self-test``)."""
     regressions: List[dict] = []
     notes: List[str] = []
     for kind, old_map, new_map in (
@@ -120,6 +127,7 @@ def compare(old: dict, new: dict, threshold: float = DEFAULT_THRESHOLD
                     {"kind": kind, "name": name, "old_ms": o, "new_ms": n,
                      "ratio": round(ratio, 3)}
                 )
+    regressions.sort(key=lambda r: r["ratio"], reverse=True)
     return regressions, notes
 
 
@@ -209,6 +217,52 @@ def self_test() -> int:
     ok, notes = compare(f22(100.0, 400.0), payload(f=(1000.0, 100.0)))
     checks.append(("fig22 dropped from candidate is note-only",
                    ok == [] and any("fig22" in n for n in notes)))
+    # Observability fields (PR 10): records now carry top-level "manifest"
+    # and "phases" keys, and timeout markers a derived "phase" string.  The
+    # gate must ignore all of them — old baseline vs new candidate AND the
+    # reverse (a rollback diff) — with no spurious notes, and keep comparing
+    # the timings that are present.
+    def obs_payload(engine_ms):
+        return {
+            "schema": "bench.v1", "full": False,
+            "records": [{
+                "figure": "f", "name": "f/row", "module_wall_ms": 1000.0,
+                "manifest": ".obs/20260809-120000-bench-1.jsonl",
+                "phases": {"sweep:steady": {"kind": "execute", "ms": 12.0,
+                                            "count": 1}},
+                "derived": {"engine_ms": engine_ms},
+            }],
+        }
+
+    ok, notes = compare(payload(f=(1000.0, 100.0)), obs_payload(100.0))
+    checks.append(("obs fields on new candidate ignored",
+                   ok == [] and notes == []))
+    ok, notes = compare(obs_payload(100.0), payload(f=(1000.0, 100.0)))
+    checks.append(("obs fields on old baseline ignored",
+                   ok == [] and notes == []))
+    bad, _ = compare(payload(f=(1000.0, 100.0)), obs_payload(200.0))
+    checks.append(("obs-annotated record still gated",
+                   [(r["kind"], r["name"]) for r in bad]
+                   == [("record", "f/row")]))
+    obs_timeout = {
+        "schema": "bench.v1", "full": False,
+        "records": [{"figure": "f", "name": "f/TIMEOUT",
+                     "module_wall_ms": 0.0,
+                     "manifest": ".obs/x.jsonl",
+                     "derived": {"timeout": True, "budget_s": 60,
+                                 "phase": "sweep:warm"}}],
+    }
+    ok, notes = compare(payload(f=(1000.0, 100.0)), obs_timeout)
+    checks.append(("phase-attributed timeout treated as missing",
+                   ok == [] and len(notes) == 2))
+    # Failure message ranks by magnitude: the 4x record outranks the 1.5x
+    # figure even though name order would put the figure first.
+    bad, _ = compare(
+        payload(f=(1000.0, 100.0), g=(1000.0, 100.0)),
+        payload(f=(1500.0, 100.0), g=(1000.0, 400.0)),
+    )
+    checks.append(("regressions sorted worst-first",
+                   [round(r["ratio"], 1) for r in bad] == [4.0, 1.5]))
     prior = os.environ.get("BENCH_GATE_THRESHOLD")
     try:
         os.environ["BENCH_GATE_THRESHOLD"] = "0.5"

@@ -33,13 +33,22 @@ def timed_steady(fn: Callable, *args, **kw):
     """(result, steady_ms): first call warms the jit cache, second is timed.
 
     Keeps ``engine_ms`` comparable across figures and commits in the
-    BENCH_*.json trajectory — compile time is excluded everywhere.
+    BENCH_*.json trajectory — compile time is excluded everywhere.  With a
+    ``repro.obs.phase`` recorder installed, the warm call is recorded as a
+    ``compile`` span and the steady call as ``execute`` — the compile vs
+    execute split the run manifests report — with no recorder it is two
+    no-op context managers around the identical calls.
     """
     import jax
 
-    out = jax.block_until_ready(fn(*args, **kw))
+    from repro.obs.phase import span
+
+    label = getattr(fn, "__name__", fn.__class__.__name__)
+    with span(f"{label}:warm", kind="compile"):
+        out = jax.block_until_ready(fn(*args, **kw))
     t0 = time.time()
-    jax.block_until_ready(fn(*args, **kw))
+    with span(f"{label}:steady", kind="execute"):
+        jax.block_until_ready(fn(*args, **kw))
     return out, (time.time() - t0) * 1e3
 
 

@@ -40,6 +40,7 @@ def _phase_breakdown(cfg, units, rlv: float, tr: float) -> dict:
     from repro.core.outcomes import classify
     from repro.core.relation import chain_spec
     from repro.core.sampling import instantiate
+    from repro.obs.phase import span
 
     over = Variations(tr_mean=float(tr), sigma_rlv=float(rlv))
     sys = jax.block_until_ready(
@@ -48,15 +49,21 @@ def _phase_breakdown(cfg, units, rlv: float, tr: float) -> dict:
     spec = chain_spec(cfg.s)
     sspec = scheme_spec(SCHEME)
 
+    # Named obs spans around each phase: a --timeout wedge inside this
+    # breakdown is attributed "table"/"arbitrate"/"score" in the marker
+    # record (benchmarks/run.py), not just to the module.
     tab_fn = jax.jit(lambda s: _build_tables(cfg, s, float(tr), None))
-    tables, table_ms = timed_steady(tab_fn, sys)
+    with span("table"):
+        tables, table_ms = timed_steady(tab_fn, sys)
     arb_fn = jax.jit(lambda t: sspec.arbiter(cfg, t, spec, backend=None))
-    assign, arbitrate_ms = timed_steady(arb_fn, tables)
+    with span("arbitrate"):
+        assign, arbitrate_ms = timed_steady(arb_fn, tables)
     score_fn = jax.jit(lambda s, a: (
         _ideal_success(cfg, s, sspec.policy, float(tr), None),
         classify(a, jnp.asarray(cfg.s), policy=sspec.policy),
     ))
-    _, score_ms = timed_steady(score_fn, sys, assign)
+    with span("score"):
+        _, score_ms = timed_steady(score_fn, sys, assign)
     return {
         "table_ms": round(table_ms, 1),
         "arbitrate_ms": round(arbitrate_ms, 1),

@@ -166,4 +166,32 @@ def run(full: bool = False):
             },
         )
     )
+
+    # --- WDM16 seq_retry failure taxonomy (flight recorder) ---------------
+    # Every trial seq_retry loses while the ideal LtA arbiter wins is
+    # re-arbitrated through the traced depth-1 protocol engine and
+    # classified from its trace alone (repro.obs.taxonomy).  The obs
+    # acceptance gate: the code set is closed — zero ``unknown``s.
+    from repro.obs.taxonomy import explain_residuals
+
+    tax = explain_residuals(cfg16, units16, trs16, scheme="seq_retry",
+                            depth=1, trace_cap=128)
+    rows.append(
+        (
+            "fig19/wdm16/seq_retry_taxonomy",
+            {
+                "residual_trials": tax["residual_total"],
+                "histogram": tax["histogram"],
+                "unknown": tax["unknown"],
+                "all_classified": bool(tax["unknown"] == 0),
+                "per_point": [
+                    {"tr_mean": p["tr_mean"],
+                     "residual_trials": p["residual_trials"],
+                     **({"histogram": p["histogram"]}
+                        if p["residual_trials"] else {})}
+                    for p in tax["points"]
+                ],
+            },
+        )
+    )
     return rows

@@ -12,10 +12,19 @@ median-of-3 is what makes the ``check_regression`` wall-time gate usable.
 
 ``--timeout S`` arms a per-module alarm (SIGALRM; POSIX main thread only).
 A module that hangs past it is recorded as a single marker record
-(``derived: {"timeout": true}``), every module that already finished keeps
+(``derived: {"timeout": true, "phase": ...}``) attributing the hang to the
+phase span that was executing when the alarm fired (``repro.obs.phase``
+recorder — e.g. ``sweep:warm`` vs ``sweep:steady``, or fig18's
+table/arbitrate/score breakdown), every module that already finished keeps
 its records, and the JSON is still written — one wedged figure no longer
 loses the whole run.  ``check_regression`` treats marker records as missing
 (note, never a failure).
+
+Every run also writes a ``repro.obs`` JSONL manifest (``.obs/``): each
+record mirrors there as it lands, with per-module phase dumps; each JSON
+record carries the manifest path and its module's aggregated ``phases``
+fields so BENCH files and manifests cross-reference both ways.  Render
+with ``python -m repro.obs.report``.
 """
 from __future__ import annotations
 
@@ -29,21 +38,34 @@ from .common import write_json
 
 
 class ModuleTimeout(Exception):
-    """A benchmark module exceeded the per-module wall budget."""
+    """A benchmark module exceeded the per-module wall budget.
+
+    ``phase`` carries the open span stack of the module's phase recorder at
+    the instant the alarm fired (None when nothing was instrumented) — the
+    difference between "the sweep compile wedged" and "the steady-state
+    timing wedged" without re-running anything.
+    """
+
+    def __init__(self, phase: str | None = None):
+        super().__init__(phase or "")
+        self.phase = phase
 
 
-def _run_with_timeout(fn, seconds: int | None):
+def _run_with_timeout(fn, seconds: int | None, recorder=None):
     """Run ``fn()`` under a SIGALRM budget; raises ModuleTimeout on expiry.
 
     No-op passthrough when ``seconds`` is None/0 or SIGALRM is unavailable
     (non-POSIX or non-main-thread): the run degrades to untimed, never
-    breaks.
+    breaks.  ``recorder`` (a ``repro.obs.phase.PhaseRecorder``) attributes
+    the timeout to the span executing when the alarm fired.
     """
     if not seconds or not hasattr(signal, "SIGALRM"):
         return fn()
 
     def on_alarm(signum, frame):
-        raise ModuleTimeout()
+        raise ModuleTimeout(
+            recorder.current_path() if recorder is not None else None
+        )
 
     prev = signal.signal(signal.SIGALRM, on_alarm)
     signal.alarm(seconds)
@@ -113,6 +135,12 @@ def main() -> None:
         roofline_report,
         beyond_lta,
     ]
+    from repro.obs.manifest import RunManifest
+    from repro.obs.phase import PhaseRecorder, use_recorder
+
+    manifest = RunManifest.create(
+        label="bench", full=args.full, runs=args.runs, timeout=args.timeout
+    )
     print("name,us_per_call,derived")
     records = []
     for mod in modules:
@@ -120,18 +148,25 @@ def main() -> None:
         if args.only and args.only not in mod_name:
             continue
         walls, timing_runs = [], []
+        # One recorder per module: its spans time each repeat's sweeps
+        # (warm = compile, steady = execute) and — under --timeout — name
+        # the phase a wedged module was stuck in.
+        recorder = PhaseRecorder()
         try:
-            for _ in range(args.runs):
-                t0 = time.time()
-                rows = _run_with_timeout(
-                    lambda: mod.run(full=args.full), args.timeout
-                )
-                walls.append((time.time() - t0) * 1e3)
-                timing_runs.append(
-                    {name: {k: v for k, v in d.items() if k.endswith("_ms")}
-                     for name, d in rows}
-                )
-        except ModuleTimeout:
+            with use_recorder(recorder):
+                for _ in range(args.runs):
+                    t0 = time.time()
+                    rows = _run_with_timeout(
+                        lambda: mod.run(full=args.full), args.timeout,
+                        recorder,
+                    )
+                    walls.append((time.time() - t0) * 1e3)
+                    timing_runs.append(
+                        {name: {k: v for k, v in d.items()
+                                if k.endswith("_ms")}
+                         for name, d in rows}
+                    )
+        except ModuleTimeout as to:
             # One wedged module must not lose the run: emit a marker record
             # (check_regression treats it as missing) and move on.  Partial
             # repeats are discarded — a half-measured median is not a median.
@@ -141,10 +176,14 @@ def main() -> None:
                     "figure": mod_name,
                     "name": f"{mod_name}/TIMEOUT",
                     "module_wall_ms": 0.0,
+                    "manifest": manifest.path,
                     "derived": {"timeout": True,
-                                "budget_s": args.timeout},
+                                "budget_s": args.timeout,
+                                "phase": to.phase},
                 }
             )
+            manifest.record_bench(records[-1])
+            manifest.record_phases(recorder, scope=mod_name)
             if args.json_out:
                 write_json(args.json_out, records, full=args.full)
             continue
@@ -158,6 +197,8 @@ def main() -> None:
                     derived[field] = round(statistics.median(
                         run[name][field] for run in timing_runs
                     ), 1)
+        phases = recorder.phase_fields()
+        manifest.record_phases(recorder, scope=mod_name)
         us = wall_ms * 1e3 / max(len(rows), 1)
         for name, derived in rows:
             print(f"{name},{us:.0f},{json.dumps(derived, default=float)}")
@@ -166,14 +207,18 @@ def main() -> None:
                     "figure": mod_name,
                     "name": name,
                     "module_wall_ms": round(wall_ms, 1),
+                    "manifest": manifest.path,
+                    "phases": phases,
                     "derived": derived,
                 }
             )
+            manifest.record_bench(records[-1])
         if args.json_out:
             # incremental flush: a crash mid-suite keeps everything finished
             write_json(args.json_out, records, full=args.full)
     if args.json_out:
         write_json(args.json_out, records, full=args.full)
+    manifest.close()
 
 
 if __name__ == "__main__":

@@ -188,3 +188,40 @@ print(
     "heal; survivors never spend a probe (benchmarks/fig22_fabric_chaos.py\n"
     "runs comb outages, pod heating and ring death with warm-vs-cold gates)"
 )
+
+# Flight recorder (repro.obs): pass ``trace=<capacity>`` and the protocol
+# engine carries a per-trial event ring (probe / lock / displace /
+# surrender / release / halt) through its round loop — off by default, and
+# the disabled path is bit-identical to the untraced engine.  Here we take
+# a TR point where depth-1 seq_retry still fails against a feasible ideal,
+# replay it through the traced engine, and let the failure taxonomy say
+# *why* each residual trial failed — starvation vs displacement-storm vs
+# livelock vs hopeless — from the trace alone.
+from repro.core.protocol import default_rounds, run_protocol
+from repro.core.relation import chain_spec
+from repro.core.sampling import instantiate
+from repro.core.search_table import build_search_tables
+from repro.obs import format_events, trace_events
+from repro.obs.taxonomy import explain_residuals
+
+mid_tr = float(trs[len(trs) // 2])  # mid-sweep: where seq_retry leaves CAFP
+tax = explain_residuals(cfg, units_p, [mid_tr], scheme="seq_retry",
+                        depth=1, trace_cap=64)
+print(
+    f"\nflight recorder @ TR={mid_tr:.2f}nm: seq_retry loses "
+    f"{tax['residual_total']} trials the ideal LtA arbiter wins;\n"
+    f"taxonomy: {tax['histogram']} (unknown={tax['unknown']})"
+)
+if tax["points"][0]["trial_index"]:
+    # replay the first failing trial with tracing on and show its events
+    trial = tax["points"][0]["trial_index"][0]
+    sys_q = instantiate(cfg, units_p)
+    tbl = build_search_tables(sys_q, mid_tr, max_alias=cfg.max_fsr_alias)
+    _, buf = run_protocol(tbl, chain_spec(cfg.s), depth=1,
+                          n_rounds=default_rounds(cfg.grid.n_ch), trace=64)
+    print(f"trial {trial}'s last protocol events:")
+    print(format_events(trace_events(buf, trial), limit=6))
+print(
+    "(benchmarks/fig19_lta_protocol.py classifies every WDM16 residual;\n"
+    "`python -m repro.obs.report` renders bench-run manifests from .obs/)"
+)

@@ -213,13 +213,22 @@ def _controller_order(tables: SearchTables, spec: ChainSpec, order: str):
 
 
 def _probe_phase(tables: SearchTables, order: jax.Array, state: ProtocolState,
-                 research: ResearchFn) -> ProtocolState:
-    """One lock sweep: starved rings relock red-ward of their cursor."""
+                 research: ResearchFn, trace=None, rnd=None):
+    """One lock sweep: starved rings relock red-ward of their cursor.
+
+    Returns ``(state, trace)``.  ``trace`` is an optional
+    ``repro.obs.trace.TraceBuffer`` (the flight recorder); the appends are
+    Python-static branches, so ``trace=None`` compiles to the legacy jaxpr
+    bit for bit.
+    """
     t, n, e = tables.wl.shape
     rows = jnp.arange(t)
+    tracing = trace is not None
+    if tracing:
+        from repro.obs.trace import EV_LOCK, EV_PROBE, trace_append
 
     def body(rank, st):
-        lock, entry, cursor, probes = st
+        lock, entry, cursor, probes = st[:4]
         ring = order[:, rank]                            # (T,) per-trial ring
         # A starved ring with an *empty* table (its sweep recorded no peak)
         # has nothing to re-search: it never spends probes, which keeps the
@@ -237,16 +246,24 @@ def _probe_phase(tables: SearchTables, order: jax.Array, state: ProtocolState,
         entry = entry.at[rows, ring].set(jnp.where(do, first, entry[rows, ring]))
         cursor = cursor.at[rows, ring].set(jnp.where(do, first, cur))
         probes = probes + searching.astype(jnp.int32)
+        if tracing:
+            tr = trace_append(st[4], searching, rnd, ring, EV_PROBE, cur)
+            tr = trace_append(tr, do, rnd, ring, EV_LOCK, first)
+            return lock, entry, cursor, probes, tr
         return lock, entry, cursor, probes
 
-    out = jax.lax.fori_loop(0, n, body, tuple(state))
-    return ProtocolState(*out)
+    init = tuple(state) + ((trace,) if tracing else ())
+    out = jax.lax.fori_loop(0, n, body, init)
+    return ProtocolState(*out[:4]), (out[4] if tracing else None)
 
 
 def _augment_phase(tables: SearchTables, state: ProtocolState, depth: int,
                    n_seekers: int, k_donors: int,
-                   research: ResearchFn) -> ProtocolState:
+                   research: ResearchFn, trace=None, rnd=None):
     """Displacement chains for starved rings, up to ``depth`` hops each.
+
+    Returns ``(state, trace)`` — see ``_probe_phase`` for the flight-
+    recorder contract (``trace=None`` keeps the legacy jaxpr).
 
     Hop resolution order (first match wins, all red-ward of the seeker's
     cursor): a *free* visible line; among the first ``k_donors`` donor
@@ -265,9 +282,18 @@ def _augment_phase(tables: SearchTables, state: ProtocolState, depth: int,
     k_don = max(1, min(k_donors, e))
     rows = jnp.arange(t)
     eiota = jnp.arange(e, dtype=jnp.int32)
+    tracing = trace is not None
+    if tracing:
+        from repro.obs.trace import (
+            EV_DISPLACE,
+            EV_LOCK,
+            EV_PROBE,
+            EV_SURRENDER,
+            trace_append,
+        )
 
     def chain_step(_, carry):
-        lock, entry, cursor, probes, s, active = carry
+        lock, entry, cursor, probes, s, active = carry[:6]
         taken = _taken_lines(lock, n)
         holder = _line_holder(lock, n)
         wl_s = tables.wl[rows, s]                        # (T, E)
@@ -341,11 +367,17 @@ def _augment_phase(tables: SearchTables, state: ProtocolState, depth: int,
         )
         probes = probes + jnp.where(active, 1 + scanned, 0)
 
-        s = jnp.where(do_yield, x_sel, s)
-        return lock, entry, cursor, probes, s, do_yield
+        s_next = jnp.where(do_yield, x_sel, s)
+        if tracing:
+            tr = trace_append(carry[6], active, rnd, s, EV_PROBE, floor_s)
+            tr = trace_append(tr, take, rnd, s, EV_LOCK, e_s)
+            tr = trace_append(tr, do_swap, rnd, x_sel, EV_DISPLACE, a_sel)
+            tr = trace_append(tr, do_yield, rnd, x_sel, EV_SURRENDER, x_entry)
+            return lock, entry, cursor, probes, s_next, do_yield, tr
+        return lock, entry, cursor, probes, s_next, do_yield
 
     def seeker_slot(_, st):
-        lock, entry, cursor, probes, tried = st
+        lock, entry, cursor, probes, tried = st[:5]
         # Empty-table rings can never lock: they launch no chains (and spend
         # no probes), same per-trial accounting argument as the probe phase.
         starved = (lock < 0) & ~tried & (tables.n_valid > 0)
@@ -353,20 +385,35 @@ def _augment_phase(tables: SearchTables, state: ProtocolState, depth: int,
         s0 = jnp.argmax(starved, axis=1).astype(jnp.int32)
         tried = tried.at[rows, s0].set(tried[rows, s0] | any_s)
         carry = (lock, entry, cursor, probes, s0, any_s)
+        carry = carry + ((st[5],) if tracing else ())
         out = jax.lax.fori_loop(0, depth, chain_step, carry)
-        return out[:4] + (tried,)
+        return out[:4] + (tried,) + ((out[6],) if tracing else ())
 
-    out = jax.lax.fori_loop(
-        0, min(n_seekers, n), seeker_slot,
-        tuple(state) + (jnp.zeros((t, n), bool),),
-    )
-    return ProtocolState(*out[:4])
+    init = tuple(state) + (jnp.zeros((t, n), bool),)
+    init = init + ((trace,) if tracing else ())
+    out = jax.lax.fori_loop(0, min(n_seekers, n), seeker_slot, init)
+    return ProtocolState(*out[:4]), (out[5] if tracing else None)
 
 
-def _release_phase(state: ProtocolState) -> ProtocolState:
-    """Starved rings restart their tuner sweep (cursor back to entry 0)."""
+def _release_phase(state: ProtocolState, trace=None, rnd=None):
+    """Starved rings restart their tuner sweep (cursor back to entry 0).
+
+    Returns ``(state, trace)``; with the recorder on, every cursor that
+    actually rewinds logs one ``release`` event (entry = the old cursor).
+    """
     starved = state.lock < 0
-    return state._replace(cursor=jnp.where(starved, 0, state.cursor))
+    if trace is not None:
+        from repro.obs.trace import EV_RELEASE, trace_append
+
+        reset = starved & (state.cursor != 0)
+
+        def body(i, tr):
+            return trace_append(
+                tr, reset[:, i], rnd, i, EV_RELEASE, state.cursor[:, i]
+            )
+
+        trace = jax.lax.fori_loop(0, state.lock.shape[1], body, trace)
+    return state._replace(cursor=jnp.where(starved, 0, state.cursor)), trace
 
 
 def _finalize(tables: SearchTables, state: ProtocolState) -> Assignment:
@@ -416,6 +463,7 @@ def run_protocol(
     with_state: bool = False,
     transactional: bool = False,
     patience: int | None = None,
+    trace: int | None = None,
 ):
     """Run the round-driven oblivious arbitration protocol on a table batch.
 
@@ -468,9 +516,22 @@ def run_protocol(
               values (4-8) trade essentially no completion for a bounded
               infeasible-trial budget.  Used by ``core.temporal`` for both
               warm and cold re-arbitration (a fair probe comparison).
+    trace:    flight-recorder ring capacity (events per trial).  None (the
+              default) disables tracing and the compiled program is the
+              legacy jaxpr bit for bit — every append is a Python-static
+              branch.  An int appends a ``repro.obs.trace.TraceBuffer`` to
+              the return tuple, recording every probe / lock / displace /
+              surrender / release transaction plus a trial-level ``halt``
+              event.  Frozen (halted) trials record nothing further — the
+              recorder follows the engine's restore-and-refund semantics —
+              but transactional rollbacks keep their exploration events
+              (the transactions physically ran; only the commit rolled
+              back).  Tracing never changes arbitration outcomes
+              (asserted in ``tests/test_obs.py``).
 
     Returns ``assign`` and, per the flags, ``(assign, stats)``,
-    ``(assign, state)`` or ``(assign, stats, state)``.  ``assign`` is an
+    ``(assign, state)`` or ``(assign, stats, state)`` — with ``trace`` set,
+    the ``TraceBuffer`` is appended last.  ``assign`` is an
     ``Assignment`` ((T, N) entry/wl/delta).  The while_loop exits as soon as
     every trial is fully locked — and, since one probe/augment/release round
     is a deterministic function of (lock, entry, cursor), a trial whose
@@ -487,6 +548,13 @@ def run_protocol(
     rounds = default_rounds(n) if n_rounds is None else int(n_rounds)
     research = _resolve_research(backend)
     order_idx = _controller_order(tables, spec, order)
+    tracing = trace is not None
+    if tracing:
+        from repro.obs.trace import (
+            EV_HALT, merge_traces, trace_append, trace_buffer,
+        )
+
+        buf0 = trace_buffer(t, int(trace))
 
     state0 = cold_state(t, n) if init_state is None else init_state
     # Trials resumed already-complete never enter the loop: report round 0
@@ -497,7 +565,7 @@ def run_protocol(
     )
 
     def cond(carry):
-        state, rnd, _, halted, _, _ = carry
+        state, rnd, halted = carry[0], carry[1], carry[3]
         # A trial stays live while some starved ring could still act: a
         # starved ring whose search table is empty (n_valid == 0 — an
         # observable event: its sweep records no peak) can never lock, and a
@@ -510,14 +578,17 @@ def run_protocol(
         return (rnd < rounds) & jnp.any(jnp.any(live, axis=1) & ~halted)
 
     def body(carry):
-        state, rnd, done_round, halted, plateau, halt_round = carry
-        prev = state
-        state = _probe_phase(tables, order_idx, state, research)
+        state, rnd, done_round, halted, plateau, halt_round = carry[:6]
+        buf = carry[6] if tracing else None
+        prev, prev_buf = state, buf
+        state, buf = _probe_phase(
+            tables, order_idx, state, research, buf, rnd
+        )
         if dep > 0:
-            state = _augment_phase(
-                tables, state, dep, n_seekers, k_donors, research
+            state, buf = _augment_phase(
+                tables, state, dep, n_seekers, k_donors, research, buf, rnd
             )
-        state = _release_phase(state)
+        state, buf = _release_phase(state, buf, rnd)
         # Progress stall: one round is a deterministic map of (lock, entry,
         # cursor), so an unchanged live trial repeats forever — sticky-halt
         # it.  Already-halted trials are frozen: this round's state changes
@@ -537,6 +608,10 @@ def run_protocol(
             cursor=jnp.where(halted[:, None], prev.cursor, state.cursor),
             probes=jnp.where(halted, prev.probes, state.probes),
         )
+        if tracing:
+            # The recorder follows restore-and-refund: a frozen trial's
+            # events this round are dropped along with its state changes.
+            buf = merge_traces(halted, prev_buf, buf)
         live = jnp.any((prev.lock < 0) & (tables.n_valid > 0), axis=1)
         was_halted = halted
         halted = halted | (live & ~changed)
@@ -554,13 +629,21 @@ def run_protocol(
         done_round = jnp.where(
             complete & (done_round < 0), rnd + 1, done_round
         )
-        return state, rnd + 1, done_round, halted, plateau, halt_round
+        out = (state, rnd + 1, done_round, halted, plateau, halt_round)
+        if tracing:
+            buf = trace_append(
+                buf, halted & ~was_halted, rnd + 1, -1, EV_HALT, -1
+            )
+            out = out + (buf,)
+        return out
 
-    state, _, done_round, _, _, halt_round = jax.lax.while_loop(
-        cond, body,
-        (state0, jnp.int32(0), done0, jnp.zeros((t,), bool),
-         jnp.zeros((t,), jnp.int32), jnp.full((t,), -1, jnp.int32)),
-    )
+    carry0 = (state0, jnp.int32(0), done0, jnp.zeros((t,), bool),
+              jnp.zeros((t,), jnp.int32), jnp.full((t,), -1, jnp.int32))
+    if tracing:
+        carry0 = carry0 + (buf0,)
+    final = jax.lax.while_loop(cond, body, carry0)
+    state, done_round, halt_round = final[0], final[2], final[5]
+    buf = final[6] if tracing else None
     if transactional:
         n_lock0 = jnp.sum((state0.lock >= 0).astype(jnp.int32), axis=1)
         n_lock1 = jnp.sum((state.lock >= 0).astype(jnp.int32), axis=1)
@@ -571,9 +654,13 @@ def run_protocol(
             cursor=jnp.where(commit, state.cursor, state0.cursor),
         )
         done_round = jnp.where(commit[:, 0], done_round, done0)
+        # Rollback restores state only: the exploration events stand (those
+        # transactions physically ran; just the commit was refused).
     assign = _finalize(tables, state)
     if not with_stats:
-        return (assign, state) if with_state else assign
+        if with_state:
+            return (assign, state, buf) if tracing else (assign, state)
+        return (assign, buf) if tracing else assign
     stats = ProtocolStats(
         probes=state.probes,
         rounds=jnp.where(done_round < 0, rounds, done_round),
@@ -587,7 +674,8 @@ def run_protocol(
             jnp.where(halt_round >= 0, halt_round, rounds),
         ),
     )
-    return (assign, stats, state) if with_state else (assign, stats)
+    out = (assign, stats, state) if with_state else (assign, stats)
+    return out + (buf,) if tracing else out
 
 
 # Jitted phase steps for the trace path: compiled once per (T, N, E) shape,
@@ -596,12 +684,12 @@ def run_protocol(
 _probe_jit = jax.jit(
     lambda tables, order, state: _probe_phase(
         tables, order, state, masked_first_entry
-    )
+    )[0]
 )
 _augment_jit = jax.jit(
     lambda tables, state, depth, n_seekers, k_donors: _augment_phase(
         tables, state, depth, n_seekers, k_donors, masked_first_entry
-    ),
+    )[0],
     static_argnums=(2, 3, 4),
 )
 
@@ -639,7 +727,7 @@ def run_protocol_trace(
         if dep > 0:
             state = _augment_jit(tables, state, dep, n_seekers, k_donors)
         snaps.append((rnd, "augment", jax.tree_util.tree_map(np.asarray, state)))
-        state = _release_phase(state)
+        state, _ = _release_phase(state)
         snaps.append((rnd, "release", jax.tree_util.tree_map(np.asarray, state)))
     if transactional:
         commit = (

@@ -107,7 +107,7 @@ def _shard_map(f, *, mesh, in_specs, out_specs, check_rep=False):
     )
 
 
-def chunked_map(item_fn, xs, *, chunk, mesh=None, broadcast=()):
+def chunked_map(item_fn, xs, *, chunk, mesh=None, broadcast=(), tag=None):
     """Map ``item_fn`` over ``xs``'s leading axis in vmapped chunks.
 
     The engine's memory-bounding primitive, extracted so other batch axes
@@ -134,6 +134,13 @@ def chunked_map(item_fn, xs, *, chunk, mesh=None, broadcast=()):
         n_dev = mesh.devices.size
         n_chunks = -(-n_chunks // n_dev) * n_dev   # whole chunks per device
     pad = n_chunks * chunk - p
+    if tag is not None:
+        # Best-effort plan telemetry: this body runs at *trace* time, so
+        # the note fires once per compilation, not per executed chunk.
+        from repro.obs.phase import note
+
+        note(f"chunked_map.{tag}", items=int(p), chunk=int(chunk),
+             n_chunks=int(n_chunks), pad=int(pad))
     if pad:
         xs = tree.tree_map(
             lambda a: jnp.concatenate(
@@ -512,7 +519,7 @@ def _sweep_flat(
 
     return chunked_map(
         eval_point, points, chunk=chunk, mesh=mesh,
-        broadcast=(units, fixed_values, timeline),
+        broadcast=(units, fixed_values, timeline), tag="sweep_points",
     )
 
 
@@ -578,13 +585,48 @@ def sweep(request: SweepRequest) -> SweepResult:
     fixed_values = jnp.asarray(
         [float(request.fixed[k]) for k in fixed_names], jnp.float32
     )
-    out = _sweep_flat(
-        cfg, units, jnp.asarray(points), fixed_values,
+    points_arr = jnp.asarray(points)
+    statics = dict(
         policy=policy, scheme=scheme, metric=metric, names=run_names,
         fixed_names=fixed_names, chunk=chunk, backend=request.backend,
-        mesh=request.mesh, timeline=request.timeline,
-        fabric=request.fabric, link_chunk=link_chunk,
+        mesh=request.mesh, fabric=request.fabric, link_chunk=link_chunk,
     )
+    from repro.obs.phase import current_recorder, measured_call
+
+    rec = current_recorder()
+    if rec is None:
+        out = _sweep_flat(
+            cfg, units, points_arr, fixed_values,
+            timeline=request.timeline, **statics,
+        )
+    else:
+        # Telemetry path: record the chunk plan, then dispatch through
+        # ``measured_call`` — a plain call unless the recorder opted into
+        # the AOT compile/execute split (memory watermarks vs the budget).
+        trials = units.u_rlv.shape[0] * units.u_go.shape[0]
+        per_point = (scheme_point_bytes(cfg, 2 * link_chunk)
+                     if request.fabric is not None
+                     else scheme_point_bytes(cfg, trials) if scheme is not None
+                     else policy_point_bytes(cfg, trials))
+        rec.note(
+            "sweep.plan", points=int(points_arr.shape[0]), chunk=int(chunk),
+            n_chunks=-(-int(points_arr.shape[0]) // int(chunk)),
+            link_chunk=int(link_chunk), per_point_bytes=int(per_point),
+            budget=_CHUNK_BUDGET, metric=metric,
+            target=scheme if scheme is not None else policy,
+        )
+        if request.timeline is not None:
+            kw = {**statics, "timeline": request.timeline}
+            dyn_kw = {"timeline": request.timeline}
+        else:  # leave the default: None confuses the AOT pytree signature
+            kw, dyn_kw = statics, {}
+        out = measured_call(
+            "sweep", _sweep_flat,
+            (cfg, units, points_arr, fixed_values), kw,
+            dynamic_args=(units, points_arr, fixed_values),
+            dynamic_kwargs=dyn_kw,
+            budget=_CHUNK_BUDGET,
+        )
     if tr_idx is not None:
         afp = _afp_from_trial_min_tr(out.reshape(shape + out.shape[1:]), tr_values)
         data = jnp.moveaxis(afp, -1, tr_idx)

@@ -202,10 +202,15 @@ def protocol_relock(
     transactional: bool = True,
     patience: int | None = 4,
     kw: dict | None = None,
-) -> tuple[ProtocolState, jax.Array, jax.Array]:
+    trace: int | None = None,
+):
     """One re-lock pass of the protocol engine from ``start``.
 
-    Returns ``(new_state, probes, rounds)``.  With ``warm=True`` the pass
+    Returns ``(new_state, probes, rounds)`` — with ``trace`` set (a
+    flight-recorder ring capacity, see ``run_protocol``), the merged
+    ``TraceBuffer`` is appended: trials the escalation resolved cold carry
+    the cold pass's trace, exactly as they carry its state.  With
+    ``warm=True`` the pass
     includes the cold-fallback escalation: a warm start is *more*
     constrained than a cold one (surviving locks are pinned wherever drift
     left them, and donors only relock red-ward), so occasionally an
@@ -222,21 +227,26 @@ def protocol_relock(
     """
     t, n = start.lock.shape
     kw = kw or {}
-    _, stats, new = run_protocol(
+    tracing = trace is not None
+    out = run_protocol(
         tables, spec, backend=backend, with_stats=True,
         with_state=True, init_state=start,
-        transactional=transactional, patience=patience, **kw,
+        transactional=transactional, patience=patience, trace=trace, **kw,
     )
+    _, stats, new = out[:3]
+    buf = out[3] if tracing else None
     probes, rounds = stats.probes, stats.worked
     if warm:
         unresolved = jnp.any(
             (new.lock < 0) & (tables.n_valid > 0), axis=1
         ) & jnp.any(start.lock >= 0, axis=1)
-        _, cstats, cnew = run_protocol(
+        cout = run_protocol(
             tables, spec, backend=backend, with_stats=True,
             with_state=True, init_state=cold_state(t, n),
-            transactional=transactional, patience=patience, **kw,
+            transactional=transactional, patience=patience, trace=trace,
+            **kw,
         )
+        _, cstats, cnew = cout[:3]
         use_cold = unresolved & (cstats.locked > stats.locked)
         new = jax.tree_util.tree_map(
             lambda c, w: jnp.where(
@@ -244,8 +254,14 @@ def protocol_relock(
             ),
             cnew, new,
         )
+        if tracing:
+            from repro.obs.trace import merge_traces
+
+            buf = merge_traces(use_cold, cout[3], buf)
         probes = probes + jnp.where(unresolved, cstats.probes, 0)
         rounds = rounds + jnp.where(unresolved, cstats.worked, 0)
+    if tracing:
+        return new, probes, rounds, buf
     return new, probes, rounds
 
 
@@ -262,7 +278,8 @@ def run_timeline_impl(
     hysteresis=0.0,
     backend: str | None = None,
     init_state: ProtocolState | None = None,
-) -> tuple[ProtocolState, TemporalStats]:
+    trace: int | None = None,
+):
     """Drive the protocol engine along a drift/event timeline.
 
     warm=True re-arbitrates incrementally from the carried lock state;
@@ -272,6 +289,12 @@ def run_timeline_impl(
     settings so the probe comparison is apples to apples.  Returns
     ``(final_state, TemporalStats)`` — the state is resumable via
     ``init_state`` after ``slice_timeline`` (see ``save_campaign``).
+
+    trace: flight-recorder ring capacity per step (see ``run_protocol``);
+    the return gains a third element — a ``TraceBuffer`` with a leading
+    (S,) step axis (the scan stacks each step's ring).  None (default)
+    keeps the legacy two-element return and the legacy jaxpr bit for bit.
+    Only protocol schemes record (one-shot arbiters run no engine).
     """
     from .api import _build_tables, scheme_spec  # local: avoid import cycle
 
@@ -286,6 +309,12 @@ def run_timeline_impl(
             f"scheme {scheme!r} is one-shot: it carries no protocol state, "
             "so only cold (warm=False) re-arbitration is defined"
         )
+    if kw is None and trace is not None:
+        raise ValueError(
+            f"scheme {scheme!r} is one-shot: it never runs the protocol "
+            "engine, so there is no flight recorder to enable (trace=None)"
+        )
+    tracing = trace is not None
     arbiter = scheme_spec(scheme).arbiter
     state0 = cold_state(t, n) if init_state is None else init_state
 
@@ -321,10 +350,12 @@ def run_timeline_impl(
             start = (reval if warm else cold_state(t, n))._replace(
                 probes=jnp.zeros((t,), jnp.int32)
             )
-            new, probes, rounds = protocol_relock(
+            relock = protocol_relock(
                 tables, spec, start, warm=warm, backend=backend,
                 transactional=transactional, patience=patience, kw=kw,
+                trace=trace,
             )
+            new, probes, rounds = relock[:3]
         churn = jnp.sum(
             (kept & (new.lock != prev_lock)).astype(jnp.int32), axis=1
         )
@@ -346,15 +377,19 @@ def run_timeline_impl(
             churn=churn,
             feasible=feasible,
         )
-        return new, out
+        return (new, (out, relock[3])) if tracing else (new, out)
 
-    return jax.lax.scan(step, state0, timeline)
+    final, ys = jax.lax.scan(step, state0, timeline)
+    if tracing:
+        return final, ys[0], ys[1]
+    return final, ys
 
 
 run_timeline = jax.jit(
     run_timeline_impl,
     static_argnames=(
-        "cfg", "scheme", "warm", "transactional", "patience", "backend"
+        "cfg", "scheme", "warm", "transactional", "patience", "backend",
+        "trace",
     ),
 )
 

@@ -290,7 +290,7 @@ def fabric_stats_impl(
     chunk's tables)."""
     ev = chunked_map(
         partial(_eval_link, cfg, spec, scheme, backend, False),
-        units, chunk=link_chunk, broadcast=(variations,),
+        units, chunk=link_chunk, broadcast=(variations,), tag="fabric_links",
     )
     return aggregate_stats(cfg, spec, ev)
 
@@ -304,6 +304,7 @@ def _bringup_flat(cfg, spec, units, variations, *, scheme, backend,
     ev = chunked_map(
         partial(_eval_link, cfg, spec, scheme, backend, True),
         units, chunk=link_chunk, mesh=mesh, broadcast=(variations,),
+        tag="bringup_links",
     )
     return ev, aggregate_stats(cfg, spec, ev)
 
@@ -381,10 +382,29 @@ def bringup(
         var = var.replace(tr_mean=tr_mean)
     units = make_fabric_units(cfg, spec, seed)
     chunk = link_chunk or auto_link_chunk(cfg, spec.n_links)
-    ev, stats = _bringup_flat(
-        cfg, spec, units, var,
-        scheme=scheme, backend=backend, link_chunk=chunk, mesh=mesh,
-    )
+    from repro.obs.phase import current_recorder, measured_call
+
+    rec = current_recorder()
+    if rec is None:
+        ev, stats = _bringup_flat(
+            cfg, spec, units, var,
+            scheme=scheme, backend=backend, link_chunk=chunk, mesh=mesh,
+        )
+    else:
+        from repro.core.sweep import _CHUNK_BUDGET, scheme_point_bytes
+
+        rec.note(
+            "bringup.plan", links=int(spec.n_links), link_chunk=int(chunk),
+            n_chunks=-(-int(spec.n_links) // int(chunk)), scheme=scheme,
+            per_chunk_bytes=int(scheme_point_bytes(cfg, 2 * chunk)),
+            budget=_CHUNK_BUDGET,
+        )
+        statics = dict(scheme=scheme, backend=backend, link_chunk=chunk,
+                       mesh=mesh)
+        ev, stats = measured_call(
+            "bringup", _bringup_flat, (cfg, spec, units, var), statics,
+            dynamic_args=(units, var), budget=_CHUNK_BUDGET,
+        )
     k, n = spec.n_links, cfg.grid.n_ch
     system = SystemBatch(
         laser=ev.system.laser.reshape(2 * k, n),

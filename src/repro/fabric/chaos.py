@@ -39,7 +39,7 @@ timelines over variation grids.  Benchmarked in
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Sequence
+from typing import Any, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -284,6 +284,10 @@ class FabricChaosStats(NamedTuple):
     broken: jax.Array       # (S, K) int32 locks broken at revalidation
     churn: jax.Array        # (S, K) int32 surviving locks that moved anyway
     feasible: jax.Array     # (S, K) bool
+    #: (S, K) int8 ``repro.obs.health`` codes — only with ``health=True``
+    #: (``run_fabric_timeline``); None otherwise, so the default pytree
+    #: (and every existing consumer) is unchanged.
+    health: Any = None
 
 
 class _LinkStep(NamedTuple):
@@ -433,6 +437,7 @@ def run_fabric_timeline_impl(
     backend: str | None = None,
     link_chunk: int = 0,
     mesh=None,
+    health: bool = False,
 ) -> tuple[ProtocolState, FabricChaosStats]:
     """Drive every link of a fabric along a chaos timeline.
 
@@ -443,6 +448,12 @@ def run_fabric_timeline_impl(
     the chunk axis).  Returns ``(final_state, FabricChaosStats)`` with the
     state flattened to the (2K, N) interconnect layout (row 2k = link k's
     tx end).
+
+    health=True additionally fills ``FabricChaosStats.health`` — the
+    (S, K) int8 post-mortem matrix of ``repro.obs.health`` codes (down /
+    hopeless / degraded / relocking / healthy), folded from the per-step
+    aggregates already computed above, so enabling it never changes the
+    arbitration outcome (asserted in ``tests/test_obs.py``).
     """
     var = as_variations(variations)
     k, n = spec.n_links, cfg.grid.n_ch
@@ -484,6 +495,13 @@ def run_fabric_timeline_impl(
         wl=cat(ev0.wl, wl_r),
         **tree.tree_map(cat, per0, per_r)._asdict(),
     )
+    if health:
+        from repro.obs.health import health_codes
+
+        chaos = chaos._replace(health=health_codes(
+            chaos.locked, chaos.probes, chaos.feasible,
+            timeline.link_alive, n,
+        ))
     state = ProtocolState(
         lock=st_f.lock.reshape(2 * k, n),
         entry=st_f.entry.reshape(2 * k, n),
@@ -496,7 +514,7 @@ def run_fabric_timeline_impl(
 run_fabric_timeline = jax.jit(
     run_fabric_timeline_impl,
     static_argnames=("cfg", "spec", "scheme", "warm", "transactional",
-                     "patience", "backend", "link_chunk", "mesh"),
+                     "patience", "backend", "link_chunk", "mesh", "health"),
 )
 
 
@@ -506,7 +524,7 @@ def summarize_chaos(cs: FabricChaosStats) -> FabricChaosStats:
     (``wl`` is dropped: per-step lock maps do not aggregate)."""
     mean = lambda a: jnp.mean(a.astype(jnp.float32), axis=1)
     return cs._replace(
-        wl=None,
+        wl=None, health=None,
         probes=mean(cs.probes), rounds=mean(cs.rounds),
         locked=mean(cs.locked), broken=mean(cs.broken),
         churn=mean(cs.churn), feasible=mean(cs.feasible),

@@ -1,0 +1,116 @@
+"""End-to-end obs smoke: ``python -m repro.obs.smoke`` (the ``make ci`` gate).
+
+One tiny WDM8 pass through every instrument: a trace-enabled protocol run
+with taxonomy, a recorded sweep (phase spans + compiled-memory watermark),
+a chaos timeline with the health matrix — all written to a run manifest and
+rendered back through ``repro.obs.report``.  Fails loudly (nonzero exit) if
+any instrument changes an arbitration outcome or the render chokes.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+
+import numpy as np
+
+
+def main() -> int:
+    import jax.numpy as jnp
+
+    from repro.configs.fabric import FABRIC_TINY
+    from repro.configs.wdm import WDM8_G200
+    from repro.core import SweepRequest, make_units, sweep
+    from repro.core.protocol import default_rounds, run_protocol
+    from repro.core.relation import chain_spec
+    from repro.core.sampling import instantiate
+    from repro.core.search_table import build_search_tables
+    from repro.fabric import make_fabric_timeline, run_fabric_timeline
+    from repro.fabric.sampling import make_fabric_units
+    from repro.obs.manifest import RunManifest
+    from repro.obs.phase import PhaseRecorder, use_recorder
+    from repro.obs.report import render_report
+    from repro.obs.taxonomy import classify_trials, taxonomy_histogram
+    from repro.obs.trace import trace_summary
+
+    cfg = WDM8_G200
+    n = cfg.grid.n_ch
+    with tempfile.TemporaryDirectory() as tmp:
+        manifest = RunManifest.create(tmp, label="obs-smoke")
+        with manifest:
+            # 1) trace-enabled protocol run + invariance + taxonomy
+            units = make_units(cfg, seed=7, n_laser=4, n_ring=6)
+            sys_b = instantiate(cfg, units)
+            tables = build_search_tables(
+                sys_b, 3.2, max_alias=cfg.max_fsr_alias
+            )
+            spec = chain_spec(cfg.s)
+            _, stats0 = run_protocol(tables, spec, with_stats=True)
+            _, stats1, state, buf = run_protocol(
+                tables, spec, with_stats=True, with_state=True, trace=64
+            )
+            if not np.array_equal(np.asarray(stats0.probes),
+                                  np.asarray(stats1.probes)):
+                print("FAIL: tracing changed probe counts", file=sys.stderr)
+                return 1
+            codes = classify_trials(
+                state.lock, tables.n_valid, buf.counts, stats1.worked,
+                rounds=default_rounds(n),
+            )
+            manifest.record_trace(
+                buf, scope="wdm8-protocol",
+                taxonomy={"scheme": "protocol_lta",
+                          "residual_total": int((np.asarray(codes) != 5).sum()),
+                          "histogram": taxonomy_histogram(codes),
+                          "unknown": taxonomy_histogram(codes)["unknown"]},
+            )
+            summ = trace_summary(buf)
+
+            # 2) recorded sweep: spans + chunk plan + memory watermark
+            rec = PhaseRecorder(measure_memory=True)
+            with use_recorder(rec):
+                res = sweep(SweepRequest(
+                    cfg=cfg, units=units, scheme="seq_retry",
+                    axes={"tr_mean": np.linspace(1.0, 6.0, 4,
+                                                 dtype=np.float32)},
+                ))
+            bare = sweep(SweepRequest(
+                cfg=cfg, units=units, scheme="seq_retry",
+                axes={"tr_mean": np.linspace(1.0, 6.0, 4, dtype=np.float32)},
+            ))
+            if not np.array_equal(np.asarray(res.data.cafp),
+                                  np.asarray(bare.data.cafp)):
+                print("FAIL: recorder changed sweep grid", file=sys.stderr)
+                return 1
+            if not rec.spans:
+                print("FAIL: recorded sweep produced no spans",
+                      file=sys.stderr)
+                return 1
+            manifest.record_phases(rec, scope="wdm8-sweep")
+
+            # 3) chaos health matrix
+            fspec = FABRIC_TINY
+            funits = make_fabric_units(cfg, fspec, 0)
+            tl = make_fabric_timeline(
+                fspec, 3, n, thermal=0.15, events=[(1, "link_kill", 0)]
+            )
+            _, cs = run_fabric_timeline(
+                cfg, funits, fspec, tl, health=True
+            )
+            manifest.record_health(cs.health, scope="fabric-tiny")
+
+        report = render_report(manifest.path)
+        print(report)
+        ok = ("trace [wdm8-protocol]" in report
+              and "phases [wdm8-sweep]" in report
+              and "health [fabric-tiny]" in report)
+        if not ok:
+            print("FAIL: report missing a section", file=sys.stderr)
+            return 1
+        print(f"obs smoke OK: {summ['events_total']} events, "
+              f"{len(rec.spans)} spans, "
+              f"{np.asarray(cs.health).shape} health matrix")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,188 @@
+"""Post-hoc failure taxonomy over flight-recorder traces.
+
+``classify_trials`` turns one ``run_protocol`` outcome — final lock state,
+table occupancy, per-kind event counts, honest round counts — into a
+per-trial failure code.  The vocabulary mirrors how arbitration actually
+dies (fig19's mid-TR residuals, fig22's unhealed links):
+
+  starvation   a ring ran out of visible lines and nothing it could do
+               (no displacement activity) would have freed one
+  storm        heavy displacement/surrender churn: lines exist but the
+               oblivious controllers keep stealing them from each other
+  livelock     the engine sticky-halted early (fixed point or plateau)
+               *while* displacement was active — the hole walks a cycle
+  hopeless     the trial was never winnable: the live bus admits no
+               complete matching (or every starved ring's table is empty)
+  locked       not a failure — the trial completed
+
+Precedence (hopeless > livelock > storm > starvation) makes the classes
+exhaustive and mutually exclusive: every trial gets exactly one code and
+``unknown`` cannot occur by construction — the acceptance gate for fig19's
+WDM16 seq_retry residuals asserts exactly that.
+
+``explain_residuals`` is the fig19 driver: per TR point it finds the
+trials a one-shot scheme (default ``seq_retry``) loses but the ideal LtA
+arbiter wins, re-runs them through the traced protocol engine at the
+scheme's displacement depth, and classifies every residual from the trace
+alone.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.trace import EV_DISPLACE, EV_SURRENDER
+
+ST_STARVATION = 0
+ST_STORM = 1
+ST_LIVELOCK = 2
+ST_HOPELESS = 3
+ST_UNKNOWN = 4  # reserved: classify_trials never emits it
+ST_LOCKED = 5
+
+#: code -> label; order is the integer encoding.
+TAXONOMY = ("starvation", "storm", "livelock", "hopeless", "unknown",
+            "locked")
+
+__all__ = [
+    "ST_STARVATION", "ST_STORM", "ST_LIVELOCK", "ST_HOPELESS",
+    "ST_UNKNOWN", "ST_LOCKED", "TAXONOMY",
+    "classify_trials", "taxonomy_histogram", "explain_residuals",
+]
+
+
+def classify_trials(lock, n_valid, counts, worked, *, rounds: int,
+                    feasible=None, storm_factor: int = 2):
+    """Per-trial failure codes (host or traced; pure ``jnp``).
+
+    lock:     (T, N) final lock state (< 0 = starved)
+    n_valid:  (T, N) search-table occupancy
+    counts:   (T, len(EVENT_KINDS)) per-kind totals from a ``TraceBuffer``
+              (wraparound-immune, so long trials classify exactly)
+    worked:   (T,) honest executed-round count (``ProtocolStats.worked``)
+    rounds:   the static round bound the run used
+    feasible: optional (T,) bool — ideal feasibility; when given it defines
+              ``hopeless`` exactly, otherwise the all-tables-empty proxy is
+              used (sound: an empty-table starved ring can never lock)
+    storm_factor: displacement activity >= factor * N reads as a storm
+    """
+    t, n = lock.shape
+    lock = jnp.asarray(lock)
+    complete = jnp.all(lock >= 0, axis=1)
+    starved_dead = (lock < 0) & (jnp.asarray(n_valid) <= 0)
+    dead_end = jnp.all(jnp.where(lock < 0, starved_dead, True), axis=1)
+    if feasible is not None:
+        hopeless = ~jnp.asarray(feasible)
+    else:
+        hopeless = dead_end
+    counts = jnp.asarray(counts)
+    activity = counts[:, EV_DISPLACE] + counts[:, EV_SURRENDER]
+    early = jnp.asarray(worked) < rounds
+    code = jnp.where(
+        (activity >= storm_factor * n), jnp.int8(ST_STORM),
+        jnp.int8(ST_STARVATION),
+    )
+    code = jnp.where(early & (activity > 0), jnp.int8(ST_LIVELOCK), code)
+    code = jnp.where(hopeless, jnp.int8(ST_HOPELESS), code)
+    return jnp.where(complete, jnp.int8(ST_LOCKED), code)
+
+
+def taxonomy_histogram(codes) -> dict:
+    """Host-side {label: count} over a code array (manifest payload)."""
+    c = np.asarray(codes)
+    return {label: int((c == i).sum()) for i, label in enumerate(TAXONOMY)}
+
+
+def explain_residuals(
+    cfg,
+    units,
+    tr_values,
+    *,
+    scheme: str = "seq_retry",
+    policy: str = "lta",
+    depth: int = 1,
+    n_rounds: int | None = None,
+    trace_cap: int = 128,
+    storm_factor: int = 2,
+    backend: str | None = None,
+) -> dict:
+    """Classify every residual trial of a one-shot scheme from traces alone.
+
+    Per TR point: run ``scheme`` and the ideal ``policy`` arbiter; a
+    *residual* trial is one the scheme loses while the ideal wins (the
+    fig19 CAFP numerator).  The traced protocol engine then re-arbitrates
+    the same tables at displacement depth ``depth`` and every residual is
+    classified.  A residual the deeper engine *recovers* (code ``locked``)
+    is remapped from its trace: displacement activity on the recovery path
+    means the one-shot scheme lost a line it needed someone to surrender
+    (``storm``); a quiet recovery means it simply stopped re-searching too
+    early (``starvation``).  Either way the code set stays closed — the
+    returned ``unknown`` count is structurally zero.
+    """
+    from repro.core.api import _build_tables, _ideal_success, scheme_spec
+    from repro.core.outcomes import classify
+    from repro.core.protocol import default_rounds, run_protocol
+    from repro.core.relation import chain_spec
+    from repro.core.sampling import instantiate
+    from repro.core.variations import Variations
+
+    sspec = scheme_spec(scheme)
+    spec = chain_spec(cfg.s)
+    n = cfg.grid.n_ch
+    rounds = default_rounds(n) if n_rounds is None else int(n_rounds)
+    s_arr = jnp.asarray(cfg.s)
+
+    points: list[dict] = []
+    total = np.zeros(len(TAXONOMY), np.int64)
+    for tr in np.asarray(tr_values, np.float32):
+        tr = float(tr)
+        sys = instantiate(cfg, units, Variations())
+        tables = _build_tables(cfg, sys, tr, backend)
+        asg = sspec.arbiter(cfg, tables, spec, backend=backend)
+        scheme_ok = classify(asg, s_arr, policy=policy).success
+        ideal_ok = _ideal_success(cfg, sys, policy, tr, backend)
+        residual = np.asarray(~scheme_ok & ideal_ok)
+
+        _, stats, state, buf = run_protocol(
+            tables, spec, depth=depth, n_rounds=rounds, backend=backend,
+            with_stats=True, with_state=True, trace=trace_cap,
+        )
+        codes = np.asarray(classify_trials(
+            state.lock, tables.n_valid, buf.counts, stats.worked,
+            rounds=rounds, feasible=ideal_ok, storm_factor=storm_factor,
+        ))
+        activity = np.asarray(
+            buf.counts[:, EV_DISPLACE] + buf.counts[:, EV_SURRENDER]
+        )
+        recovered = residual & (codes == ST_LOCKED)
+        codes = np.where(
+            recovered & (activity > 0), ST_STORM,
+            np.where(recovered, ST_STARVATION, codes),
+        ).astype(np.int8)
+
+        res_codes = codes[residual]
+        hist = taxonomy_histogram(res_codes)
+        for i in range(len(TAXONOMY)):
+            total[i] += int((res_codes == i).sum())
+        points.append({
+            "tr_mean": round(tr, 4),
+            "residual_trials": int(residual.sum()),
+            "codes": res_codes.tolist(),
+            "trial_index": np.nonzero(residual)[0].tolist(),
+            "histogram": {k: v for k, v in hist.items() if v},
+        })
+
+    histogram = {label: int(total[i]) for i, label in enumerate(TAXONOMY)}
+    return {
+        "scheme": scheme,
+        "policy": policy,
+        "depth": depth,
+        "rounds": rounds,
+        "trace_cap": trace_cap,
+        "points": points,
+        "residual_total": int(sum(p["residual_trials"] for p in points)),
+        "histogram": {k: v for k, v in histogram.items() if v},
+        "unknown": histogram["unknown"],
+    }

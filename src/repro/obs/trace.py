@@ -1,0 +1,180 @@
+"""Protocol flight recorder: a fixed-size per-trial event ring buffer.
+
+The protocol engine (``repro.core.protocol``) reports aggregate outcomes —
+``ProtocolStats`` says *how many* probes a trial spent, never *which ring
+probed what, when, and why it lost*.  The flight recorder closes that gap:
+``run_protocol(..., trace=cap)`` threads a ``TraceBuffer`` through the
+engine's ``lax.while_loop`` and every phase appends typed events
+
+    (round, ring, kind, entry)    kind in EVENT_KINDS
+
+into a per-trial ring of capacity ``cap``.  Everything is shape-static and
+vmap/jit-safe: appends are conditional scatters gated on a per-trial
+``fire`` mask, so the recorder composes with the engine's batching exactly
+like the state it observes.  Tracing is *off by default* and the disabled
+path is the engine's legacy jaxpr, bit for bit (asserted in
+``tests/test_obs.py``).
+
+Ring semantics: the write head is ``n % cap`` (``n`` counts every fired
+event, so ``n > cap`` means the oldest events were overwritten — the most
+recent ``cap`` always survive).  Per-kind totals in ``counts`` are *not*
+subject to wraparound, which is what keeps the failure taxonomy
+(``repro.obs.taxonomy``) exact on long-running trials.
+
+Event vocabulary (one entry per protocol transaction):
+
+  probe      a starved ring re-searched the masked bus (entry = its cursor)
+  lock       a ring captured a line (entry = the locked table entry)
+  displace   a donor relocked red-ward to free its line (entry = new entry)
+  surrender  a donor gave up its line and became a seeker (entry = old)
+  release    a starved ring reset its tuner sweep (entry = old cursor)
+  halt       the trial sticky-halted — fixed point or plateau (ring = -1)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EV_PROBE = 0
+EV_LOCK = 1
+EV_DISPLACE = 2
+EV_SURRENDER = 3
+EV_RELEASE = 4
+EV_HALT = 5
+
+#: kind code -> name; the order is the on-buffer integer encoding.
+EVENT_KINDS = ("probe", "lock", "displace", "surrender", "release", "halt")
+
+#: columns of one ``TraceBuffer.ev`` row.
+EVENT_FIELDS = ("round", "ring", "kind", "entry")
+
+
+class TraceBuffer(NamedTuple):
+    """Per-trial event ring (a pytree: carried through ``lax.while_loop``).
+
+    ``ev`` rows are valid only below ``min(n, cap)``; ``counts`` accumulate
+    per-kind totals independent of ring wraparound.
+    """
+
+    ev: jax.Array      # (T, cap, 4) int32 [round, ring, kind, entry]
+    n: jax.Array       # (T,) int32 total events fired (may exceed cap)
+    counts: jax.Array  # (T, len(EVENT_KINDS)) int32 per-kind totals
+
+
+def trace_buffer(n_trials: int, cap: int) -> TraceBuffer:
+    """An empty recorder for ``n_trials`` trials of ring capacity ``cap``."""
+    if cap < 1:
+        raise ValueError(f"trace capacity must be >= 1, got {cap}")
+    return TraceBuffer(
+        ev=jnp.full((n_trials, cap, 4), -1, jnp.int32),
+        n=jnp.zeros((n_trials,), jnp.int32),
+        counts=jnp.zeros((n_trials, len(EVENT_KINDS)), jnp.int32),
+    )
+
+
+def trace_append(buf: TraceBuffer, fire, rnd, ring, kind: int, entry
+                 ) -> TraceBuffer:
+    """Conditionally append one event per trial.
+
+    fire:  (T,) bool — trials that actually record this event;
+    rnd:   scalar or (T,) round index;
+    ring:  scalar or (T,) acting ring (-1 for trial-level events);
+    kind:  static Python int from the EV_* vocabulary;
+    entry: scalar or (T,) table-entry payload.
+
+    One conditional scatter + two masked adds — cheap enough to sit inside
+    the engine's fori_loops without changing their structure.
+    """
+    t, cap, _ = buf.ev.shape
+    rows = jnp.arange(t)
+    fire = fire.astype(bool)
+    rec = jnp.stack(
+        [
+            jnp.broadcast_to(jnp.asarray(rnd, jnp.int32), (t,)),
+            jnp.broadcast_to(jnp.asarray(ring, jnp.int32), (t,)),
+            jnp.full((t,), kind, jnp.int32),
+            jnp.broadcast_to(jnp.asarray(entry, jnp.int32), (t,)),
+        ],
+        axis=1,
+    )                                                    # (T, 4)
+    idx = buf.n % cap
+    old = buf.ev[rows, idx]
+    ev = buf.ev.at[rows, idx].set(jnp.where(fire[:, None], rec, old))
+    return TraceBuffer(
+        ev=ev,
+        n=buf.n + fire.astype(jnp.int32),
+        counts=buf.counts.at[:, kind].add(fire.astype(jnp.int32)),
+    )
+
+
+def merge_traces(select, a: TraceBuffer, b: TraceBuffer) -> TraceBuffer:
+    """Per-trial select: trial i takes ``a``'s trace where ``select[i]``.
+
+    The warm/cold escalation of ``core.temporal.protocol_relock`` merges
+    states with exactly this pattern; the recorder follows its state.
+    """
+    t = a.n.shape[0]
+    pick = lambda x, y: jnp.where(
+        select.reshape((t,) + (1,) * (y.ndim - 1)), x, y
+    )
+    return jax.tree_util.tree_map(pick, a, b)
+
+
+def trace_events(buf: TraceBuffer, trial: int | None = None):
+    """Host-side decode: per-trial event arrays, oldest -> newest.
+
+    Returns a list of (k, 4) int32 numpy arrays (columns = EVENT_FIELDS),
+    or a single array when ``trial`` is given.  Wrapped rings are unrolled
+    so row order is chronological; overwritten events are gone (``n`` vs
+    ``cap`` tells how many).
+    """
+    ev = np.asarray(buf.ev)
+    n = np.asarray(buf.n)
+    cap = ev.shape[1]
+
+    def one(i: int) -> np.ndarray:
+        k = int(n[i])
+        if k <= cap:
+            return ev[i, :k]
+        head = k % cap  # oldest surviving event sits at the write head
+        return np.concatenate([ev[i, head:], ev[i, :head]], axis=0)
+
+    if trial is not None:
+        return one(int(trial))
+    return [one(i) for i in range(ev.shape[0])]
+
+
+def trace_summary(buf: TraceBuffer) -> dict:
+    """Aggregate host-side view of a recorder (manifest/report payload)."""
+    n = np.asarray(buf.n)
+    counts = np.asarray(buf.counts)
+    cap = int(buf.ev.shape[1])
+    return {
+        "trials": int(n.shape[0]),
+        "capacity": cap,
+        "events_total": int(n.sum()),
+        "events_max_trial": int(n.max()) if n.size else 0,
+        "overflowed_trials": int((n > cap).sum()),
+        "by_kind": {
+            kind: int(counts[:, i].sum())
+            for i, kind in enumerate(EVENT_KINDS)
+        },
+    }
+
+
+def format_events(events: np.ndarray, limit: int | None = None) -> str:
+    """Render one trial's decoded events as aligned text lines."""
+    rows = events if limit is None else events[-limit:]
+    lines = []
+    for rnd, ring, kind, entry in np.asarray(rows):
+        name = EVENT_KINDS[int(kind)] if 0 <= kind < len(EVENT_KINDS) else "?"
+        lines.append(
+            f"  round {int(rnd):3d}  ring {int(ring):3d}  "
+            f"{name:<9s} entry {int(entry)}"
+        )
+    if limit is not None and len(events) > limit:
+        lines.insert(0, f"  ... ({len(events) - limit} earlier events)")
+    return "\n".join(lines)
